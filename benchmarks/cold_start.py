@@ -1,0 +1,54 @@
+"""Paper Fig. 11 / §6.2: cold-invocation breakdown, bare-metal vs Docker.
+
+Steps mirror the paper's: connect to manager, submit allocation + code
+push, spawn workers (the dominant step), first invocation.  Spawn cost is
+the paper-calibrated sandbox model (25 ms bare / 2.7 s Docker) plus this
+host's measured thread-spawn time, reported separately.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_stack, median
+from repro.core import FunctionLibrary
+
+
+def run(quick: bool = False):
+    reps = 5 if quick else 20
+    rows = []
+    for sandbox in ("bare", "docker"):
+        keys = ("connect", "submit_allocation", "code_push",
+                "spawn_workers", "spawn_measured")
+        acc = {k: [] for k in keys}
+        first_inv = []
+        for i in range(reps):
+            lib = FunctionLibrary("noop", code_size=7_880)  # paper's .so
+            lib.register("noop", lambda x: x)
+            _, _, _, inv = make_stack(lib, n_nodes=1, workers=1,
+                                      sandbox=sandbox, seed=i)
+            inv.allocate(1, sandbox=sandbox)
+            bd = inv.worker_cold_breakdowns()[0]
+            for k in keys:
+                acc[k].append(bd[k])
+            f = inv.submit("noop", np.zeros(16, np.uint8), worker_hint=0)
+            f.get()
+            first_inv.append(f.timeline.rtt_modeled)
+            inv.deallocate()
+        row = [sandbox] + [median(acc[k]) * 1e3 for k in keys] + \
+            [median(first_inv) * 1e3]
+        row.append(sum(median(acc[k]) for k in keys[:4]) * 1e3)
+        rows.append(row)
+    emit("cold_start", rows,
+         ["sandbox", "connect_ms", "submit_alloc_ms", "code_push_ms",
+          "spawn_modeled_ms", "spawn_measured_ms", "first_invocation_ms",
+          "total_cold_ms"])
+    print("# paper: ~25 ms bare-metal, ~2.7 s Docker; spawn dominates")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Shared benchmark harness: cluster stack construction + result I/O."""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from typing import Callable, List
+
+from repro.core import (BatchSystem, FunctionLibrary, Invoker, Ledger,
+                        ResourceManager)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def make_stack(lib: FunctionLibrary, *, n_nodes=2, workers=4,
+               hot_period=5.0, sandbox="bare", fault_rate=0.0,
+               client="bench", seed=0):
+    ledger = Ledger()
+    rm = ResourceManager(n_replicas=2)
+    bs = BatchSystem(rm, ledger, n_nodes=n_nodes, workers_per_node=workers,
+                     hot_period=hot_period, sandbox=sandbox,
+                     fault_rate=fault_rate, seed=seed)
+    bs.release_idle()
+    inv = Invoker(client, rm, lib, seed=seed)
+    return ledger, rm, bs, inv
+
+
+def timeit(fn: Callable, reps: int, warmup: int = 2) -> List[float]:
+    for _ in range(warmup):
+        fn()
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def median(xs):
+    return statistics.median(xs)
+
+
+def p99(xs):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+
+def emit(name: str, rows: list, header: list):
+    """Print CSV to stdout and persist JSON under benchmarks/out/."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    print(f"# --- {name} ---")
+    print(",".join(header))
+    for row in rows:
+        print(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+                       for v in row))
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump({"header": header, "rows": rows}, f, indent=1)

@@ -1,0 +1,55 @@
+"""Paper Fig. 1 / §6.3: rFaaS vs AWS Lambda / OpenWhisk / nightcore on a
+1 kB .. 5 MB echo-function payload sweep.  Baseline platforms use their
+calibrated latency models (repro.core.perf_model); rFaaS executes the
+function for real and adds the modeled RDMA network."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_stack, median
+from repro.core import BASELINE_MODELS, FunctionLibrary
+
+SIZES = [1 << 10, 4 << 10, 16 << 10, 64 << 10, 256 << 10, 1 << 20,
+         5 << 20]
+
+
+def run(quick: bool = False):
+    reps = 10 if quick else 30
+    lib = FunctionLibrary("echo")
+    lib.register("echo", lambda x: x)
+    _, _, _, inv = make_stack(lib, n_nodes=1, workers=1, hot_period=100.0)
+    inv.allocate(1)
+    rows = []
+    for size in SIZES:
+        payload = np.zeros(size, np.uint8)
+        rtts, execs = [], []
+        for _ in range(reps):
+            f = inv.submit("echo", payload, worker_hint=0)
+            f.get()
+            rtts.append(f.timeline.rtt_modeled)
+            execs.append(f.timeline.exec_time)
+        rfaas = median(rtts)
+        ex = median(execs)
+        row = [size, rfaas * 1e6]
+        for name in ("nightcore", "aws_lambda", "openwhisk"):
+            base = BASELINE_MODELS[name](size, ex)
+            row += [base * 1e6, base / rfaas]
+        rows.append(row)
+    inv.deallocate()
+    emit("payload_scaling", rows,
+         ["bytes", "rfaas_us", "nightcore_us", "nightcore_x",
+          "lambda_us", "lambda_x", "openwhisk_us", "openwhisk_x"])
+    print(f"# speedup ranges -> nightcore {min(r[3] for r in rows):.0f}-"
+          f"{max(r[3] for r in rows):.0f}x (paper 17-28x), lambda "
+          f"{min(r[5] for r in rows):.0f}-{max(r[5] for r in rows):.0f}x "
+          f"(paper 695-3692x), openwhisk {min(r[7] for r in rows):.0f}-"
+          f"{max(r[7] for r in rows):.0f}x (paper 5904-22406x)")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""§Roofline table generator: reads the dry-run JSONs and prints the
+three-term roofline per (arch x shape) on the single-pod mesh, plus the
+dominant bottleneck and useful-flops ratio (assignment deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(quick: bool = False, tag: str = "baseline", mesh: str = "16x16"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(
+            DRYRUN_DIR, f"*_{mesh}_{tag}.json"))):
+        r = json.load(open(f))
+        if r["status"] == "skipped":
+            rows.append([r["arch"], r["shape"], "SKIP", 0, 0, 0, "n/a",
+                         0, 0])
+            continue
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], "ERROR", 0, 0, 0, "n/a",
+                         0, 0])
+            continue
+        rf = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], "ok",
+            rf["compute_s"], rf["memory_s"], rf["collective_s"],
+            rf["dominant"], rf["roofline_fraction"],
+            rf["useful_flops_ratio"]])
+    emit(f"roofline_{tag}", rows,
+         ["arch", "shape", "status", "compute_s", "memory_s",
+          "collective_s", "dominant", "roofline_fraction", "useful_ratio"])
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

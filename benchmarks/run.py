@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+| paper artifact            | module                         |
+|---------------------------|--------------------------------|
+| Fig. 10 invocation latency| benchmarks.invocation_latency  |
+| Fig. 11 cold start        | benchmarks.cold_start          |
+| Fig. 1  payload scaling   | benchmarks.payload_scaling     |
+| Fig. 12 parallel workers  | benchmarks.parallel_workers    |
+| Fig. 13a matmul           | benchmarks.usecase_matmul      |
+| Fig. 13b Jacobi           | benchmarks.usecase_jacobi      |
+| Fig. 13c Black-Scholes    | benchmarks.usecase_blackscholes|
+| §Roofline table           | benchmarks.roofline            |
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (cold_start, invocation_latency,
+                            parallel_workers, payload_scaling, roofline,
+                            usecase_blackscholes, usecase_jacobi,
+                            usecase_matmul)
+    mods = {
+        "invocation_latency": invocation_latency,
+        "cold_start": cold_start,
+        "payload_scaling": payload_scaling,
+        "parallel_workers": parallel_workers,
+        "usecase_matmul": usecase_matmul,
+        "usecase_jacobi": usecase_jacobi,
+        "usecase_blackscholes": usecase_blackscholes,
+        "roofline": roofline,
+    }
+    failures = 0
+    for name, mod in mods.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(quick=args.quick)
+            print(f"# [{name}] done in {time.time()-t0:.1f}s\n")
+        except Exception as e:   # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"# [{name}] FAILED: {type(e).__name__}: {e}\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Paper Fig. 13b / §6.6: Jacobi linear solver with warm-cache offload.
+
+Each iteration offloads half the sweep.  The classical serverless
+optimization from the paper: A and b are submitted ONCE and cached in
+the warm executor (library static state); subsequent iterations ship
+only the current solution vector x — turning O(N²) communication into
+O(N).  Millisecond-scale iterations stress the low-latency invocation
+path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_stack, median, timeit
+from repro.core import FunctionLibrary, write_time
+
+SIZES = [1024, 2048, 4096]
+ITERS = 200
+
+
+@jax.jit
+def jacobi_sweep(A, b, x):
+    d = jnp.diagonal(A)
+    r = b - A @ x + d * x
+    return r / d
+
+
+@jax.jit
+def jacobi_sweep_rows(A_rows, b_rows, d_rows, x, x_rows):
+    """Row-slice sweep: x_new_i = (b_i - (A@x)_i + A_ii x_i) / A_ii."""
+    r = b_rows - A_rows @ x + d_rows * x_rows
+    return r / d_rows
+
+
+def run(quick: bool = False):
+    sizes = SIZES[:1] if quick else SIZES
+    iters = 50 if quick else ITERS
+    rows = []
+
+    # executor-side: static cache keyed by session (paper §5.2 statics)
+    cache = {}
+
+    def j_setup(p):
+        A = jnp.asarray(p["A"])
+        half = A.shape[0] // 2
+        d = jnp.diagonal(A)
+        # pre-slice once: the warm sandbox caches preprocessed state, so
+        # each invocation is exactly the half-sweep matvec
+        cache[int(p["sid"])] = tuple(map(jax.block_until_ready, (
+            A[half:], jnp.asarray(p["b"])[half:], d[half:])))
+        return {"ok": 1}
+
+    def j_iter(p):
+        A_rows, b_rows, d_rows = cache[int(p["sid"])]
+        half = A_rows.shape[0]
+        x = jnp.asarray(p["x"])
+        y = jacobi_sweep_rows(A_rows, b_rows, d_rows, x, x[half:])
+        return np.asarray(y)
+
+    lib = FunctionLibrary("jacobi")
+    lib.register("setup", j_setup)
+    lib.register("iterate", j_iter)
+    _, _, _, inv = make_stack(lib, n_nodes=1, workers=2, hot_period=100.0)
+    inv.allocate(1)
+
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        A = rng.standard_normal((n, n), np.float32) + n * np.eye(
+            n, dtype=np.float32)
+        b = rng.standard_normal((n,), np.float32)
+        x = np.zeros(n, np.float32)
+
+        # local-only (measured)
+        Aj, bj = jnp.asarray(A), jnp.asarray(b)
+        t_local_it = median(timeit(
+            lambda: jax.block_until_ready(jacobi_sweep(Aj, bj,
+                                                       jnp.asarray(x))),
+            5))
+        t_mpi = t_local_it * iters
+
+        # rFaaS: setup once (cold payload, amortized over the solve as in
+        # the paper's 1000-iteration runs).  A dummy warm setup first so
+        # the recorded setup cost is data movement, not jit compilation.
+        inv.submit("setup", {"sid": -n, "A": A, "b": b},
+                   worker_hint=0).get()
+        f = inv.submit("setup", {"sid": n, "A": A, "b": b},
+                       worker_hint=0)
+        f.get()
+        setup_rtt = f.timeline.rtt_modeled
+        # warm the executor-side jit before the timed loop
+        inv.submit("iterate", {"sid": n, "x": x}, worker_hint=0).get()
+        half = n // 2
+        dj = jnp.diagonal(Aj)
+        # the rank holds its half persistently (as the executor does) —
+        # pre-slice OUTSIDE the timed loop
+        A_top, b_top, d_top = map(jax.block_until_ready,
+                                  (Aj[:half], bj[:half], dj[:half]))
+        xj = jnp.asarray(x)
+        x_top = jnp.asarray(x[:half])
+        t_half_it = median(timeit(
+            lambda: jax.block_until_ready(jacobi_sweep_rows(
+                A_top, b_top, d_top, xj, x_top)), 5))
+        t_elastic = 0.0
+        for _ in range(iters):
+            f = inv.submit("iterate", {"sid": n, "x": x}, worker_hint=0)
+            f.get()
+            t_elastic += max(t_half_it, f.timeline.rtt_modeled)
+        t_steady = t_elastic                   # excl. one-time setup
+        t_elastic += setup_rtt
+        # naive (no caching): every iteration ships A again
+        naive_extra = write_time(A.nbytes) * iters
+        rows.append([n, t_mpi * 1e3, t_elastic * 1e3,
+                     t_mpi / t_steady, t_mpi / t_elastic,
+                     t_mpi / (t_elastic + naive_extra),
+                     t_local_it * 1e3])
+    inv.deallocate()
+    emit("usecase_jacobi", rows,
+         ["n", "mpi_ms", "mpi_rfaas_ms", "speedup_steady",
+          "speedup_amortized", "speedup_uncached", "iter_local_ms"])
+    sp = [r[3] for r in rows]
+    print(f"# rFaaS steady-state speedup {min(sp):.2f}-{max(sp):.2f}x "
+          f"(paper: 1.7-2.2x; our per-invocation dispatch is python "
+          f"~0.3 ms vs the paper's C++ ~us — Eq. 1 pushes the "
+          f"profitable iteration size up accordingly)")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

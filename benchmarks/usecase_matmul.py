@@ -1,0 +1,83 @@
+"""Paper Fig. 13a / §6.5: matrix-matrix multiplication offload.
+
+MPI baseline: each rank computes the full C = A·B locally.  MPI+rFaaS:
+the rank and one leased remote function each compute half the rows
+(equal split, as in the paper — high compute/communication ratio).
+Compute is REAL (jitted JAX matmul, measured); network is the LogfP
+model.  Speedup = T_local_full / max(T_local_half, T_remote_modeled).
+The same function on the nightcore model shows the serialization penalty
+(paper: worse speedup due to JSON + lower bandwidth utilization)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_stack, median, timeit
+from repro.core import BASELINE_MODELS, FunctionLibrary, Tier, write_time
+
+SIZES = [384, 512, 768, 1024]
+
+
+def run(quick: bool = False):
+    sizes = SIZES[:2] if quick else SIZES
+    reps = 3 if quick else 5
+
+    @jax.jit
+    def matmul(ab):
+        a, b = ab
+        return a @ b
+
+    lib = FunctionLibrary("mm")
+    lib.register("matmul", lambda p: np.asarray(
+        matmul((jnp.asarray(p["a"]), jnp.asarray(p["b"])))))
+    _, _, _, inv = make_stack(lib, n_nodes=1, workers=2, hot_period=100.0)
+    inv.allocate(1)
+
+    rows = []
+    for n in sizes:
+        a = np.random.default_rng(0).standard_normal((n, n),
+                                                     np.float32)
+        b = np.random.default_rng(1).standard_normal((n, n),
+                                                     np.float32)
+        # local full / local half (measured)
+        t_full = median(timeit(
+            lambda: jax.block_until_ready(matmul((jnp.asarray(a),
+                                                  jnp.asarray(b)))), reps))
+        half = a[: n // 2]
+        t_half = median(timeit(
+            lambda: jax.block_until_ready(matmul((jnp.asarray(half),
+                                                  jnp.asarray(b)))), reps))
+        # remote half: real execution + modeled network (jit pre-warmed)
+        inv.submit("matmul", {"a": half, "b": b}, worker_hint=0).get()
+        rtts = []
+        for _ in range(reps):
+            f = inv.submit("matmul", {"a": half, "b": b}, worker_hint=0)
+            f.get()
+            rtts.append(f.timeline.rtt_modeled)
+        t_remote = median(rtts)
+        t_elastic = max(t_half, t_remote)
+        bytes_in = half.nbytes + b.nbytes
+        bytes_out = half.nbytes
+        t_nc = max(t_half, BASELINE_MODELS["nightcore"](
+            bytes_in + bytes_out, t_remote - write_time(bytes_in + 12)
+            - write_time(bytes_out)))
+        rows.append([n, t_full * 1e3, t_elastic * 1e3,
+                     t_full / t_elastic, t_full / max(t_nc, 1e-12),
+                     t_remote * 1e3])
+    inv.deallocate()
+    emit("usecase_matmul", rows,
+         ["n", "mpi_ms", "mpi_rfaas_ms", "speedup_rfaas",
+          "speedup_nightcore", "remote_half_ms"])
+    sp = [r[3] for r in rows]
+    print(f"# rFaaS speedup {min(sp):.2f}-{max(sp):.2f}x "
+          f"(paper: 1.88-1.94x with equal split)")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Sharded checkpointing with atomic commit + elastic restore.
+
+Fault-tolerance substrate (DESIGN.md §9): a training job on transient
+rFaaS-leased capacity must survive node retrieval at any moment.
+
+  * save()   — each leaf -> one .npy under a tmp dir, committed by atomic
+               rename; a manifest records key-paths, shapes, dtypes.
+  * restore()— loads into the structure of a caller-supplied TEMPLATE
+               (from jax.eval_shape), so the restoring job may use a
+               DIFFERENT mesh/DP width than the saver (elastic restore —
+               arrays are re-sharded by device_put on the new mesh).
+  * AsyncCheckpointer — background-thread saves so the train loop never
+               blocks on I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# np.save cannot round-trip non-native dtypes: store them as integer views
+# and record the logical dtype in the manifest.
+_EXOTIC = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _flatten(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(path: str, step: int, tree: Any):
+    """Atomic: write to <path>/tmp-<step>, fsync manifest, rename to
+    <path>/step-<step>.  A crash mid-save never corrupts the latest
+    complete checkpoint."""
+    final = os.path.join(path, f"step-{step:08d}")
+    tmp = os.path.join(path, f"tmp-{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(_flatten(tree)):
+        arr = np.asarray(leaf)
+        logical = str(arr.dtype)
+        if logical in _EXOTIC:
+            arr = arr.view(_EXOTIC[logical][0])
+        fname = f"leaf-{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": logical})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(path)
+             if (m := re.match(r"step-(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, template: Any,
+            shardings: Any = None) -> Any:
+    """Load into ``template``'s structure (elastic: the template may be
+    laid out for a different mesh; ``shardings`` re-places each leaf)."""
+    d = os.path.join(path, f"step-{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    t_keys = [k for k, _ in _flatten(template)]
+    by_key = {le["key"]: le for le in manifest["leaves"]}
+    if set(t_keys) != set(by_key):
+        missing = set(t_keys) ^ set(by_key)
+        raise ValueError(f"checkpoint/template key mismatch: {missing}")
+    leaves = []
+    shard_list = (None if shardings is None
+                  else [s for _, s in _flatten(shardings)])
+    for i, key in enumerate(t_keys):
+        le = by_key[key]
+        arr = np.load(os.path.join(d, le["file"]))
+        if le["dtype"] in _EXOTIC:
+            arr = arr.view(_EXOTIC[le["dtype"]][1])
+        if shard_list is not None and shard_list[i] is not None:
+            arr = jax.device_put(arr, shard_list[i])
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves: snapshot to host (device_get) then write in a
+    background thread; wait() joins before the next save or at exit."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(path, exist_ok=True)
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)     # snapshot now
+
+        def work():
+            save(self.path, step, host_tree)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.path)
+                       if (m := re.match(r"step-(\d+)$", d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step-{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,37 @@
+"""rFaaS core: the paper's contribution as a composable library.
+
+Decentralized lease-based allocation, hot/warm/cold invocation tiers,
+replicated eventually-consistent resource management, fault tolerance
+with bounded retries + private executors, GB-s + compute-s accounting,
+and the LogP-derived offload model (Eq. 1).
+"""
+from repro.core.accounting import ClientBill, Ledger, Price
+from repro.core.batch_system import BatchSystem, Node
+from repro.core.executor import (AllocationRejected, ExecutorCrash,
+                                 ExecutorManager, ExecutorProcess,
+                                 ExecutorWorker)
+from repro.core.functions import FunctionLibrary
+from repro.core.invocation import (Invocation, InvocationHeader, RFuture,
+                                   Timeline, payload_bytes)
+from repro.core.invoker import (ALWAYS_WARM_INVOCATIONS, AllocationFailed,
+                                Connection, Invoker, RetryingFuture)
+from repro.core.lease import Lease, LeaseRequest, LeaseState
+from repro.core.perf_model import (BASELINE_MODELS, DEFAULT_NET, NetParams,
+                                   Sandbox, Tier, invocation_rtt,
+                                   max_offload_rate, n_local_min,
+                                   plan_split, tier_overhead, write_time)
+from repro.core.resource_manager import (AvailabilityBus, ResourceManager,
+                                         ResourceManagerReplica)
+
+__all__ = [
+    "ClientBill", "Ledger", "Price", "BatchSystem", "Node",
+    "AllocationRejected", "ExecutorCrash", "ExecutorManager",
+    "ExecutorProcess", "ExecutorWorker", "FunctionLibrary", "Invocation",
+    "InvocationHeader", "RFuture", "Timeline", "payload_bytes",
+    "ALWAYS_WARM_INVOCATIONS", "AllocationFailed", "Connection", "Invoker",
+    "RetryingFuture", "Lease", "LeaseRequest", "LeaseState",
+    "BASELINE_MODELS", "DEFAULT_NET", "NetParams", "Sandbox", "Tier",
+    "invocation_rtt", "max_offload_rate", "n_local_min", "plan_split",
+    "tier_overhead", "write_time", "AvailabilityBus", "ResourceManager",
+    "ResourceManagerReplica",
+]

@@ -1,0 +1,92 @@
+"""Accounting: C = C_a·t_a + C_c·t_c (paper §5.4).
+
+t_a — GB-seconds of lease allocation; t_c — seconds of active compute.
+The paper accumulates via RDMA atomic fetch-and-add on manager-exposed
+memory regions, off the invocation critical path; the in-process analogue
+is a lock-free-ish counter (GIL-atomic float adds batched at 1 s
+granularity) that executors flush *after* completing invocations, never
+inside the dispatch path.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict
+
+GRANULARITY_S = 1.0                  # paper: one-second accumulation
+
+
+@dataclass
+class Price:
+    c_a: float = 2.9e-6              # $ per GB-second of allocation
+    c_c: float = 4.0e-5              # $ per second of active compute
+
+    # HPC discount: idle resources offered below cloud rates (paper §5.4)
+    def discounted(self, factor: float = 0.25) -> "Price":
+        return Price(self.c_a * factor, self.c_c * factor)
+
+
+@dataclass
+class ClientBill:
+    gb_seconds: float = 0.0          # t_a
+    compute_seconds: float = 0.0     # t_c
+    invocations: int = 0
+
+    def cost(self, price: Price) -> float:
+        return price.c_a * self.gb_seconds + price.c_c * self.compute_seconds
+
+
+class Ledger:
+    """Global database associated with the resource manager (paper §5.4)."""
+
+    def __init__(self, price: Price = Price()):
+        self.price = price
+        self._bills: Dict[str, ClientBill] = defaultdict(ClientBill)
+        self._pending_compute: Dict[str, float] = defaultdict(float)
+        self._lock = threading.Lock()
+
+    # executor-manager side (atomic fetch-and-add analogue) --------------
+    def add_compute(self, client_id: str, seconds: float):
+        """Batched at GRANULARITY_S so abrupt executor termination loses
+        at most one granule (paper §5.4)."""
+        with self._lock:
+            self._pending_compute[client_id] += seconds
+            self._bills[client_id].invocations += 1
+            if self._pending_compute[client_id] >= GRANULARITY_S:
+                self._flush_locked(client_id)
+
+    def add_allocation(self, client_id: str, gb_seconds: float):
+        with self._lock:
+            self._bills[client_id].gb_seconds += gb_seconds
+
+    def flush(self, client_id: str = None):
+        with self._lock:
+            keys = [client_id] if client_id else list(self._pending_compute)
+            for k in keys:
+                self._flush_locked(k)
+
+    def _flush_locked(self, client_id: str):
+        pend = self._pending_compute.pop(client_id, 0.0)
+        self._bills[client_id].compute_seconds += pend
+
+    # client/operator side ------------------------------------------------
+    def bill(self, client_id: str) -> ClientBill:
+        self.flush(client_id)
+        with self._lock:
+            b = self._bills[client_id]
+            return ClientBill(b.gb_seconds, b.compute_seconds,
+                              b.invocations)
+
+    def cost(self, client_id: str) -> float:
+        return self.bill(client_id).cost(self.price)
+
+    def totals(self) -> ClientBill:
+        self.flush()
+        with self._lock:
+            t = ClientBill()
+            for b in self._bills.values():
+                t.gb_seconds += b.gb_seconds
+                t.compute_seconds += b.compute_seconds
+                t.invocations += b.invocations
+            return t

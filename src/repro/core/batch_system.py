@@ -1,0 +1,100 @@
+"""Batch-system integration (paper §5.3): a SLURM-like cluster simulator
+that releases idle nodes to the rFaaS resource manager and retrieves them
+when batch jobs arrive.  Utilization traces with rapid availability churn
+(the Piz Daint pattern of Fig. 2) drive the elasticity benchmarks.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.accounting import Ledger
+from repro.core.executor import ExecutorManager
+from repro.core.resource_manager import ResourceManager
+
+
+@dataclass
+class Node:
+    node_id: str
+    n_workers: int
+    memory_bytes: int
+    state: str = "idle"               # idle | faas | batch
+    manager: Optional[ExecutorManager] = None
+
+
+class BatchSystem:
+    """Owns the node pool; idle nodes are registered as rFaaS executors
+    (release), batch jobs preempt them back (retrieve)."""
+
+    def __init__(self, rm: ResourceManager, ledger: Ledger,
+                 n_nodes: int = 8, workers_per_node: int = 8,
+                 memory_per_node: int = 8 << 30, *, sandbox: str = "bare",
+                 hot_period: float = 1.0, fault_rate: float = 0.0,
+                 seed: int = 0):
+        self.rm = rm
+        self.ledger = ledger
+        self._rng = random.Random(seed)
+        self.nodes: Dict[str, Node] = {
+            f"node{i:03d}": Node(f"node{i:03d}", workers_per_node,
+                                 memory_per_node)
+            for i in range(n_nodes)
+        }
+        self._mk = dict(sandbox=sandbox, hot_period=hot_period,
+                        fault_rate=fault_rate)
+
+    # ----------------------------------------------------------- REST API
+    def release_node(self, node_id: str) -> ExecutorManager:
+        """Offer an idle node for serverless processing; the resource
+        manager multicasts the new availability within microseconds."""
+        node = self.nodes[node_id]
+        assert node.state in ("idle", "faas")
+        if node.manager is None or not node.manager.heartbeat():
+            node.manager = ExecutorManager(
+                node_id, node.n_workers, node.memory_bytes, self.ledger,
+                seed=self._rng.randrange(1 << 30), **self._mk)
+        else:
+            node.manager.restore()     # retrieved earlier -> accept again
+        node.state = "faas"
+        self.rm.register(node.manager)
+        return node.manager
+
+    def release_idle(self) -> List[str]:
+        out = []
+        for nid, node in self.nodes.items():
+            if node.state == "idle":
+                self.release_node(nid)
+                out.append(nid)
+        return out
+
+    def retrieve_node(self, node_id: str, grace_s: float = 0.0):
+        """A batch job needs the node back: immediate (grace 0 — abort
+        running invocations) or graceful drain (§5.3)."""
+        node = self.nodes[node_id]
+        if node.state == "faas":
+            self.rm.remove(node_id, grace_s)
+        node.state = "batch"
+
+    def finish_batch_job(self, node_id: str):
+        self.nodes[node_id].state = "idle"
+
+    # ------------------------------------------------------ trace driving
+    def churn_step(self, p_claim: float = 0.2, p_release: float = 0.3,
+                   grace_s: float = 0.0) -> dict:
+        """One step of a Piz-Daint-like availability random walk: batch
+        jobs claim FaaS nodes with p_claim, finished jobs free nodes with
+        p_release."""
+        claimed, freed = [], []
+        for nid, node in list(self.nodes.items()):
+            if node.state == "faas" and self._rng.random() < p_claim:
+                self.retrieve_node(nid, grace_s)
+                claimed.append(nid)
+            elif node.state == "batch" and self._rng.random() < p_release:
+                self.finish_batch_job(nid)
+                self.release_node(nid)
+                freed.append(nid)
+        return {"claimed": claimed, "freed": freed}
+
+    def utilization(self) -> float:
+        busy = sum(1 for n in self.nodes.values() if n.state == "batch")
+        return busy / max(len(self.nodes), 1)

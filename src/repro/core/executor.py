@@ -1,0 +1,308 @@
+"""Executor managers and workers (paper §3.1, §3.3).
+
+An ``ExecutorManager`` owns the spare capacity of one node (here: worker
+slots + memory budget).  Clients negotiate leases DIRECTLY with managers
+(decentralized allocation, §3.2); a granted lease spawns an
+``ExecutorProcess`` — an isolated sandbox holding the pushed function
+library and one ``ExecutorWorker`` thread per requested worker.  Workers
+implement the hot/warm state machine: a worker is HOT (busy-polling, +326
+ns modeled overhead) for ``hot_period`` seconds after each execution,
+then falls back to WARM (event-blocked, +4.67 us modeled).  Crashes are
+detected by the manager and surfaced to the client library, which retries
+elsewhere (§3.5).
+"""
+from __future__ import annotations
+
+import queue
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.accounting import Ledger
+from repro.core.functions import FunctionLibrary
+from repro.core.invocation import Invocation, payload_bytes
+from repro.core.lease import Lease, LeaseRequest, LeaseState
+from repro.core.perf_model import (DEFAULT_NET, NetParams, Sandbox, Tier,
+                                   tier_overhead, write_time)
+
+
+class ExecutorCrash(RuntimeError):
+    """Function or executor process died; client library retries."""
+
+
+class AllocationRejected(RuntimeError):
+    pass
+
+
+_STOP = object()
+
+
+class ExecutorWorker(threading.Thread):
+    """One function instance: independent queue + completion channel
+    (threads do not share RDMA resources, §3.3)."""
+
+    def __init__(self, name: str, library: FunctionLibrary,
+                 sandbox: Sandbox, hot_period: float,
+                 on_done: Callable, net: NetParams,
+                 fault_rate: float = 0.0, seed: int = 0):
+        super().__init__(name=name, daemon=True)
+        self.library = library
+        self.sandbox = sandbox
+        self.hot_period = hot_period
+        self.on_done = on_done
+        self.net = net
+        self.fault_rate = fault_rate
+        self._rng = random.Random(seed)
+        self._q: "queue.Queue" = queue.Queue()
+        self._last_activity: Optional[float] = None
+        self.busy_seconds = 0.0
+        self.n_invocations = 0
+        self.alive_flag = True
+
+    # ------------------------------------------------------------- client
+    def submit(self, inv: Invocation):
+        if not self.alive_flag:
+            raise ExecutorCrash(f"worker {self.name} is dead")
+        inv.timeline.t_submit = time.monotonic()
+        self._q.put(inv)
+
+    @property
+    def tier(self) -> Tier:
+        """HOT while the post-execution busy-poll window is open."""
+        if self._last_activity is None:
+            return Tier.WARM
+        if time.monotonic() - self._last_activity <= self.hot_period:
+            return Tier.HOT
+        return Tier.WARM
+
+    def stop(self):
+        self._q.put(_STOP)
+
+    def crash(self):
+        """Fault injection: the process dies mid-flight."""
+        self.alive_flag = False
+        self._q.put(_STOP)
+
+    # ------------------------------------------------------------ executor
+    def run(self):
+        while True:
+            item = self._q.get()
+            if item is _STOP:
+                # fail anything still queued behind the crash
+                while True:
+                    try:
+                        nxt = self._q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if nxt is not _STOP and nxt.future:
+                        nxt.future._fail(ExecutorCrash(
+                            f"worker {self.name} terminated"))
+                return
+            inv: Invocation = item
+            inv.tier = self.tier
+            inv.sandbox = self.sandbox
+            t0 = time.perf_counter()
+            try:
+                if not self.alive_flag or (self.fault_rate and
+                                           self._rng.random()
+                                           < self.fault_rate):
+                    self.alive_flag = False
+                    raise ExecutorCrash(
+                        f"function crashed executor {self.name}")
+                fn = self.library.by_index(inv.header.fn_index)
+                result = fn(inv.payload)
+                result = jax.block_until_ready(result)
+                exec_time = time.perf_counter() - t0
+                inv.timeline.exec_time = exec_time
+                inv.timeline.dispatch_measured = max(
+                    0.0, time.monotonic() - inv.timeline.t_submit
+                    - exec_time)
+                inv.model_network(payload_bytes(result), self.net)
+                self._last_activity = time.monotonic()
+                self.busy_seconds += exec_time
+                self.n_invocations += 1
+                self.on_done(self, inv, exec_time, None)
+                inv.future._fulfill(result)
+            except BaseException as e:  # noqa: BLE001 — forwarded to client
+                exec_time = time.perf_counter() - t0
+                self.on_done(self, inv, exec_time, e)
+                inv.future._fail(e if isinstance(e, ExecutorCrash)
+                                 else ExecutorCrash(repr(e)))
+                if not self.alive_flag:
+                    return
+
+
+@dataclass
+class ExecutorProcess:
+    """Sandbox + worker threads for one lease (paper: executor process)."""
+    lease: Lease
+    workers: List[ExecutorWorker]
+    library: FunctionLibrary
+    cold_breakdown: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def cold_time_modeled(self) -> float:
+        return sum(self.cold_breakdown.values())
+
+    def alive_workers(self) -> List[ExecutorWorker]:
+        return [w for w in self.workers if w.alive_flag]
+
+
+class ExecutorManager:
+    """Per-node manager: connects clients, spawns/collects containerized
+    executors, accounts resource consumption (paper §3.1)."""
+
+    def __init__(self, server_id: str, n_workers: int, memory_bytes: int,
+                 ledger: Ledger, *, sandbox: str = "bare",
+                 hot_period: float = 1.0, net: NetParams = DEFAULT_NET,
+                 fault_rate: float = 0.0, seed: int = 0):
+        self.server_id = server_id
+        self.capacity_workers = n_workers
+        self.capacity_memory = memory_bytes
+        self.ledger = ledger
+        self.sandbox = Sandbox(sandbox)
+        self.hot_period = hot_period
+        self.net = net
+        self.fault_rate = fault_rate
+        self._seed = seed
+        self._lock = threading.RLock()
+        self._processes: Dict[int, ExecutorProcess] = {}
+        self._free_workers = n_workers
+        self._free_memory = memory_bytes
+        self._alive = True
+        self._accepting = True
+        self.on_saturated: Optional[Callable] = None     # -> resource mgr
+        self.on_available: Optional[Callable] = None
+
+    # --------------------------------------------------------------- state
+    @property
+    def free_workers(self) -> int:
+        with self._lock:
+            return self._free_workers
+
+    def heartbeat(self) -> bool:
+        return self._alive
+
+    def describe(self) -> dict:
+        with self._lock:
+            return {"server_id": self.server_id,
+                    "free_workers": self._free_workers,
+                    "free_memory": self._free_memory,
+                    "sandbox": self.sandbox.value}
+
+    # ----------------------------------------------------------- allocation
+    def grant(self, request: LeaseRequest,
+              library: FunctionLibrary) -> ExecutorProcess:
+        """Direct client->manager negotiation.  Rejection is IMMEDIATE
+        (paper §3.3 cold): no queueing, the client walks on."""
+        with self._lock:
+            if not (self._alive and self._accepting):
+                raise AllocationRejected(f"{self.server_id} not accepting")
+            if (request.n_workers > self._free_workers
+                    or request.memory_bytes > self._free_memory):
+                raise AllocationRejected(
+                    f"{self.server_id}: insufficient capacity "
+                    f"({self._free_workers}w free)")
+            self._free_workers -= request.n_workers
+            self._free_memory -= request.memory_bytes
+            lease = Lease(request, self.server_id)
+
+        sandbox = Sandbox(request.sandbox) if request.sandbox else \
+            self.sandbox
+        t0 = time.perf_counter()
+        workers = []
+        for i in range(request.n_workers):
+            w = ExecutorWorker(
+                f"{self.server_id}/L{lease.lease_id}/w{i}", library,
+                sandbox, self.hot_period, self._worker_done, self.net,
+                self.fault_rate, seed=self._seed * 9973 + lease.lease_id
+                * 131 + i)
+            w.start()
+            workers.append(w)
+        spawn_measured = time.perf_counter() - t0
+
+        proc = ExecutorProcess(lease, workers, library, cold_breakdown={
+            "connect": 2 * self.net.latency,
+            "submit_allocation": self.net.latency,
+            "code_push": write_time(library.code_size, self.net),
+            "spawn_workers": tier_overhead(Tier.COLD, sandbox, self.net),
+            "spawn_measured": spawn_measured,
+        })
+        lease.activate()
+        with self._lock:
+            self._processes[lease.lease_id] = proc
+            if self._free_workers == 0 and self.on_saturated:
+                self.on_saturated(self.server_id)
+        return proc
+
+    def release(self, lease_id: int,
+                state: LeaseState = LeaseState.RELEASED):
+        with self._lock:
+            proc = self._processes.pop(lease_id, None)
+        if proc is None:
+            return
+        for w in proc.workers:
+            w.stop()
+        lease = proc.lease
+        lease.end(state)
+        self.ledger.add_allocation(lease.request.client_id,
+                                   lease.gb_seconds())
+        with self._lock:
+            was_full = self._free_workers == 0
+            self._free_workers += lease.request.n_workers
+            self._free_memory += lease.request.memory_bytes
+            if was_full and self._accepting and self.on_available:
+                self.on_available(self.server_id)
+
+    # --------------------------------------------------- batch system API
+    def retrieve(self, grace_s: float = 0.0):
+        """Batch system takes the node back (paper §5.3): stop accepting,
+        let running work drain for grace_s, then terminate leases and
+        send the final billing update."""
+        with self._lock:
+            self._accepting = False
+            procs = list(self._processes.items())
+        deadline = time.monotonic() + grace_s
+        while time.monotonic() < deadline and any(
+                not w._q.empty() for _, p in procs for w in p.workers):
+            time.sleep(0.001)
+        for lid, _ in procs:
+            self.release(lid, LeaseState.RETRIEVED)
+        self.ledger.flush()
+
+    def restore(self):
+        with self._lock:
+            self._accepting = True
+            self._alive = True
+
+    def crash(self):
+        """Uncontrolled shutdown: clients find out via broken connections
+        (paper §3.5)."""
+        with self._lock:
+            self._alive = False
+            procs = list(self._processes.items())
+        for lid, proc in procs:
+            for w in proc.workers:
+                w.crash()
+            proc.lease.end(LeaseState.FAILED)
+        with self._lock:
+            self._processes.clear()
+            self._free_workers = self.capacity_workers
+            self._free_memory = self.capacity_memory
+
+    # ------------------------------------------------------------ internal
+    def _worker_done(self, worker: ExecutorWorker, inv: Invocation,
+                     exec_time: float, err: Optional[BaseException]):
+        client = None
+        with self._lock:
+            for proc in self._processes.values():
+                if worker in proc.workers:
+                    client = proc.lease.request.client_id
+                    break
+        if client is not None and err is None:
+            # off the critical path: accounting after completion (§5.4)
+            self.ledger.add_compute(client, exec_time)

@@ -1,0 +1,135 @@
+"""Invocation protocol: header, payload accounting, futures, timelines.
+
+The wire protocol mirrors the paper (§5.2): a 12-byte header (function
+index, invocation id, return-buffer rkey) is RDMA-written with the
+payload into the worker's buffer; the result is RDMA-written back with an
+immediate value carrying (status, invocation id).  Here the "write" is an
+in-process handoff; the *modeled* network time (perf_model) and the
+*measured* execution/dispatch times are recorded in a per-invocation
+timeline so benchmarks report paper-comparable round trips.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.perf_model import (DEFAULT_NET, Sandbox, Tier,
+                                   tier_overhead, write_time)
+
+_inv_ids = itertools.count(1)
+
+
+def payload_bytes(obj: Any) -> int:
+    """Wire size of a payload: ndarray/bytes exact; pytrees summed."""
+    if obj is None:
+        return 0
+    if isinstance(obj, (bytes, bytearray)):
+        return len(obj)
+    if hasattr(obj, "nbytes"):
+        return int(obj.nbytes)
+    if isinstance(obj, (list, tuple)):
+        return sum(payload_bytes(o) for o in obj)
+    if isinstance(obj, dict):
+        return sum(payload_bytes(o) for o in obj.values())
+    if isinstance(obj, (int, float, bool, np.number)):
+        return 8
+    return len(repr(obj).encode())
+
+
+@dataclass(frozen=True)
+class InvocationHeader:
+    fn_index: int
+    invocation_id: int
+    return_buffer: int            # rkey/address analogue (opaque)
+
+    SIZE = 12                     # bytes on the wire (paper §5.2)
+
+
+@dataclass
+class Timeline:
+    """Modeled+measured event times (seconds, monotonic-origin)."""
+    t_submit: float = 0.0
+    net_in: float = 0.0           # modeled RDMA write (header+payload)
+    overhead: float = 0.0         # modeled tier overhead (hot/warm/cold)
+    exec_time: float = 0.0        # measured function execution
+    net_out: float = 0.0          # modeled RDMA write of the result
+    dispatch_measured: float = 0.0  # measured in-process dispatch cost
+
+    @property
+    def rtt_modeled(self) -> float:
+        return self.net_in + self.overhead + self.exec_time + self.net_out
+
+    @property
+    def rtt_measured(self) -> float:
+        return self.dispatch_measured + self.exec_time
+
+
+class RFuture:
+    """std::future analogue (paper §5.1): blocking get(), non-blocking
+    poll(); carries the timeline for latency accounting."""
+
+    def __init__(self, invocation: "Invocation"):
+        self.invocation = invocation
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+
+    # executor side -----------------------------------------------------
+    def _fulfill(self, result: Any):
+        self._result = result
+        self._event.set()
+
+    def _fail(self, err: BaseException):
+        self._error = err
+        self._event.set()
+
+    # client side -------------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"invocation {self.invocation.header.invocation_id} timed "
+                f"out after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def timeline(self) -> Timeline:
+        return self.invocation.timeline
+
+
+@dataclass
+class Invocation:
+    header: InvocationHeader
+    fn_name: str
+    payload: Any
+    bytes_in: int
+    timeline: Timeline = field(default_factory=Timeline)
+    future: Optional[RFuture] = None
+    tier: Tier = Tier.HOT
+    sandbox: Sandbox = Sandbox.BARE
+    retries: int = 0
+    on_complete: Optional[Callable] = None
+
+    @classmethod
+    def make(cls, fn_index: int, fn_name: str, payload: Any,
+             sandbox: Sandbox = Sandbox.BARE) -> "Invocation":
+        b_in = payload_bytes(payload)
+        hdr = InvocationHeader(fn_index, next(_inv_ids), return_buffer=0)
+        inv = cls(hdr, fn_name, payload, b_in, sandbox=sandbox)
+        inv.future = RFuture(inv)
+        return inv
+
+    def model_network(self, bytes_out: int, net=DEFAULT_NET):
+        """Fill modeled components once tier/result size are known."""
+        self.timeline.net_in = write_time(
+            self.bytes_in + InvocationHeader.SIZE, net)
+        self.timeline.net_out = write_time(bytes_out, net)
+        self.timeline.overhead = tier_overhead(self.tier, self.sandbox, net)

@@ -1,0 +1,257 @@
+"""Client library: decentralized allocation + low-latency invocation
+(paper §3.2, §3.3, §5.1 programming model).
+
+``Invoker`` is the C++-executor-concept-inspired client handle:
+
+  * ``allocate(n_workers, ...)`` — reads a ranked server list from a
+    random resource-manager REPLICA, walks a RANDOM PERMUTATION of it
+    (each server asked at most once per round), negotiates leases
+    directly with executor managers, retries rounds with exponential
+    backoff; connections are cached for warm/hot reuse.
+  * ``submit(fn, payload)`` -> RFuture — round-robin over connected
+    workers; on executor crash the library retries the invocation on
+    another worker/server up to ``max_retries`` (§3.5).
+  * private executors (§3.5): a job-internal manager can be attached so
+    offloading still works under public-resource starvation.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.executor import (AllocationRejected, ExecutorCrash,
+                                 ExecutorManager, ExecutorProcess,
+                                 ExecutorWorker)
+from repro.core.functions import FunctionLibrary
+from repro.core.invocation import Invocation, RFuture
+from repro.core.lease import LeaseRequest
+from repro.core.resource_manager import ResourceManager
+
+ALWAYS_WARM_INVOCATIONS = "always_warm"
+
+
+class AllocationFailed(RuntimeError):
+    pass
+
+
+@dataclass
+class Connection:
+    """Cached client<->executor-process channel (paper: RDMA connection
+    per worker thread, cached across invocations)."""
+    manager: ExecutorManager
+    process: ExecutorProcess
+    private: bool = False
+
+    def alive(self) -> bool:
+        return (self.manager.heartbeat() and self.process.lease.alive
+                and bool(self.process.alive_workers()))
+
+
+@dataclass
+class InvokerStats:
+    allocations_tried: int = 0
+    allocations_granted: int = 0
+    allocation_rounds: int = 0
+    invocations: int = 0
+    retries: int = 0
+    failures: int = 0
+
+
+class Invoker:
+    def __init__(self, client_id: str, rm: ResourceManager,
+                 library: FunctionLibrary, *, seed: int = 0,
+                 max_retries: int = 3, backoff_base: float = 0.005,
+                 backoff_cap: float = 0.5, allocation_rounds: int = 6):
+        self.client_id = client_id
+        self.rm = rm
+        self.library = library
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.allocation_rounds = allocation_rounds
+        self._rng = random.Random(seed)
+        self._replica = rm.replica_for(seed)
+        self._conns: List[Connection] = []
+        self._rr = itertools.count()
+        self._lock = threading.RLock()
+        self.stats = InvokerStats()
+        self._removed_servers: set = set()
+        rm.bus.subscribe(self._on_delta)
+
+    # ------------------------------------------------------- notifications
+    def _on_delta(self, delta: dict):
+        op = delta.get("op")
+        if op == "remove":
+            self._removed_servers.add(delta["server_id"])
+        elif op in ("add", "available"):
+            # a re-released node is usable again (batch-system churn,
+            # paper §5.3) — clear the tombstone
+            self._removed_servers.discard(delta["server_id"])
+
+    # ----------------------------------------------------------- allocation
+    def allocate(self, n_workers: int, memory_bytes: int = 1 << 30,
+                 timeout_s: float = 3600.0, sandbox: str = "bare",
+                 mode: str = ALWAYS_WARM_INVOCATIONS) -> int:
+        """Lease ``n_workers`` across servers; returns workers granted.
+        Decentralized: random permutation of the replica's ranked list,
+        direct negotiation, exponential backoff between rounds."""
+        del mode                         # pre-allocation IS the warm mode
+        remaining = n_workers
+        backoff = self.backoff_base
+        for rnd in range(self.allocation_rounds):
+            if remaining <= 0:
+                break
+            self.stats.allocation_rounds += 1
+            servers = [s for s in self._replica.server_list()
+                       if s.server_id not in self._removed_servers]
+            if not servers:
+                time.sleep(backoff)
+                backoff = min(backoff * 2, self.backoff_cap)
+                continue
+            order = self._rng.sample(servers, len(servers))  # permutation
+            for mgr in order:
+                if remaining <= 0:
+                    break
+                ask = min(remaining, max(1, mgr.free_workers))
+                req = LeaseRequest(self.client_id, ask, memory_bytes,
+                                   timeout_s, sandbox)
+                self.stats.allocations_tried += 1
+                try:
+                    proc = mgr.grant(req, self.library)
+                except AllocationRejected:
+                    continue             # immediate rejection -> walk on
+                with self._lock:
+                    self._conns.append(Connection(mgr, proc))
+                self.stats.allocations_granted += 1
+                remaining -= ask
+            if remaining > 0:
+                time.sleep(backoff)
+                backoff = min(backoff * 2, self.backoff_cap)  # §3.5
+        return n_workers - remaining
+
+    def attach_private(self, manager: ExecutorManager, n_workers: int,
+                       memory_bytes: int = 1 << 30) -> int:
+        """Private executors (paper §3.5): job-internal capacity exposed
+        through the same interface — used when public allocation starves."""
+        req = LeaseRequest(self.client_id, n_workers, memory_bytes,
+                           3600.0, "bare")
+        proc = manager.grant(req, self.library)
+        with self._lock:
+            self._conns.append(Connection(manager, proc, private=True))
+        return n_workers
+
+    def deallocate(self):
+        with self._lock:
+            conns, self._conns = self._conns, []
+        for c in conns:
+            try:
+                c.manager.release(c.process.lease.lease_id)
+            except Exception:            # noqa: BLE001 — already dead
+                pass
+
+    # ------------------------------------------------------------- workers
+    def _alive_workers(self) -> List[ExecutorWorker]:
+        with self._lock:
+            dead = [c for c in self._conns if not c.alive()]
+            for c in dead:               # disrupted connection -> drop (§3.5)
+                self._conns.remove(c)
+            out: List[ExecutorWorker] = []
+            for c in self._conns:
+                out.extend(c.process.alive_workers())
+            return out
+
+    @property
+    def n_workers(self) -> int:
+        return len(self._alive_workers())
+
+    def worker_cold_breakdowns(self) -> List[Dict[str, float]]:
+        with self._lock:
+            return [dict(c.process.cold_breakdown) for c in self._conns]
+
+    # ----------------------------------------------------------- invocation
+    def submit(self, fn_name: str, payload: Any,
+               worker_hint: Optional[int] = None) -> RFuture:
+        """Non-blocking submission -> RFuture (std::future analogue)."""
+        idx = self.library.index_of(fn_name)
+        inv = Invocation.make(idx, fn_name, payload)
+        self.stats.invocations += 1
+        self._dispatch(inv, worker_hint)
+        return self._wrap_retries(inv, fn_name, payload)
+
+    def invoke(self, fn_name: str, payload: Any,
+               timeout: Optional[float] = 60.0) -> Any:
+        """Blocking invocation."""
+        return self.submit(fn_name, payload).get(timeout)
+
+    def map(self, fn_name: str, payloads: List[Any],
+            timeout: Optional[float] = 120.0) -> List[Any]:
+        """Parallel invocations over all connected workers (§3.4):
+        independent non-blocking writes, disjoint result buffers."""
+        futs = [self.submit(fn_name, p) for p in payloads]
+        return [f.get(timeout) for f in futs]
+
+    # ------------------------------------------------------------ internals
+    def _dispatch(self, inv: Invocation, worker_hint: Optional[int] = None):
+        workers = self._alive_workers()
+        if not workers:
+            raise AllocationFailed(
+                f"{self.client_id}: no live executor workers")
+        i = (worker_hint if worker_hint is not None
+             else next(self._rr)) % len(workers)
+        workers[i].submit(inv)
+
+    def _wrap_retries(self, inv: Invocation, fn_name: str,
+                      payload: Any) -> "RetryingFuture":
+        """On ExecutorCrash, re-dispatch on another worker up to
+        max_retries (bounded — avoids infinite invocations of broken
+        functions, §3.5).  Retries run in the caller's thread inside
+        ``get()`` — no per-invocation helper threads polluting the
+        microsecond-scale dispatch path."""
+        return RetryingFuture(self, inv, fn_name, payload)
+
+
+class RetryingFuture:
+    """RFuture facade with client-library retry semantics (§3.5)."""
+
+    def __init__(self, invoker: Invoker, inv: Invocation, fn_name: str,
+                 payload: Any):
+        self._invoker = invoker
+        self._cur = inv
+        self._fn_name = fn_name
+        self._payload = payload
+        self._attempt = 0
+
+    def done(self) -> bool:
+        return self._cur.future.done()
+
+    @property
+    def invocation(self) -> Invocation:
+        return self._cur
+
+    @property
+    def timeline(self):
+        return self._cur.timeline
+
+    def get(self, timeout: Optional[float] = 120.0) -> Any:
+        while True:
+            try:
+                return self._cur.future.get(timeout)
+            except ExecutorCrash as e:
+                self._attempt += 1
+                if self._attempt > self._invoker.max_retries:
+                    self._invoker.stats.failures += 1
+                    raise
+                self._invoker.stats.retries += 1
+                nxt = Invocation.make(self._cur.header.fn_index,
+                                      self._fn_name, self._payload)
+                nxt.retries = self._attempt
+                try:
+                    self._invoker._dispatch(nxt)
+                except AllocationFailed:
+                    self._invoker.stats.failures += 1
+                    raise e
+                self._cur = nxt

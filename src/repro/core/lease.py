@@ -1,0 +1,76 @@
+"""Leases: the unit of decentralized resource allocation (paper §3.2).
+
+A client leases {workers, memory, timeout} directly from an executor
+manager; the resource manager is NOT involved in the allocation path.
+Lease lifetime is metered in GB-seconds for accounting (§5.4).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Optional
+
+_lease_ids = itertools.count(1)
+
+
+class LeaseState(Enum):
+    PENDING = "pending"
+    ACTIVE = "active"
+    EXPIRED = "expired"          # timeout elapsed
+    RELEASED = "released"        # client deallocated
+    RETRIEVED = "retrieved"      # batch system took the node back
+    FAILED = "failed"            # executor crash / node loss
+
+
+@dataclass
+class LeaseRequest:
+    client_id: str
+    n_workers: int
+    memory_bytes: int
+    timeout_s: float
+    sandbox: str = "bare"        # bare | docker
+
+
+@dataclass
+class Lease:
+    request: LeaseRequest
+    server_id: str
+    lease_id: int = field(default_factory=lambda: next(_lease_ids))
+    state: LeaseState = LeaseState.PENDING
+    t_granted: float = 0.0
+    t_ended: Optional[float] = None
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    def activate(self, now: Optional[float] = None):
+        with self._lock:
+            self.state = LeaseState.ACTIVE
+            self.t_granted = time.monotonic() if now is None else now
+
+    def end(self, state: LeaseState, now: Optional[float] = None):
+        with self._lock:
+            if self.state == LeaseState.ACTIVE:
+                self.state = state
+                self.t_ended = time.monotonic() if now is None else now
+
+    @property
+    def alive(self) -> bool:
+        return self.state == LeaseState.ACTIVE
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        return (self.state == LeaseState.ACTIVE
+                and now - self.t_granted > self.request.timeout_s)
+
+    def gb_seconds(self, now: Optional[float] = None) -> float:
+        """Allocation meter t_a: GB of leased memory x seconds held."""
+        if self.t_granted == 0.0:
+            return 0.0
+        end = self.t_ended
+        if end is None:
+            end = time.monotonic() if now is None else now
+        dur = max(0.0, end - self.t_granted)
+        return (self.request.memory_bytes / 1e9) * dur

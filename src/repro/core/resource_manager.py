@@ -1,0 +1,198 @@
+"""Replicated, eventually-consistent resource manager (paper §3.1, §3.4).
+
+The manager never sits on the invocation path: it only (a) accepts node
+registrations from the batch system via a REST-analogue call, (b) keeps a
+heartbeat-verified ranked list of executor servers, and (c) multicasts
+availability *deltas* to subscribed clients (the UD-multicast analogue is
+an in-process pub/sub bus with modeled latency).  Replicas gossip deltas
+asynchronously — eventual consistency is sufficient because stale reads
+only shrink the visible resource pool temporarily (paper §3.4), and the
+property test in tests/test_core_properties.py verifies convergence.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.executor import ExecutorManager
+from repro.core.perf_model import DEFAULT_NET, NetParams
+
+
+@dataclass
+class ServerEntry:
+    manager: ExecutorManager
+    epoch: int = 0
+    available: bool = True
+    last_heartbeat: float = field(default_factory=time.monotonic)
+
+    def rank_key(self):
+        return (-self.manager.free_workers, self.manager.server_id)
+
+
+class AvailabilityBus:
+    """Unreliable-datagram multicast analogue: fan-out callbacks, modeled
+    microsecond-scale latency, optional injected drop rate (losses are
+    tolerable for delta updates, §3.4)."""
+
+    def __init__(self, net: NetParams = DEFAULT_NET, drop_rate: float = 0.0):
+        self.net = net
+        self.drop_rate = drop_rate
+        self._subs: List[Callable[[dict], None]] = []
+        self._lock = threading.Lock()
+        self.multicasts = 0
+        import random
+        self._rng = random.Random(7)
+
+    def subscribe(self, cb: Callable[[dict], None]):
+        with self._lock:
+            self._subs.append(cb)
+
+    def publish(self, delta: dict):
+        with self._lock:
+            subs = list(self._subs)
+            self.multicasts += 1
+        for cb in subs:
+            if self.drop_rate and self._rng.random() < self.drop_rate:
+                continue            # UD loss: clients catch up on next delta
+            cb(delta)
+
+
+class ResourceManagerReplica:
+    def __init__(self, replica_id: int, bus: AvailabilityBus):
+        self.replica_id = replica_id
+        self.bus = bus
+        self._servers: Dict[str, ServerEntry] = {}
+        self._lock = threading.RLock()
+        self._peers: List["ResourceManagerReplica"] = []
+        self._epoch = 0
+
+    # ------------------------------------------------------- REST analogue
+    def register(self, manager: ExecutorManager, propagate: bool = True):
+        """Batch system releases a node for FaaS processing (§5.3)."""
+        with self._lock:
+            self._epoch += 1
+            self._servers[manager.server_id] = ServerEntry(
+                manager, epoch=self._epoch)
+            manager.on_saturated = self._on_saturated
+            manager.on_available = self._on_available
+        if propagate:
+            self._gossip({"op": "register", "server": manager,
+                          "epoch": self._epoch})
+            self.bus.publish({"op": "add", "server_id": manager.server_id})
+
+    def remove(self, server_id: str, grace_s: float = 0.0,
+               propagate: bool = True):
+        """Single-step removal for batch-job priority (§5.3)."""
+        with self._lock:
+            entry = self._servers.pop(server_id, None)
+        if entry is not None:
+            entry.manager.retrieve(grace_s)
+        if propagate:
+            self._gossip({"op": "remove", "server_id": server_id})
+            self.bus.publish({"op": "remove", "server_id": server_id})
+
+    # -------------------------------------------------------------- client
+    def server_list(self) -> List[ExecutorManager]:
+        """Ranked list of available executor servers (clients permute it
+        randomly; see Invoker)."""
+        with self._lock:
+            entries = [e for e in self._servers.values()
+                       if e.available and e.manager.heartbeat()]
+            entries.sort(key=ServerEntry.rank_key)
+            return [e.manager for e in entries]
+
+    # ---------------------------------------------------------- saturation
+    def _on_saturated(self, server_id: str):
+        with self._lock:
+            if server_id in self._servers:
+                self._servers[server_id].available = False
+        self._gossip({"op": "saturated", "server_id": server_id})
+        self.bus.publish({"op": "saturated", "server_id": server_id})
+
+    def _on_available(self, server_id: str):
+        with self._lock:
+            if server_id in self._servers:
+                self._servers[server_id].available = True
+        self._gossip({"op": "available", "server_id": server_id})
+        self.bus.publish({"op": "add", "server_id": server_id})
+
+    # ------------------------------------------------------------- gossip
+    def connect_peers(self, peers: List["ResourceManagerReplica"]):
+        self._peers = [p for p in peers if p is not self]
+
+    def _gossip(self, delta: dict):
+        for p in self._peers:
+            p._apply(delta)
+
+    def _apply(self, delta: dict):
+        with self._lock:
+            op = delta["op"]
+            if op == "register":
+                m = delta["server"]
+                self._servers[m.server_id] = ServerEntry(
+                    m, epoch=delta["epoch"])
+            elif op == "remove":
+                self._servers.pop(delta["server_id"], None)
+            elif op == "saturated":
+                if delta["server_id"] in self._servers:
+                    self._servers[delta["server_id"]].available = False
+            elif op == "available":
+                if delta["server_id"] in self._servers:
+                    self._servers[delta["server_id"]].available = True
+
+    # ---------------------------------------------------------- heartbeats
+    def sweep_heartbeats(self):
+        """Periodic liveness check; dead servers are dropped (paper §3.1).
+        Called by the heartbeat thread or explicitly in tests."""
+        dead = []
+        with self._lock:
+            for sid, e in list(self._servers.items()):
+                if not e.manager.heartbeat():
+                    dead.append(sid)
+                    del self._servers[sid]
+                else:
+                    e.last_heartbeat = time.monotonic()
+        for sid in dead:
+            self._gossip({"op": "remove", "server_id": sid})
+            self.bus.publish({"op": "remove", "server_id": sid})
+        return dead
+
+
+class ResourceManager:
+    """Facade bundling replicas + bus; clients pick replicas at random
+    (scalability via replication, §3.4)."""
+
+    def __init__(self, n_replicas: int = 3,
+                 net: NetParams = DEFAULT_NET, drop_rate: float = 0.0):
+        self.bus = AvailabilityBus(net, drop_rate)
+        self.replicas = [ResourceManagerReplica(i, self.bus)
+                         for i in range(n_replicas)]
+        for r in self.replicas:
+            r.connect_peers(self.replicas)
+        self._hb_thread: Optional[threading.Thread] = None
+        self._hb_stop = threading.Event()
+
+    def primary(self) -> ResourceManagerReplica:
+        return self.replicas[0]
+
+    def replica_for(self, client_seed: int) -> ResourceManagerReplica:
+        return self.replicas[client_seed % len(self.replicas)]
+
+    def register(self, manager: ExecutorManager):
+        self.primary().register(manager)
+
+    def remove(self, server_id: str, grace_s: float = 0.0):
+        self.primary().remove(server_id, grace_s)
+
+    def start_heartbeats(self, interval_s: float = 0.2):
+        def loop():
+            while not self._hb_stop.wait(interval_s):
+                for r in self.replicas:
+                    r.sweep_heartbeats()
+        self._hb_thread = threading.Thread(target=loop, daemon=True)
+        self._hb_thread.start()
+
+    def stop(self):
+        self._hb_stop.set()

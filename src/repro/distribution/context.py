@@ -1,0 +1,84 @@
+"""Mesh/axis context threaded through model builders.
+
+``MeshContext`` is the one handle models need: which mesh, which axes carry
+data parallelism (batch), which axis carries model parallelism, and a
+``wsc`` helper that becomes a no-op when running without a mesh (unit
+tests, single CPU device).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class MeshContext:
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ("data",)     # axes carrying the batch dim
+    tp: str = "model"                    # tensor/expert-parallel axis
+    kv_seq: Tuple[str, ...] = ("model",)  # axes sharding KV-cache seq dim
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp] if self.active else 1
+
+    @property
+    def dp_size(self) -> int:
+        if not self.active:
+            return 1
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, *parts) -> P:
+        return P(*parts)
+
+    def sharding(self, *parts) -> Optional[NamedSharding]:
+        if not self.active:
+            return None
+        return NamedSharding(self.mesh, P(*parts))
+
+    def wsc(self, x, *parts):
+        """with_sharding_constraint that degrades to identity off-mesh."""
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*parts)))
+
+    def batch_axes(self):
+        """Mesh-axis tuple for the batch dim of activations (None when the
+        batch dim is unshardable, e.g. long_500k batch=1)."""
+        if not self.dp:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    def kv_axes(self):
+        """Mesh axes for the KV-cache sequence dim (flash-decoding SP)."""
+        if not self.kv_seq:
+            return None
+        return self.kv_seq if len(self.kv_seq) > 1 else self.kv_seq[0]
+
+
+NULL_CTX = MeshContext(mesh=None)
+
+
+def make_context(mesh: Optional[Mesh], *, shard_batch: bool = True,
+                 kv_seq: Optional[Tuple[str, ...]] = None) -> MeshContext:
+    if mesh is None:
+        return MeshContext(mesh=None)
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data", "replica"))
+    if not shard_batch:
+        dp = ()
+    return MeshContext(mesh=mesh, dp=dp or ((names[0],) if shard_batch
+                                            else ()),
+                       tp="model" if "model" in names else names[-1],
+                       kv_seq=kv_seq or ("model",))

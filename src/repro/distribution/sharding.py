@@ -1,0 +1,170 @@
+"""Parameter partition rules: TP over `model`, FSDP over `data`.
+
+One rule table keyed on (path-context, leaf-name, trailing dims).  Leading
+stacking dims (scan over layers / periods / in-period groups) are padded
+with ``None`` automatically, so the same rule serves stacked and unstacked
+trees.  An axis is only used when the dim divides the mesh axis size —
+otherwise that dim is replicated (e.g. whisper's vocab 51865 on model=16).
+
+Baseline layout (EXPERIMENTS.md §Perf iterates from here):
+  * 2nd (output) dim of column mats -> `model`; 1st dim of row mats ->
+    `model` (Megatron pairing: one all-reduce per block).
+  * the other big dim -> `data` (FSDP/ZeRO-3: params gathered per use,
+    grads reduce-scattered by GSPMD).
+  * MoE experts -> `model` when n_experts divides it (EP), else experts
+    replicated and the expert-hidden dim takes TP.
+  * KV-projection heads replicated (GQA kv=8 never divides model=16).
+  * 1-D vectors replicated.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distribution.context import MeshContext
+
+
+def _axis_size(dist, name):
+    return dist.mesh.shape[name] if dist.active else 1
+
+
+def make_rules(model):
+    cfg, dist = model.cfg, model.dist
+    tp = _axis_size(dist, "model") if dist.active else 1
+    fsdp = _axis_size(dist, "data") if dist.active else 1
+
+    def m(n):          # shard over `model` when divisible
+        return "model" if (dist.active and n % tp == 0 and n >= tp) else None
+
+    def d(n):          # shard over `data` (FSDP) when divisible
+        return "data" if (dist.active and n % fsdp == 0 and n >= fsdp) else \
+            None
+
+    heads = "model" if getattr(model, "shard_heads", False) else None
+    moe_ep = getattr(model, "moe_ep", False)
+    full_ep = (getattr(model, "moe_full_ep", False)
+               and getattr(model, "full_ep_available", lambda: False)())
+    if getattr(model, "no_fsdp_experts", False):
+        # serving layout (perf iter mixtral-long 3): expert weights fit
+        # HBM sharded over `model` alone; dropping the `data` shard
+        # removes the per-layer f32 weight all-gathers at decode
+        d_expert = lambda n: None
+    else:
+        d_expert = None
+
+    def rule(path, shape):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        core = None
+
+        def in_ctx(*ks):
+            return any(k in keys for k in ks)
+
+        if name == "tokens":
+            core = (m(shape[-2]), d(shape[-1]))
+        elif name == "lm_head":
+            core = (d(shape[-2]), m(shape[-1]))
+        elif name == "scale" or len(shape) == 1:
+            core = (None,) * min(1, len(shape))
+        elif in_ctx("tm"):                      # rwkv time mix
+            core = {
+                "wr": (d(shape[-2]), m(shape[-1])),
+                "wk": (d(shape[-2]), m(shape[-1])),
+                "wv": (d(shape[-2]), m(shape[-1])),
+                "wg": (d(shape[-2]), m(shape[-1])),
+                "wo": (m(shape[-2]), d(shape[-1])),
+                "decay_w2": (None, m(shape[-1])),
+                "mix_w2": (None, None, m(shape[-1])),
+                "mu": (None, None),
+            }.get(name, (None,) * 2)
+        elif in_ctx("cm"):                      # rwkv channel mix
+            core = {
+                "wk": (d(shape[-2]), m(shape[-1])),
+                "wv": (m(shape[-2]), d(shape[-1])),
+                "wr": (d(shape[-2]), m(shape[-1])),
+            }.get(name, (None, None))
+        elif in_ctx("mamba") or (cfg.mamba is not None
+                                 and name in ("in_proj", "conv_w", "x_proj",
+                                              "dt_proj", "A_log",
+                                              "out_proj")):
+            core = {
+                "in_proj": (d(shape[-2]), m(shape[-1])),
+                "conv_w": (None, m(shape[-1])),
+                "x_proj": (m(shape[-2]), None),
+                "dt_proj": (None, m(shape[-1])),
+                "A_log": (m(shape[-2]), None),
+                "out_proj": (m(shape[-2]), d(shape[-1])),
+            }.get(name, (None,) * 2)
+        elif name in ("gate", "up", "down") and cfg.moe is not None \
+                and "shared" not in keys and "mlp" not in keys \
+                and ("moe" in keys or
+                     ("ffn" in keys and cfg.layer_is_moe(0))):
+            # stacked expert weights (E, d, f) — EP over `model` when E
+            # divides it, else hidden-dim TP
+            if full_ep:
+                core = (("data", "model"), None, None)
+            else:
+                de = d_expert if d_expert is not None else d
+                e = "model" if moe_ep else None
+                t = None if moe_ep else "model"
+                if name in ("gate", "up"):
+                    core = (e, de(shape[-2]),
+                            t if t and shape[-1] % tp == 0 else None)
+                else:
+                    core = (e, t if t and shape[-2] % tp == 0 else None,
+                            de(shape[-1]))
+        elif name == "router":
+            core = (None, None)
+        elif name == "wq":
+            core = (d(shape[-2]), heads)
+        elif name in ("wk", "wv"):
+            core = (d(shape[-2]), None)         # GQA KV replicated
+        elif name == "wo":
+            core = (heads, d(shape[-1]))
+        elif name in ("wq_a", "wkv_a"):         # MLA down-projections
+            # column-sharded over `model` (perf iter 2, deepseek-train):
+            # keeps their grads reduce-scattered instead of an
+            # every-layer all-reduce of replicated-param gradients;
+            # no_mla_colshard restores the baseline (replicated columns)
+            if getattr(model, "no_mla_colshard", False):
+                core = (d(shape[-2]), None)
+            else:
+                core = (d(shape[-2]), m(shape[-1]))
+        elif name in ("wq_b", "wk_b", "wv_b"):  # MLA up-projections (heads)
+            core = (None, m(shape[-1]))
+        elif name in ("gate", "up"):            # dense MLP
+            core = (d(shape[-2]), m(shape[-1]))
+        elif name == "down":
+            core = (m(shape[-2]), d(shape[-1]))
+        elif name == "proj":                    # mtp projection
+            core = (d(shape[-2]), m(shape[-1]))
+        else:
+            core = (None,) * min(2, len(shape))
+
+        pad = (None,) * (len(shape) - len(core))
+        return P(*(pad + tuple(core)))
+
+    return rule
+
+
+def param_specs(model, param_shapes):
+    """param_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    rule = make_rules(model)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rule(path, leaf.shape), param_shapes)
+
+
+def param_shardings(model, param_shapes):
+    dist: MeshContext = model.dist
+    specs = param_specs(model, param_shapes)
+    if not dist.active:
+        return specs
+    return jax.tree.map(lambda s: NamedSharding(dist.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_specs(dist: MeshContext, batch_shapes, shard_batch=True):
+    dp = dist.batch_axes() if shard_batch else None
+    return jax.tree.map(
+        lambda leaf: P(*((dp,) + (None,) * (len(leaf.shape) - 1))),
+        batch_shapes)

@@ -1,0 +1,117 @@
+"""Pallas TPU flash attention (blockwise online softmax).
+
+VMEM tiling (v5e, ~16 MiB/core budget):
+  * grid = (batch*heads, n_q_blocks, n_kv_blocks); the LAST grid dim is
+    sequential on TPU, so the online-softmax accumulators (m, l, acc)
+    live in VMEM scratch and carry across kv blocks.
+  * per step: q block (bq, hd) + k/v blocks (bk, hd) + the (bq, bk) score
+    tile; with bq=bk=512, hd<=256 the working set is ~2.5 MiB — well
+    inside VMEM, and both matmuls are (>=128)-aligned for the MXU.
+  * causal/sliding-window/pad masking is applied on the f32 score tile;
+    softmax statistics are f32 regardless of the input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, bq, bk, sq, skv, nk):
+    pid_q = pl.program_id(1)
+    pid_k = pl.program_id(2)
+
+    @pl.when(pid_k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = pid_q * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = pid_k * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (k_pos < skv) & (q_pos < sq)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(pid_k == nk - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, softcap=0.0,
+                           block_q=512, block_k=512, interpret=False):
+    """q (b, sq, h, hd); k/v (b, skv, h, hd) — h already GQA-repeated.
+    Returns (b, sq, h, hd) in q.dtype."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(skv, 8))
+    nq = -(-sq // bq)
+    nk = -(-skv // bk)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    pad_q = nq * bq - sq
+    pad_k = nk * bk - skv
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (hd ** 0.5), causal=causal,
+        window=int(window), softcap=float(softcap), bq=bq, bk=bk,
+        sq=sq, skv=skv, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, qi, ki: (i, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, qi, ki: (i, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, qi, ki: (i, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, qi, ki: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq * bq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),      # l (denominator)
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :sq].reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,24 @@
+"""Dispatching wrapper: Pallas kernel on TPU, interpret-mode kernel for
+CPU validation, and the scan-blockwise jnp twin (repro.models.attention
+.flash_attention) as the production CPU/dry-run path."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.models.attention import flash_attention as flash_jnp
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    use_pallas=None, interpret=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      window=int(window),
+                                      softcap=float(softcap),
+                                      interpret=interpret)
+    return flash_jnp(q, k, v, causal=causal, window=window,
+                     softcap=softcap)

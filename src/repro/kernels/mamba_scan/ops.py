@@ -1,0 +1,52 @@
+"""Dispatching wrapper for the Mamba selective scan (chunked-remat on CPU,
+Pallas kernel on TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+
+def selective_scan_chunked(x, dt, A, B, C, D, state, *, chunk=128):
+    b, s, di = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nb = (s + pad) // chunk
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(h, ts):
+        y, h = selective_scan_ref(ts[0], ts[1], A, ts[2], ts[3], D, h)
+        return h, y
+
+    xs = tuple(t.reshape(b, nb, chunk, -1).swapaxes(0, 1)
+               for t in (x, dt, B, C))
+    h, ys = jax.lax.scan(body, state.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(b, nb * chunk, di)[:, :s]
+    return y.astype(x.dtype), h
+
+
+def selective_scan(x, dt, A, B, C, D, state, *, chunk=128, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        from repro.kernels.mamba_scan.kernel import selective_scan_pallas
+        return selective_scan_pallas(x, dt, A, B, C, D, state)
+    return selective_scan_chunked(x, dt, A, B, C, D, state, chunk=chunk)
+
+
+def selective_scan_step(x1, dt1, A, B1, C1, D, state):
+    """Single-token decode. x1, dt1 (b,di); B1, C1 (b,N); state (b,di,N)."""
+    xf, dtf = x1.astype(jnp.float32), dt1.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    dBx = (dtf * xf)[..., None] * B1.astype(jnp.float32)[:, None, :]
+    h = dA * state + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C1.astype(jnp.float32)) \
+        + D.astype(jnp.float32) * xf
+    return y.astype(x1.dtype), h

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mamba selective scan (S6).
+
+    h_t = exp(Δ_t·A) ⊙ h_{t-1} + (Δ_t·B_t) x_t
+    y_t = C_t·h_t + D ⊙ x_t
+
+Shapes: x, dt (b, s, di); A (di, N); B, C (b, s, N); D (di,);
+state h (b, di, N).  ``dt`` is already softplus'd.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, B, C, D, state):
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Af, Bf, Cf, Df = (t.astype(jnp.float32) for t in (A, B, C, D))
+
+    def step(h, ts):
+        xt, dtt, Bt, Ct = ts                     # (b,di) (b,di) (b,N) (b,N)
+        dA = jnp.exp(dtt[..., None] * Af[None])              # (b,di,N)
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]         # (b,di,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct) + Df * xt
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the RWKV6 (Finch) WKV recurrence.
+
+TPU adaptation of the (GPU, warp-per-head) reference: one grid cell per
+(batch, head, time-chunk); the (hd x hd) f32 state tile stays RESIDENT in
+VMEM scratch across the sequential time-chunk grid dim, so HBM traffic is
+exactly one read of r/k/v/w and one write of y per token — the recurrence
+itself never touches HBM.  hd=64 -> 16 KiB state; chunk=128 -> four
+(128, 64) operand tiles ~128 KiB: trivially VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+            s_scr, *, chunk, nt):
+    pid_t = pl.program_id(2)
+
+    @pl.when(pid_t == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                   # (hd,)
+
+    def step(i, S):
+        rt = r_ref[0, i, 0, :].astype(jnp.float32)     # (hd,)
+        kt = k_ref[0, i, 0, :].astype(jnp.float32)
+        vt = v_ref[0, i, 0, :].astype(jnp.float32)
+        wt = w_ref[0, i, 0, :].astype(jnp.float32)
+        # y = r·S + (Σ_k r_k u_k k_k) v   (rank-1 shortcut, no hd² matmul
+        # for the u-term)
+        y = rt @ S + jnp.sum(rt * u * kt) * vt
+        y_ref[0, i, 0, :] = y.astype(y_ref.dtype)
+        return wt[:, None] * S + kt[:, None] * vt[None, :]
+
+    s_scr[...] = jax.lax.fori_loop(0, chunk, step, s_scr[...])
+
+    @pl.when(pid_t == nt - 1)
+    def _done():
+        sT_ref[0, 0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, state, *, chunk=128, interpret=False):
+    """r/k/v/w (b, s, H, hd); u (H, hd); state (b, H, hd, hd) f32.
+    Returns (y (b, s, H, hd) in r.dtype, final state f32)."""
+    b, s, H, hd = r.shape
+    nt = -(-s // chunk)
+    pad = nt * chunk - s
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)      # identity decay on padding
+
+    io_spec = pl.BlockSpec((1, chunk, 1, hd),
+                           lambda bi, hi, ti: (bi, ti, hi, 0))
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, nt=nt),
+        grid=(b, H, nt),
+        in_specs=[io_spec, io_spec, io_spec, io_spec,
+                  pl.BlockSpec((1, hd), lambda bi, hi, ti: (hi, 0)),
+                  pl.BlockSpec((1, 1, hd, hd),
+                               lambda bi, hi, ti: (bi, hi, 0, 0))],
+        out_specs=[io_spec,
+                   pl.BlockSpec((1, 1, hd, hd),
+                                lambda bi, hi, ti: (bi, hi, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, nt * chunk, H, hd), r.dtype),
+                   jax.ShapeDtypeStruct((b, H, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state.astype(jnp.float32))
+    return y[:, :s], sT

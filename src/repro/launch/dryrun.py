@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init) — assignment MULTI-POD DRY-RUN step 0.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import SHAPES, cell_is_lowerable, get_config  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.launch.specs import build_cell  # noqa: E402
+
+
+def model_flops(cfg, spec) -> float:
+    """Useful-work reference: 6·N_active·D (train), 2·N_active·D (fwd)."""
+    n_active = cfg.param_counts()["active"]
+    if spec.kind == "train":
+        return 6.0 * n_active * spec.global_batch * spec.seq_len
+    if spec.kind == "prefill":
+        return 2.0 * n_active * spec.global_batch * spec.seq_len
+    return 2.0 * n_active * spec.global_batch       # one token / sequence
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides=None, tag: str = "baseline") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": n_chips, "tag": tag, "status": "ok"}
+    if not cell_is_lowerable(cfg, spec):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k requires sub-quadratic attention; "
+                         f"{arch} is pure full-attention (DESIGN.md §7)")
+        return rec
+    try:
+        t0 = time.time()
+        cell = build_cell(arch, shape_name, mesh, overrides=overrides)
+        with mesh:
+            jitted = jax.jit(cell.step_fn,
+                             in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        hlo = hlo_analysis.analyze(txt)
+
+        rec.update({
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "hlo_text_bytes": len(txt),
+            "memory_analysis": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            },
+            "cost_analysis_flops_1iter": cost.get("flops", 0.0),
+            "cost_analysis_bytes_1iter": cost.get("bytes accessed", 0.0),
+            "hlo": hlo,
+            "microbatches": cell.microbatches,
+        })
+        # ---- roofline terms (per-chip; HLO shapes are per-device) ----
+        mf = model_flops(cfg, spec)
+        compute_s = hlo["flops"] / PEAK_FLOPS_BF16
+        memory_s = hlo["hbm_bytes"] / HBM_BW
+        coll_s = hlo["collective_moved_bytes"] / ICI_BW
+        dom = max((compute_s, "compute"), (memory_s, "memory"),
+                  (coll_s, "collective"))[1]
+        step_s = max(compute_s, memory_s, coll_s)
+        rec["roofline"] = {
+            "model_flops_total": mf,
+            "model_flops_per_chip": mf / n_chips,
+            "hlo_flops_per_chip": hlo["flops"],
+            "useful_flops_ratio": (mf / n_chips) / max(hlo["flops"], 1.0),
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": dom,
+            "bound_step_s": step_s,
+            "roofline_fraction":
+                (mf / n_chips / PEAK_FLOPS_BF16) / max(step_s, 1e-12),
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure verbatim
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of perf-iteration knobs")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-arch best knobs from §Perf")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    if args.optimized:
+        from repro.launch.specs import optimized_overrides
+        overrides = {**optimized_overrides(args.arch, args.shape),
+                     **(overrides or {})}
+        if args.tag == "baseline":
+            args.tag = "optimized"
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   overrides=overrides, tag=args.tag)
+    out = args.out
+    if out is None:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        os.makedirs("experiments/dryrun", exist_ok=True)
+        out = (f"experiments/dryrun/{args.arch}_{args.shape}_{mesh_tag}"
+               f"_{args.tag}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dom={r['dominant']} frac={r['roofline_fraction']:.3f}"
+                 f" compile={rec['compile_s']}s")
+        ma = rec["memory_analysis"]
+        print(compiled_summary(rec))
+    print(f"[dryrun] {args.arch} x {args.shape} x {rec['mesh']}: "
+          f"{status}{extra} -> {out}")
+    if status == "error":
+        print(rec["error"])
+        raise SystemExit(1)
+
+
+def compiled_summary(rec):
+    ma = rec["memory_analysis"]
+    gb = 1024 ** 3
+    return (f"  mem/device: args={ma['argument_bytes'] / gb:.2f}GiB "
+            f"temp={ma['temp_bytes'] / gb:.2f}GiB "
+            f"out={ma['output_bytes'] / gb:.2f}GiB | "
+            f"flops/chip={rec['hlo']['flops']:.3e} "
+            f"hbm/chip={rec['hlo']['hbm_bytes']:.3e} "
+            f"coll/chip={rec['hlo']['collective_moved_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

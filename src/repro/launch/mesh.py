@@ -1,0 +1,29 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state.  Single pod = (16, 16) v5e = ("data", "model");
+multi-pod = (2, 16, 16) = ("pod", "data", "model") — the pod axis carries
+pure data parallelism across pods (DCN-ish), `data` carries FSDP + batch,
+`model` carries TP/EP/SP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """Mesh over however many (real or fake) devices exist; for tests."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (roofline denominators; assignment §Roofline).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (effective, one link)
+HBM_PER_CHIP = 16 * 1024 ** 3     # 16 GiB

@@ -1,0 +1,234 @@
+"""Cell builder: (arch x shape x mesh) -> step fn + ShapeDtypeStruct args
++ shardings.  Used by the dry-run, the roofline pass and the serving/
+training launchers.  ``input_specs()`` follows the assignment contract:
+weak-type-correct ShapeDtypeStructs, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, SMOKE_SHAPES, get_config, get_smoke
+from repro.distribution import sharding as S
+from repro.distribution.context import make_context
+from repro.models.factory import build_model
+from repro.optim import AdamW, AdamWConfig, make_schedule
+from repro.training.step import make_train_step, train_state_shardings
+
+QUANTIZED_OPT_THRESHOLD = 30e9     # 8-bit moments for >30B-param models
+MB_TOKEN_TARGET = 8192             # per-device tokens per microbatch
+
+
+def optimized_overrides(arch: str, shape_name: str) -> dict:
+    """Per-arch best serving knobs from the §Perf hillclimb (EXPERIMENTS
+    §D).  Train/prefill cells keep the (already-optimized) defaults."""
+    kind = SHAPES[shape_name].kind
+    if kind == "prefill":
+        # serving layout also helps prefill for TP-mode MoE (measured:
+        # mixtral prefill bound 4.45->4.23 s)
+        return ({"no_fsdp_experts": True}
+                if arch == "mixtral-8x7b" else {})
+    if kind != "decode":
+        return {}
+    ov = {"sp_decode": True}
+    if arch in ("mixtral-8x7b", "h2o-danube-3-4b"):
+        ov["window_cache"] = True
+    if arch == "mixtral-8x7b":
+        ov["no_fsdp_experts"] = True
+    if arch == "deepseek-v3-671b":
+        ov["moe_full_ep"] = True
+    return ov
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: Any
+    spec: Any
+    model: Any
+    kind: str
+    step_fn: Callable
+    args: Tuple                    # ShapeDtypeStructs (positional)
+    in_shardings: Tuple
+    donate: Tuple[int, ...]
+    microbatches: int = 1
+    extras: Optional[dict] = None
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _microbatches(cfg, spec, mesh):
+    per_dev_batch = max(1, spec.global_batch // _dp_size(mesh))
+    tokens = per_dev_batch * spec.seq_len
+    accum = 1
+    while tokens // accum > MB_TOKEN_TARGET and accum < per_dev_batch:
+        accum *= 2
+    return accum
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _vision_sds(cfg, spec, batch):
+    return jax.ShapeDtypeStruct((batch, cfg.n_vision_patches, cfg.d_model),
+                                jnp.bfloat16)
+
+
+def _frames_sds(cfg, batch, smoke=False):
+    n = 16 if smoke else 1500
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), jnp.bfloat16)
+
+
+def input_specs(arch: str, shape_name: str, *, smoke: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    spec = (SMOKE_SHAPES if smoke else SHAPES)[shape_name]
+    B, Sq = spec.global_batch, spec.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct((B, s), jnp.int32)
+    out = {}
+    if spec.kind == "train":
+        s_tok = Sq - (cfg.n_vision_patches or 0)
+        out["tokens"] = tok(s_tok)
+        out["labels"] = tok(s_tok)
+        if cfg.n_vision_patches:
+            out["patch_embeds"] = _vision_sds(cfg, spec, B)
+        if cfg.is_encdec:
+            out["frames"] = _frames_sds(cfg, B, smoke)
+    elif spec.kind == "prefill":
+        s_tok = Sq - (cfg.n_vision_patches or 0)
+        out["tokens"] = tok(s_tok)
+        if cfg.n_vision_patches:
+            out["patch_embeds"] = _vision_sds(cfg, spec, B)
+        if cfg.is_encdec:
+            out["frames"] = _frames_sds(cfg, B, smoke)
+    else:                                            # decode
+        out["tokens"] = tok(1)
+        out["length"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+               overrides: Optional[dict] = None) -> Cell:
+    """overrides: perf-iteration knobs, e.g. {"kv_seq": ("data","model"),
+    "microbatches": 4, "accum_dtype": "bfloat16", "window_cache": True}."""
+    ov = overrides or {}
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if "cfg" in ov:
+        cfg = dataclasses.replace(cfg, **ov["cfg"])
+    spec = (SMOKE_SHAPES if smoke else SHAPES)[shape_name]
+    kind = spec.kind
+    long_ctx = shape_name == "long_500k"
+
+    # --- mesh context: batch unshardable (B < dp) -> SP-decode layout
+    dp_total = _dp_size(mesh)
+    shard_batch = spec.global_batch >= dp_total
+    kv_seq = ov.get("kv_seq")
+    if kv_seq is None:
+        kv_seq = ("data", "model") if (kind == "decode"
+                                       and not shard_batch) else ("model",)
+    dist = make_context(mesh, shard_batch=shard_batch, kv_seq=tuple(kv_seq))
+    model = build_model(cfg, dist, long_context=long_ctx)
+    for knob in ("sp_decode", "window_cache", "moe_full_ep",
+                 "no_fsdp_experts", "no_mla_colshard"):
+        if ov.get(knob):
+            setattr(model, knob, True)
+    if ov.get("remat_policy"):
+        model.remat_policy = ov["remat_policy"]
+
+    params_shapes = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    pshard = S.param_shardings(model, params_shapes)
+    dp = dist.batch_axes()
+    ins = input_specs(arch, shape_name, smoke=smoke)
+    if "cfg" in ov:   # re-derive with the overridden config
+        B = spec.global_batch
+        if kind == "decode":
+            ins = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                   "length": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def bshard(x):
+        return _named(mesh, P(*((dp,) + (None,) * (len(x.shape) - 1))))
+
+    if kind == "train":
+        mb = ov.get("microbatches", _microbatches(cfg, spec, mesh))
+        big = cfg.param_counts()["total"] > QUANTIZED_OPT_THRESHOLD
+        sched, _ = make_schedule("wsd" if cfg.name == "minicpm-2b"
+                                 else "cosine")
+        schedule = (lambda s: sched(s, peak_lr=3e-4, warmup=100,
+                                    stable=1000, decay=100)
+                    if cfg.name == "minicpm-2b" else
+                    sched(s, peak_lr=3e-4, warmup=100, total=10_000))
+        opt = AdamW(schedule, AdamWConfig(
+            quantized=ov.get("quantized_opt", big),
+            flat_moments=ov.get("flat_qtensor", False)))
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        pshard2, oshard = train_state_shardings(model, params_shapes,
+                                                opt_shapes)
+        accum_dtype = jnp.bfloat16 if (big or ov.get("accum_dtype")
+                                       == "bfloat16") else jnp.float32
+        grad_specs = (S.param_specs(model, params_shapes)
+                      if ov.get("shard_grad_accum") else None)
+        step = make_train_step(model, opt, microbatches=mb,
+                               accum_dtype=accum_dtype,
+                               grad_specs=grad_specs)
+        batch_sh = {k: bshard(v) for k, v in ins.items()}
+        return Cell(arch, shape_name, cfg, spec, model, kind, step,
+                    (params_shapes, opt_shapes, ins),
+                    (pshard2, oshard, batch_sh), donate=(0, 1),
+                    microbatches=mb)
+
+    if kind == "prefill":
+        max_len = spec.seq_len - (cfg.n_vision_patches or 0)
+        extra_key = ("frames" if cfg.is_encdec else
+                     "patch_embeds" if cfg.n_vision_patches else None)
+
+        def prefill_step(params, tokens, extra=None):
+            kw = {}
+            if extra_key:
+                kw[extra_key if extra_key == "frames"
+                   else "patch_embeds"] = extra
+            return model.prefill(params, tokens, max_len, **kw)
+
+        args = [params_shapes, ins["tokens"]]
+        shards = [pshard, bshard(ins["tokens"])]
+        if extra_key:
+            args.append(ins[extra_key])
+            shards.append(bshard(ins[extra_key]))
+        return Cell(arch, shape_name, cfg, spec, model, kind, prefill_step,
+                    tuple(args), tuple(shards), donate=())
+
+    # ---- decode ----
+    B, Sq = spec.global_batch, spec.seq_len
+    window_cache = ov.get("window_cache", False)
+    cache_len = Sq
+    if window_cache and cfg.sliding_window:
+        cache_len = min(Sq, cfg.sliding_window)
+    cache_kw = {}
+    if cfg.is_encdec:
+        cache_kw["s_enc"] = 16 if smoke else 1500
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(B, cache_len, **cache_kw))
+    cspecs = model.cache_specs()
+    cshard = jax.tree.map(lambda sp: _named(mesh, sp), cspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    def decode_step(params, cache, tokens, length):
+        return model.decode(params, cache, tokens, length)
+
+    args = (params_shapes, cache_shapes, ins["tokens"], ins["length"])
+    shards = (pshard, cshard, bshard(ins["tokens"]), _named(mesh, P()))
+    return Cell(arch, shape_name, cfg, spec, model, kind, decode_step,
+                args, shards, donate=(1,))

@@ -1,0 +1,85 @@
+"""Training launcher: end-to-end driver over the cell builder.
+
+On real hardware this runs the production mesh; on this CPU container it
+drives the smoke configs (the full-size path is exercised by dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b \
+        --steps 30 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import AsyncCheckpointer, latest_step, restore
+from repro.configs import get_config, get_smoke
+from repro.data import Prefetcher, SyntheticLMDataset
+from repro.models.factory import build_model
+from repro.optim import AdamW, AdamWConfig, cosine, wsd
+from repro.training.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    if cfg.name == "minicpm-2b":            # WSD per the paper's recipe
+        schedule = lambda s: wsd(s, peak_lr=3e-3, warmup=10,
+                                 stable=args.steps, decay=args.steps // 4)
+    else:
+        schedule = lambda s: cosine(s, peak_lr=3e-3, warmup=10,
+                                    total=args.steps)
+    opt = AdamW(schedule, AdamWConfig(weight_decay=0.01))
+    step_fn = jax.jit(make_train_step(model, opt))
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    start = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and args.resume and (last := latest_step(args.ckpt_dir)):
+        template = jax.eval_shape(lambda: {"params": params,
+                                           "opt": opt_state})
+        state = restore(args.ckpt_dir, last, template)
+        params, opt_state, start = state["params"], state["opt"], last
+        print(f"resumed from step {last}")
+
+    data = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch, seed=1)
+    pf = Prefetcher(data, start_step=start)
+    t0 = time.time()
+    losses = []
+    for _ in range(start, args.steps):
+        step, batch = pf.next()
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if (step + 1) % 10 == 0:
+            print(f"step {step+1:5d} loss={losses[-1]:.4f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"gnorm={float(m['grad_norm']):.3f}")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    pf.stop()
+    if ckpt:
+        ckpt.wait()
+    dt = time.time() - t0
+    print(f"{args.steps - start} steps in {dt:.1f}s "
+          f"({(args.steps - start) / max(dt, 1e-9):.2f} steps/s); "
+          f"loss {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared LM plumbing: embeddings, heads, losses, cache containers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_embedding(rng, cfg, dtype):
+    p = {"tokens": L.embed_init(rng, (cfg.vocab_size, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(jax.random.fold_in(rng, 1),
+                                    (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed(tokens, p, cfg, dist):
+    x = jnp.take(p["tokens"], tokens, axis=0)
+    if cfg.emb_scale != 1.0:
+        x = x * jnp.asarray(cfg.emb_scale, x.dtype)
+    return dist.wsc(x, dist.batch_axes(), None, None)
+
+
+def lm_logits(x, p, cfg, dist):
+    if cfg.logit_scale != 1.0:
+        x = x * jnp.asarray(cfg.logit_scale, x.dtype)
+    w = p["tokens"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = x @ w
+    return dist.wsc(logits, dist.batch_axes(), None, "model")
+
+
+def next_token_loss(logits, labels, mask=None):
+    """Cross entropy with the one-hot-einsum trick: never gathers the
+    vocab-sharded logits (the (b,s,V) compare/select fuses into the
+    reduction under XLA)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = (labels[..., None] ==
+              jnp.arange(lf.shape[-1], dtype=labels.dtype)).astype(jnp.float32)
+    ll = jnp.einsum("...v,...v->...", lf, onehot)
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def residual_scale(cfg):
+    if cfg.depth_scale:
+        return cfg.depth_scale / jnp.sqrt(float(cfg.n_layers))
+    return 1.0

@@ -1,0 +1,17 @@
+"""Model factory: ArchConfig -> model instance (family dispatch)."""
+from __future__ import annotations
+
+from repro.models.hybrid import JambaLM
+from repro.models.rwkv_lm import RWKVLM
+from repro.models.transformer import DecoderLM
+from repro.models.whisper import WhisperLM
+
+
+def build_model(cfg, dist=None, long_context=False):
+    if cfg.rwkv is not None:
+        return RWKVLM(cfg, dist)
+    if cfg.is_encdec:
+        return WhisperLM(cfg, dist)
+    if cfg.mamba is not None and cfg.attn_layer_period:
+        return JambaLM(cfg, dist, long_context=long_context)
+    return DecoderLM(cfg, dist)

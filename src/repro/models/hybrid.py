@@ -1,0 +1,203 @@
+"""Jamba-style hybrid LM: periods of (1 attention + N-1 Mamba) layers with
+MoE every other layer (16e top-2).
+
+Structure changes per layer, so the scan runs over *periods* (homogeneous by
+construction: 72 = 9 × 8, attention at a fixed in-period offset, MoE on odd
+in-period indices) with a static python loop over the 8 in-period layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import moe as M
+from repro.models.transformer import DecoderLM
+from repro.distribution.context import NULL_CTX
+
+
+def _tree_idx(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+class JambaLM(DecoderLM):
+    """Reuses DecoderLM's attention/MoE/embedding machinery; replaces the
+    layer stack with the hybrid period scan."""
+
+    def __init__(self, cfg, dist=None, long_context=False):
+        super().__init__(cfg, dist or NULL_CTX)
+        self.period = cfg.attn_layer_period
+        assert cfg.n_layers % self.period == 0
+        self.n_periods = cfg.n_layers // self.period
+        self.n_mamba = self.period - 1
+        mo = cfg.moe.layer_offset
+
+        self.moe_js = [j for j in range(self.period)
+                       if j % cfg.moe.layer_period == mo]
+        self.mlp_js = [j for j in range(self.period) if j not in self.moe_js]
+        self.long_context = long_context
+
+    @property
+    def attn_window(self):
+        return self.cfg.hybrid_long_window if self.long_context else 0
+
+    # ------------------------------------------------------------------ init
+
+    def _init_period(self, rng):
+        cfg, dt = self.cfg, self.dtype
+        r = L.split_tree(rng, 6)
+        mamba_rngs = jax.random.split(r[0], self.n_mamba)
+        moe_rngs = jax.random.split(r[1], len(self.moe_js))
+        mlp_rngs = jax.random.split(r[2], len(self.mlp_js))
+        return {
+            "attn": A.init_attention(r[3], cfg, dt),
+            "mamba": jax.vmap(lambda k: MB.init_mamba(k, cfg, dt))(
+                mamba_rngs),
+            "moe": jax.vmap(lambda k: M.init_moe(k, cfg, dt))(moe_rngs),
+            "mlp": jax.vmap(lambda k: L.init_mlp(k, cfg.d_model, cfg.d_ff,
+                                                 cfg.act, dt))(mlp_rngs),
+            "ln1": {"scale": jnp.ones((self.period, cfg.d_model), dt)},
+            "ln2": {"scale": jnp.ones((self.period, cfg.d_model), dt)},
+        }
+
+    def init(self, rng):
+        rngs = jax.random.split(jax.random.fold_in(rng, 29), self.n_periods)
+        return {
+            "embed": C.init_embedding(jax.random.fold_in(rng, 1), self.cfg,
+                                      self.dtype),
+            "periods": jax.vmap(self._init_period)(rngs),
+            "final_norm": L.init_norm(self.cfg, self.dtype),
+        }
+
+    # ------------------------------------------------------------- forward
+
+    def _period_block(self, x, pp, positions, cache_entry, length, mode):
+        """One period (static inner loop). cache_entry: dict with 'attn'
+        (kv cache) and 'mamba' {'ssm': (n_mamba,b,di,N), 'conv': ...}."""
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+        new_attn_cache = None
+        new_ssm, new_conv = [], []
+        mi = moei = mlpi = 0
+        for j in range(self.period):
+            h = L.apply_norm(x, {"scale": pp["ln1"]["scale"][j]}, cfg)
+            if j == cfg.attn_layer_offset:
+                if mode == "decode":
+                    o, new_attn_cache = self._attention_decode(
+                        h, pp["attn"], self.attn_window, cfg.rope_theta,
+                        cache_entry["attn"], length)
+                else:
+                    o, new_attn_cache = self._attention_full(
+                        h, pp["attn"], self.attn_window, cfg.rope_theta,
+                        positions, None if mode == "train"
+                        else cache_entry["attn"], length)
+            else:
+                st = None
+                if mode != "train":
+                    st = {"ssm": cache_entry["mamba"]["ssm"][mi],
+                          "conv": cache_entry["mamba"]["conv"][mi]}
+                o, st_new = MB.apply_mamba(h, _tree_idx(pp["mamba"], mi),
+                                           cfg, st)
+                new_ssm.append(st_new["ssm"])
+                new_conv.append(st_new["conv"])
+                mi += 1
+            x = x + o
+            h = L.apply_norm(x, {"scale": pp["ln2"]["scale"][j]}, cfg)
+            if j in self.moe_js:
+                y, aux = self._moe(h, _tree_idx(pp["moe"], moei))
+                aux_total = aux_total + aux
+                moei += 1
+            else:
+                y = L.apply_mlp(h, _tree_idx(pp["mlp"], mlpi), cfg.act)
+                mlpi += 1
+            x = x + y
+        new_cache = None
+        if mode != "train":
+            new_cache = {"attn": new_attn_cache,
+                         "mamba": {"ssm": jnp.stack(new_ssm),
+                                   "conv": jnp.stack(new_conv)}}
+        return x, new_cache, aux_total
+
+    def _run_layers(self, x, params, positions, cache, length, mode,
+                    remat=False):
+        def body(carry, xs):
+            pp, ce = xs
+            if mode == "train":
+                ce = None
+            h, new_ce, aux = self._period_block(carry, pp, positions, ce,
+                                                length, mode)
+            return h, (new_ce, aux)
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, (new_cache, aux) = jax.lax.scan(body, x, (params["periods"],
+                                                     cache))
+        return x, new_cache, jnp.sum(aux)
+
+    def loss(self, params, batch):
+        x = self._embed_inputs(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, aux = self._run_layers(
+            x, params, positions,
+            jnp.zeros((self.n_periods, 0), jnp.int32), None, "train",
+            remat=True)
+        x = L.apply_norm(x, params["final_norm"], self.cfg)
+        logits = C.lm_logits(x, params["embed"], self.cfg, self.dist)
+        loss = C.next_token_loss(logits, batch["labels"],
+                                 batch.get("loss_mask"))
+        return loss + aux, {"xent": loss, "aux_loss": aux}
+
+    def prefill(self, params, tokens, max_len, patch_embeds=None):
+        x = self._embed_inputs(params, tokens)
+        positions = jnp.arange(x.shape[1])[None, :]
+        cache = self.init_cache(tokens.shape[0], max_len)
+        x, cache, _ = self._run_layers(x, params, positions, cache, None,
+                                       "prefill")
+        x = L.apply_norm(x, params["final_norm"], self.cfg)
+        logits = C.lm_logits(x[:, -1:], params["embed"], self.cfg, self.dist)
+        return logits, cache, jnp.full((), x.shape[1], jnp.int32)
+
+    def decode(self, params, cache, tokens, length):
+        x = self._embed_inputs(params, tokens)
+        x, cache, _ = self._run_layers(x, params, None, cache, length,
+                                       "decode")
+        x = L.apply_norm(x, params["final_norm"], self.cfg)
+        logits = C.lm_logits(x, params["embed"], self.cfg, self.dist)
+        return logits, cache, length + 1
+
+    # -------------------------------------------------------------- caches
+
+    def cache_specs(self):
+        cfg = self.cfg
+        dp = self.dist.batch_axes()
+        kv = self.dist.kv_axes()
+        return {
+            "attn": {"k": P(None, dp, kv, None, None),
+                     "v": P(None, dp, kv, None, None)},
+            "mamba": {"ssm": P(None, None, dp, "model", None),
+                      "conv": P(None, None, dp, None, "model")},
+        }
+
+    def init_cache(self, batch, max_len, extra=0):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        di = cfg.mamba.expand * cfg.d_model
+        npd, nm = self.n_periods, self.n_mamba
+        return {
+            "attn": {
+                "k": jnp.zeros((npd, batch, max_len, cfg.n_kv_heads, hd),
+                               self.dtype),
+                "v": jnp.zeros((npd, batch, max_len, cfg.n_kv_heads, hd),
+                               self.dtype),
+            },
+            "mamba": {
+                "ssm": jnp.zeros((npd, nm, batch, di, cfg.mamba.d_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((npd, nm, batch, cfg.mamba.d_conv - 1, di),
+                                  self.dtype),
+            },
+        }

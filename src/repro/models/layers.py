@@ -1,0 +1,146 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, initializers.
+
+Pure-functional style: every module is an ``init_*`` returning a params
+pytree plus an ``apply`` function.  Params are stored in the config dtype
+(bf16 by default); numerically sensitive reductions run in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def dense_init(rng, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_rng, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_rng, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def split_tree(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_norm(cfg, dtype):
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def rmsnorm(x, params, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, params, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, params, cfg):
+    if cfg.norm == "layernorm":
+        return layernorm(x, params, cfg.norm_eps)
+    return rmsnorm(x, params, cfg.norm_eps)
+
+
+def head_rmsnorm(x, eps=1e-6):
+    """Parameter-free per-head RMS norm (qk_norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+
+
+def init_mlp(rng, d_model, d_ff, act, dtype):
+    r = split_tree(rng, 3)
+    p = {"down": dense_init(r[2], (d_ff, d_model), dtype)}
+    if act in ("silu", "geglu"):
+        p["gate"] = dense_init(r[0], (d_model, d_ff), dtype)
+        p["up"] = dense_init(r[1], (d_model, d_ff), dtype)
+    else:
+        p["up"] = dense_init(r[1], (d_model, d_ff), dtype)
+    return p
+
+
+def apply_mlp(x, p, act):
+    if "gate" in p:
+        fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+        h = fn(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (supports per-layer theta as a traced scalar)
+
+
+def rope_freqs(head_dim, theta):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)         # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq) int32.
+
+    ``theta`` may be a python float or a traced scalar (per-layer theta for
+    gemma3 local/global interleave).
+    """
+    head_dim = x.shape[-1]
+    theta = jnp.asarray(theta, jnp.float32)
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    inv = theta ** (-exponent)                            # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv   # (..., s, hd/2)
+    angles = angles[..., None, :]                         # (..., s, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos, d_model):
+    pos = np.arange(n_pos)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d_model)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+def softmax_xent(logits, labels, mask=None):
+    """logits (..., V) f32-upcast cross entropy; labels int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

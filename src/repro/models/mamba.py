@@ -1,0 +1,86 @@
+"""Mamba (selective SSM) mixer layer — used standalone and inside Jamba.
+
+TP layout: d_inner sharded over `model` (conv + scan are per-channel local);
+x_proj/dt_proj keep B,C,dt small; out_proj row-sharded -> one all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan import ops as scan_ops
+from repro.models import layers as L
+
+
+def _dims(cfg):
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    dtr = m.dt_rank or cfg.d_model // 16
+    return m, di, dtr
+
+
+def init_mamba(rng, cfg, dtype):
+    m, di, dtr = _dims(cfg)
+    r = L.split_tree(rng, 6)
+    return {
+        "in_proj": L.dense_init(r[0], (cfg.d_model, 2 * di), dtype),
+        "conv_w": L.dense_init(r[1], (m.d_conv, di), dtype, fan_in=m.d_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.dense_init(r[2], (di, dtr + 2 * m.d_state), dtype),
+        "dt_proj": L.dense_init(r[3], (dtr, di), dtype, fan_in=dtr),
+        "dt_bias": jnp.full((di,), -4.0, dtype),   # softplus(-4) ~ 0.018
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (di, m.d_state))
+        ).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(r[4], (di, cfg.d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x (b,s,di); w (K,di) depthwise. Returns y, new_conv_state (b,K-1,di)."""
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else conv_state
+    return y + b, new_state
+
+
+def apply_mamba(x, p, cfg, state=None):
+    """x (b,s,d). state = {'ssm': (b,di,N), 'conv': (b,K-1,di)} or None.
+    Returns y, new_state."""
+    m, di, dtr = _dims(cfg)
+    b, s, _ = x.shape
+    if state is None:
+        state = init_state(cfg, b)
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"],
+                                  state["conv"])
+    xc = jax.nn.silu(xc)
+    proj = xc @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dtr] @ p["dt_proj"]
+                         + p["dt_bias"].astype(jnp.float32))
+    B = proj[..., dtr:dtr + m.d_state]
+    C = proj[..., dtr + m.d_state:]
+    A = -jnp.exp(p["A_log"])
+    if s == 1:
+        y, ssm = scan_ops.selective_scan_step(
+            xc[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], p["D"], state["ssm"])
+        y = y[:, None]
+    else:
+        y, ssm = scan_ops.selective_scan(xc, dt, A, B, C, p["D"],
+                                         state["ssm"])
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], {"ssm": ssm, "conv": conv_state}
+
+
+def init_state(cfg, batch):
+    m, di, _ = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), jnp.bfloat16
+                          if cfg.dtype == "bfloat16" else jnp.float32),
+    }

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts: top-k routing with capacity, EP over the `model` axis.
+
+Distributed layout (DESIGN.md §5): activations entering the FFN are
+replicated over `model`, experts are sharded over `model`.  Each model rank
+locally gathers the tokens routed to *its* experts (no dispatch all-to-all —
+the activations are already present), runs its experts, scatters weighted
+outputs into a token-indexed buffer and psums over `model`.  Communication
+per MoE layer = one activation-sized all-reduce, identical in volume to a
+Megatron FFN all-reduce and robust to any (n_experts, mesh) divisibility.
+
+Two router flavours:
+  * "softmax_topk" — Mixtral: softmax over the selected top-k logits.
+  * "sigmoid"      — DeepSeek-V3: sigmoid scores, normalize over selected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def init_moe(rng, cfg, dtype):
+    m, d = cfg.moe, cfg.d_model
+    r = L.split_tree(rng, 4)
+    p = {
+        "router": L.dense_init(r[0], (d, m.n_experts), dtype, fan_in=d),
+        # stacked expert weights: (E, d, d_e) / (E, d_e, d)
+        "gate": L.dense_init(r[1], (m.n_experts, d, m.d_expert), dtype,
+                             fan_in=d),
+        "up": L.dense_init(r[2], (m.n_experts, d, m.d_expert), dtype,
+                           fan_in=d),
+        "down": L.dense_init(r[3], (m.n_experts, m.d_expert, d), dtype,
+                             fan_in=m.d_expert),
+    }
+    if m.n_shared_experts:
+        rs = L.split_tree(jax.random.fold_in(rng, 7), 3)
+        ff = m.d_expert * m.n_shared_experts
+        p["shared"] = {
+            "gate": L.dense_init(rs[0], (d, ff), dtype),
+            "up": L.dense_init(rs[1], (d, ff), dtype),
+            "down": L.dense_init(rs[2], (ff, d), dtype),
+        }
+    return p
+
+
+def route(x_flat, router_w, m, router_mode):
+    """x_flat (T,d) -> (expert_idx (T,k), gates (T,k), aux_loss)."""
+    logits = (x_flat @ router_w).astype(jnp.float32)          # (T,E)
+    if router_mode == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        gates, idx = jax.lax.top_k(scores, m.top_k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    else:
+        top_logits, idx = jax.lax.top_k(logits, m.top_k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+    # load-balancing aux loss (Switch/GShard style)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T,E)
+    frac_tokens = jnp.zeros((m.n_experts,), jnp.float32).at[
+        idx.reshape(-1)].add(1.0) / (idx.size)
+    frac_probs = probs.mean(axis=0)
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs) * m.aux_loss_coef
+    return idx, gates.astype(jnp.float32), aux
+
+
+def _capacity(n_tokens, m):
+    c = int(np.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def apply_moe(x, p, cfg, *, router_mode="softmax_topk", ep_axis=None,
+              tp_axis=None, e_offset=None, combine_axes=None,
+              combine_dtype=None, shared_scale=1.0):
+    """x (b,s,d) -> (y (b,s,d), aux_loss).
+
+    Sharding modes (at most one active; both None for tests/single device):
+      * ``ep_axis``  — experts sharded over that mesh axis inside shard_map:
+        ``p['gate']`` et al. hold the local expert slice; combine psums over
+        the axis.  Requires n_experts % axis_size == 0 (DeepSeek, Jamba).
+      * ``tp_axis``  — every rank holds all experts but 1/tp of each expert's
+        hidden dim (Megatron-style column/row split).  Used when n_experts
+        doesn't divide the axis (Mixtral 8e on model=16).
+      * full EP (perf iter: deepseek train/decode) — caller passes an
+        explicit ``e_offset`` (experts sharded over several axes) and
+        ``combine_axes``; ``combine_dtype`` (e.g. bf16) halves the combine
+        psum bytes (each token sums only top_k+shared contributions, so
+        bf16 rounding is benign).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    T = b * s
+    xf = x.reshape(T, d)
+    idx, gates, aux = route(xf, p["router"], m, router_mode)
+
+    n_local = p["gate"].shape[0]                 # E or E/ep inside shard_map
+    if e_offset is None:
+        e_offset = 0
+        if ep_axis is not None:
+            e_offset = jax.lax.axis_index(ep_axis) * n_local
+            aux = jax.lax.pmean(aux, ep_axis)
+    C = _capacity(T, m)
+
+    # position of each (token, k) assignment within its expert queue
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot             # (T*k, E)
+    pos = pos_in_e.max(axis=-1) - 1                            # (T*k,)
+    local_e = flat_e - e_offset
+    valid = (pos < C) & (local_e >= 0) & (local_e < n_local)
+    slot = jnp.where(valid, local_e * C + pos, n_local * C)    # overflow slot
+
+    # dispatch: copy tokens into (n_local*C (+1 trash), d)
+    buf = jnp.zeros((n_local * C + 1, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
+    buf = buf.at[slot].set(xf[tok_idx], mode="drop",
+                           unique_indices=False)
+    ebuf = buf[:n_local * C].reshape(n_local, C, d)
+
+    # expert MLPs (E_local, C, d); under tp_axis the f dim is a local slice
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    pf = dict(preferred_element_type=jnp.float32)   # bf16 in, f32 out: the
+    # MXU accumulates in f32 without materializing converted weights
+    h = act(jnp.einsum("ecd,edf->ecf", ebuf, p["gate"], **pf)) * \
+        jnp.einsum("ecd,edf->ecf", ebuf, p["up"], **pf)
+    h = h.astype(ebuf.dtype)
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["down"], **pf)       # (E_l, C, d)
+
+    # combine: weighted scatter-add back to tokens
+    y_flat = y_e.reshape(n_local * C, d)
+    y_flat = jnp.concatenate([y_flat, jnp.zeros((1, d), y_flat.dtype)])
+    gathered = y_flat[slot]                                    # (T*k, d)
+    w = (gates.reshape(-1) * valid).astype(jnp.float32)
+    y = jnp.zeros((T, d), jnp.float32).at[tok_idx].add(
+        gathered.astype(jnp.float32) * w[:, None])
+
+    # shared experts contribute a partial sum under tp/ep sharding of f;
+    # shared_scale compensates for replicated computation when the
+    # combine psum spans an axis the shared expert doesn't shard (full EP
+    # psums over `data` while shared weights shard only `model`)
+    if m.n_shared_experts:
+        y = y + (L.apply_mlp(xf, p["shared"], cfg.act).astype(jnp.float32)
+                 * shared_scale)
+
+    axis = combine_axes or ep_axis or tp_axis
+    if axis is not None:
+        if combine_dtype is not None:
+            y = y.astype(combine_dtype)
+        y = jax.lax.psum(y, axis)                # single combine all-reduce
+    return y.astype(x.dtype).reshape(b, s, d), aux

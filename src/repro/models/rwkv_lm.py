@@ -1,0 +1,123 @@
+"""RWKV6 LM assembly (attention-free; O(1)-state decode).
+
+The per-layer state (WKV matrix + token-shift carries) plays the role the
+KV cache plays for transformers — it is what a *hot* rFaaS executor keeps
+resident between invocations.  Layers are homogeneous -> one lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution.context import MeshContext, NULL_CTX
+from repro.models import common as C
+from repro.models import layers as L
+from repro.models import rwkv6 as R
+
+
+class RWKVLM:
+    def __init__(self, cfg, dist: Optional[MeshContext] = None):
+        self.cfg = cfg
+        self.dist = dist or NULL_CTX
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------ init
+
+    def _init_layer(self, rng):
+        cfg, dt = self.cfg, self.dtype
+        r = L.split_tree(rng, 2)
+        return {
+            "ln1": L.init_norm(cfg, dt),
+            "ln2": L.init_norm(cfg, dt),
+            "tm": R.init_time_mix(r[0], cfg, dt),
+            "cm": R.init_channel_mix(r[1], cfg, dt),
+        }
+
+    def init(self, rng):
+        cfg = self.cfg
+        rngs = jax.random.split(jax.random.fold_in(rng, 31), cfg.n_layers)
+        return {
+            "embed": C.init_embedding(jax.random.fold_in(rng, 1), cfg,
+                                      self.dtype),
+            "ln0": L.init_norm(cfg, self.dtype),
+            "layers": jax.vmap(self._init_layer)(rngs),
+            "final_norm": L.init_norm(cfg, self.dtype),
+        }
+
+    # --------------------------------------------------------------- forward
+
+    def _layer(self, x, lp, state):
+        cfg = self.cfg
+        h = L.apply_norm(x, lp["ln1"], cfg)
+        y, (wkv, tm_x) = R.time_mix(h, lp["tm"], cfg, state["wkv"],
+                                    state["tm_x"])
+        x = x + y
+        h = L.apply_norm(x, lp["ln2"], cfg)
+        y, cm_x = R.channel_mix(h, lp["cm"], state["cm_x"])
+        x = x + y
+        return x, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+
+    def _run_layers(self, x, params, cache, remat=False):
+        def body(carry, xs):
+            lp, st = xs
+            h, new_st = self._layer(carry, lp, st)
+            return h, new_st
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        return x, new_cache
+
+    def _embed(self, params, tokens):
+        x = C.embed(tokens, params["embed"], self.cfg, self.dist)
+        return L.apply_norm(x, params["ln0"], self.cfg)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        cache = self.init_cache(x.shape[0], 0)
+        x, _ = self._run_layers(x, params, cache, remat=True)
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        logits = C.lm_logits(x, params["embed"], cfg, self.dist)
+        loss = C.next_token_loss(logits, batch["labels"],
+                                 batch.get("loss_mask"))
+        return loss, {"xent": loss, "aux_loss": jnp.float32(0.0)}
+
+    def prefill(self, params, tokens, max_len, patch_embeds=None):
+        del max_len, patch_embeds          # O(1) state: no cache sizing
+        x = self._embed(params, tokens)
+        cache = self.init_cache(tokens.shape[0], 0)
+        x, cache = self._run_layers(x, params, cache)
+        x = L.apply_norm(x, params["final_norm"], self.cfg)
+        logits = C.lm_logits(x[:, -1:], params["embed"], self.cfg, self.dist)
+        return logits, cache, jnp.full((), tokens.shape[1], jnp.int32)
+
+    def decode(self, params, cache, tokens, length):
+        x = self._embed(params, tokens)
+        x, cache = self._run_layers(x, params, cache)
+        x = L.apply_norm(x, params["final_norm"], self.cfg)
+        logits = C.lm_logits(x, params["embed"], self.cfg, self.dist)
+        return logits, cache, length + 1
+
+    # --------------------------------------------------------------- caches
+
+    def cache_specs(self):
+        dp = self.dist.batch_axes()
+        return {"wkv": P(None, dp, "model", None, None),
+                "tm_x": P(None, dp, "model"),
+                "cm_x": P(None, dp, "model")}
+
+    def init_cache(self, batch, max_len, extra=0):
+        del max_len, extra
+        cfg = self.cfg
+        hd = cfg.rwkv.head_dim
+        H = cfg.d_model // hd
+        Ln = cfg.n_layers
+        return {
+            "wkv": jnp.zeros((Ln, batch, H, hd, hd), jnp.float32),
+            "tm_x": jnp.zeros((Ln, batch, cfg.d_model), self.dtype),
+            "cm_x": jnp.zeros((Ln, batch, cfg.d_model), self.dtype),
+        }

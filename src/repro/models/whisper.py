@@ -1,0 +1,229 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv mel frontend is a STUB: the model consumes
+precomputed frame embeddings (b, n_frames, d_model).  Sinusoidal positions
+(valid for arbitrary length — the assigned decode shapes exceed Whisper's
+448-token decoder context; documented in DESIGN.md), pre-LN layers,
+plain-GELU MLPs, LayerNorm, no rope.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution.context import MeshContext, NULL_CTX
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import layers as L
+
+
+class WhisperLM:
+    def __init__(self, cfg, dist: Optional[MeshContext] = None):
+        self.cfg = cfg
+        self.dist = dist or NULL_CTX
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------ init
+
+    def _init_enc_layer(self, rng):
+        cfg, dt = self.cfg, self.dtype
+        r = L.split_tree(rng, 2)
+        return {"ln1": L.init_norm(cfg, dt),
+                "attn": A.init_attention(r[0], cfg, dt),
+                "ln2": L.init_norm(cfg, dt),
+                "mlp": L.init_mlp(r[1], cfg.d_model, cfg.d_ff, cfg.act, dt)}
+
+    def _init_dec_layer(self, rng):
+        cfg, dt = self.cfg, self.dtype
+        r = L.split_tree(rng, 3)
+        return {"ln1": L.init_norm(cfg, dt),
+                "attn": A.init_attention(r[0], cfg, dt),
+                "ln_x": L.init_norm(cfg, dt),
+                "xattn": A.init_attention(r[1], cfg, dt, cross=True),
+                "ln2": L.init_norm(cfg, dt),
+                "mlp": L.init_mlp(r[2], cfg.d_model, cfg.d_ff, cfg.act, dt)}
+
+    def init(self, rng):
+        cfg = self.cfg
+        enc_rngs = jax.random.split(jax.random.fold_in(rng, 41),
+                                    cfg.n_enc_layers)
+        dec_rngs = jax.random.split(jax.random.fold_in(rng, 43),
+                                    cfg.n_layers)
+        return {
+            "embed": C.init_embedding(jax.random.fold_in(rng, 1), cfg,
+                                      self.dtype),
+            "enc": jax.vmap(self._init_enc_layer)(enc_rngs),
+            "enc_ln": L.init_norm(cfg, self.dtype),
+            "dec": jax.vmap(self._init_dec_layer)(dec_rngs),
+            "final_norm": L.init_norm(cfg, self.dtype),
+        }
+
+    # --------------------------------------------------------------- encoder
+
+    def encode(self, params, frames):
+        """frames (b, S_enc, d) — precomputed conv-frontend output."""
+        cfg, dist = self.cfg, self.dist
+        dp = dist.batch_axes()
+        pos = L.sinusoidal_positions(frames.shape[1], cfg.d_model)
+        x = (frames.astype(self.dtype)
+             + pos[None].astype(self.dtype))
+        x = dist.wsc(x, dp, None, None)
+
+        def body(h, lp):
+            z = L.apply_norm(h, lp["ln1"], cfg)
+            q, k, v = A.project_qkv(z, lp["attn"], cfg)
+            o = A.flash_attention(q, k, v, causal=False)
+            h = h + o.reshape(h.shape) @ lp["attn"]["wo"]
+            z = L.apply_norm(h, lp["ln2"], cfg)
+            return h + L.apply_mlp(z, lp["mlp"], cfg.act), None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return L.apply_norm(x, params["enc_ln"], cfg)
+
+    # --------------------------------------------------------------- decoder
+
+    def _dec_layer_full(self, x, lp, enc, cache_entry):
+        """Train/prefill decoder layer.  Returns (x, new_cache_entry)."""
+        cfg, dist = self.cfg, self.dist
+        dp = dist.batch_axes()
+        b, s, _ = x.shape
+        z = L.apply_norm(x, lp["ln1"], cfg)
+        q, k, v = A.project_qkv(z, lp["attn"], cfg)
+        new_cache = None
+        if cache_entry is not None:
+            S = cache_entry["k"].shape[1]
+            pad = S - k.shape[1]
+            kv_ax = dist.kv_axes()
+            new_cache = {
+                "k": dist.wsc(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                              dp, kv_ax, None, None),
+                "v": dist.wsc(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                              dp, kv_ax, None, None),
+            }
+        o = A.flash_attention(q, k, v, causal=True)
+        x = x + o.reshape(b, s, -1) @ lp["attn"]["wo"]
+
+        z = L.apply_norm(x, lp["ln_x"], cfg)
+        q2, k2, v2 = A.project_qkv(z, lp["xattn"], cfg, kv_x=enc)
+        if cache_entry is not None:
+            new_cache["ck"] = dist.wsc(k2, dp, None, None, None)
+            new_cache["cv"] = dist.wsc(v2, dp, None, None, None)
+        o2 = A.flash_attention(q2, k2, v2, causal=False)
+        x = x + o2.reshape(b, s, -1) @ lp["xattn"]["wo"]
+
+        z = L.apply_norm(x, lp["ln2"], cfg)
+        return x + L.apply_mlp(z, lp["mlp"], cfg.act), new_cache
+
+    def _dec_layer_decode(self, x, lp, cache_entry, length):
+        cfg, dist = self.cfg, self.dist
+        dp = dist.batch_axes()
+        b = x.shape[0]
+        z = L.apply_norm(x, lp["ln1"], cfg)
+        q, k, v = A.project_qkv(z, lp["attn"], cfg)
+        k_c = jax.lax.dynamic_update_slice(cache_entry["k"], k,
+                                           (0, length, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(cache_entry["v"], v,
+                                           (0, length, 0, 0))
+        kv_ax = dist.kv_axes()
+        k_c = dist.wsc(k_c, dp, kv_ax, None, None)
+        v_c = dist.wsc(v_c, dp, kv_ax, None, None)
+        o = A.decode_attention(q, k_c, v_c, length + 1)
+        x = x + o.reshape(b, 1, -1) @ lp["attn"]["wo"]
+
+        z = L.apply_norm(x, lp["ln_x"], cfg)
+        q2 = (z @ lp["xattn"]["wq"]).reshape(
+            b, 1, cfg.n_heads, cfg.resolved_head_dim)
+        S_enc = cache_entry["ck"].shape[1]
+        o2 = A.decode_attention(q2, cache_entry["ck"], cache_entry["cv"],
+                                S_enc)
+        x = x + o2.reshape(b, 1, -1) @ lp["xattn"]["wo"]
+
+        z = L.apply_norm(x, lp["ln2"], cfg)
+        x = x + L.apply_mlp(z, lp["mlp"], cfg.act)
+        new_cache = {"k": k_c, "v": v_c,
+                     "ck": cache_entry["ck"], "cv": cache_entry["cv"]}
+        return x, new_cache
+
+    def _embed_tokens(self, params, tokens, offset=0):
+        x = C.embed(tokens, params["embed"], self.cfg, self.dist)
+        pos = L.sinusoidal_positions(tokens.shape[1] + offset,
+                                     self.cfg.d_model)[offset:]
+        return x + pos[None].astype(x.dtype)
+
+    # -------------------------------------------------------------- public
+
+    def loss(self, params, batch):
+        """batch: frames (b,S_enc,d), tokens (b,s), labels (b,s)."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        x = self._embed_tokens(params, batch["tokens"])
+
+        def body(h, lp):
+            h, _ = self._dec_layer_full(h, lp, enc, None)
+            return h, None
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        logits = C.lm_logits(x, params["embed"], cfg, self.dist)
+        loss = C.next_token_loss(logits, batch["labels"],
+                                 batch.get("loss_mask"))
+        return loss, {"xent": loss, "aux_loss": jnp.float32(0.0)}
+
+    def prefill(self, params, tokens, max_len, frames=None,
+                patch_embeds=None):
+        cfg = self.cfg
+        frames = frames if frames is not None else patch_embeds
+        enc = self.encode(params, frames)
+        x = self._embed_tokens(params, tokens)
+        cache = self.init_cache(tokens.shape[0], max_len,
+                                s_enc=enc.shape[1])
+
+        def body(h, xs):
+            lp, ce = xs
+            h, new_ce = self._dec_layer_full(h, lp, enc, ce)
+            return h, new_ce
+
+        x, cache = jax.lax.scan(body, x, (params["dec"], cache))
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        logits = C.lm_logits(x[:, -1:], params["embed"], cfg, self.dist)
+        return logits, cache, jnp.full((), tokens.shape[1], jnp.int32)
+
+    def decode(self, params, cache, tokens, length):
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)   # position 0 of a fresh sin
+
+        def body(h, xs):
+            lp, ce = xs
+            h, new_ce = self._dec_layer_decode(h, lp, ce, length)
+            return h, new_ce
+
+        x, cache = jax.lax.scan(body, x, (params["dec"], cache))
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        logits = C.lm_logits(x, params["embed"], cfg, self.dist)
+        return logits, cache, length + 1
+
+    # --------------------------------------------------------------- caches
+
+    def cache_specs(self):
+        dp = self.dist.batch_axes()
+        kv = self.dist.kv_axes()
+        return {"k": P(None, dp, kv, None, None),
+                "v": P(None, dp, kv, None, None),
+                "ck": P(None, dp, None, None, None),
+                "cv": P(None, dp, None, None, None)}
+
+    def init_cache(self, batch, max_len, s_enc=None, extra=0):
+        cfg = self.cfg
+        from repro.configs.whisper_tiny import N_AUDIO_FRAMES
+        s_enc = s_enc or N_AUDIO_FRAMES
+        hd = cfg.resolved_head_dim
+        Ln = cfg.n_layers
+        z = lambda *s: jnp.zeros(s, self.dtype)
+        return {"k": z(Ln, batch, max_len + extra, cfg.n_kv_heads, hd),
+                "v": z(Ln, batch, max_len + extra, cfg.n_kv_heads, hd),
+                "ck": z(Ln, batch, s_enc, cfg.n_kv_heads, hd),
+                "cv": z(Ln, batch, s_enc, cfg.n_kv_heads, hd)}

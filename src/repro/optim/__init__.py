@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.optim.schedules import cosine, linear, make_schedule, wsd
+from repro.optim import quant
+
+__all__ = ["AdamW", "AdamWConfig", "cosine", "linear", "make_schedule",
+           "wsd", "quant"]

@@ -1,0 +1,92 @@
+"""AdamW with global-norm clipping; moments optionally int8-quantized.
+
+Pure functions over pytrees (no optax dependency).  With
+``quantized=True`` the m/v moments are stored as block-wise int8
+(optim.quant) — 2 bytes/param of optimizer state instead of 8, the trick
+that lets the 671B/398B train cells fit HBM (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import quant
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantized: bool = False
+    flat_moments: bool = False      # original (baseline) QTensor layout
+
+
+class AdamW:
+    def __init__(self, schedule_fn, cfg: AdamWConfig = AdamWConfig()):
+        self.schedule = schedule_fn
+        self.cfg = cfg
+
+    def init(self, params):
+        qfn = (quant.quantize_flat if self.cfg.flat_moments
+               else quant.quantize)
+
+        def zero_like(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return qfn(z) if self.cfg.quantized else z
+        return {
+            "m": jax.tree.map(zero_like, params),
+            "v": jax.tree.map(zero_like, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _load(self, t):
+        return quant.dequantize(t) if self.cfg.quantized else t
+
+    def _store(self, t):
+        if not self.cfg.quantized:
+            return t
+        return (quant.quantize_flat(t) if self.cfg.flat_moments
+                else quant.quantize(t))
+
+    def update(self, grads, state, params):
+        c = self.cfg
+        step = state["step"] + 1
+        lr = self.schedule(step)
+
+        # global-norm clip (f32 accumulation)
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+        b1c = 1 - c.b1 ** step.astype(jnp.float32)
+        b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m_q, v_q):
+            g = g.astype(jnp.float32) * scale
+            m = c.b1 * self._load(m_q) + (1 - c.b1) * g
+            v = c.b2 * self._load(v_q) + (1 - c.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            upd = mh / (jnp.sqrt(vh) + c.eps)
+            if p.ndim >= 2:                      # decay matrices only
+                upd = upd + c.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, self._store(m), self._store(v)
+
+        is_q = quant.is_qtensor
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"], is_leaf=is_q)
+        flat_v = jax.tree.leaves(state["v"], is_leaf=is_q)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

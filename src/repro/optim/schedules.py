@@ -1,0 +1,33 @@
+"""LR schedules: cosine, linear, and WSD (warmup-stable-decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr, warmup, total, final_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    decay = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * decay)
+
+
+def wsd(step, *, peak_lr, warmup, stable, decay, final_frac=0.01):
+    """MiniCPM warmup-stable-decay: linear warmup -> flat -> exp decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0, 1)
+    dec = peak_lr * jnp.exp(jnp.log(final_frac) * t)
+    return jnp.where(step < warmup, warm,
+                     jnp.where(step < warmup + stable, peak_lr, dec))
+
+
+def linear(step, *, peak_lr, warmup, total):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    return jnp.where(step < warmup, warm, peak_lr * (1 - prog))
+
+
+def make_schedule(name, **kw):
+    return {"cosine": cosine, "wsd": wsd, "linear": linear}[name], kw

@@ -1,0 +1,3 @@
+from repro.serving.engine import ModelServer, ServeEngine, GenRequest
+
+__all__ = ["ModelServer", "ServeEngine", "GenRequest"]

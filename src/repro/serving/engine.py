@@ -1,0 +1,204 @@
+"""Serving engine: model steps as rFaaS functions (DESIGN.md §3).
+
+``ModelServer`` is the executor-side state: compiled prefill/decode steps
+plus per-session KV caches that stay RESIDENT between invocations — the
+TPU-native reading of the paper's hot invocations (the Jacobi use-case's
+"cache the system matrix in the warm sandbox" is exactly KV residency:
+the client ships only the new tokens, never the cache).  Donated cache
+buffers make the decode step zero-copy on the executor.
+
+``ServeEngine`` is the client: it leases workers through the Invoker,
+pushes the model function library, and drives wave-scheduled batched
+generation with per-request latency accounting and optional straggler
+backup requests for stateless functions.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FunctionLibrary, Invoker
+
+_session_ids = itertools.count(1)
+
+
+class ModelServer:
+    """Executor-side function bundle for one model."""
+
+    def __init__(self, model, params, *, max_len: int = 256,
+                 jit_steps: bool = True):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._sessions: Dict[int, tuple] = {}       # sid -> (cache, length)
+        self._lock = threading.Lock()
+        if jit_steps:
+            self._prefill_fn = jax.jit(
+                lambda p, t: model.prefill(p, t, self.max_len))
+            self._decode_fn = jax.jit(model.decode, donate_argnums=(1,))
+        else:
+            self._prefill_fn = lambda p, t: model.prefill(p, t,
+                                                          self.max_len)
+            self._decode_fn = model.decode
+
+    # ------------------------------------------------- executor functions
+    def prefill(self, payload: dict) -> dict:
+        """payload: {"tokens": (b, s) int}.  Creates a resident session;
+        the cache NEVER travels back to the client (zero-copy residency)."""
+        tokens = jnp.asarray(payload["tokens"])
+        logits, cache, length = self._prefill_fn(self.params, tokens)
+        sid = next(_session_ids)
+        with self._lock:
+            self._sessions[sid] = (cache, length)
+        next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                              np.int32)
+        return {"sid": sid, "next_token": next_tok}
+
+    def decode(self, payload: dict) -> dict:
+        """payload: {"sid": int, "tokens": (b, 1) int} -> next token.
+        Hot path: compiled step + donated resident cache."""
+        sid = int(payload["sid"])
+        with self._lock:
+            cache, length = self._sessions.pop(sid)
+        tokens = jnp.asarray(payload["tokens"])
+        logits, cache, length = self._decode_fn(self.params, cache, tokens,
+                                                length)
+        with self._lock:
+            self._sessions[sid] = (cache, length)
+        next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        return {"sid": sid, "next_token": next_tok}
+
+    def close_session(self, payload: dict) -> dict:
+        with self._lock:
+            self._sessions.pop(int(payload["sid"]), None)
+        return {"ok": True}
+
+    def make_library(self, name: str = "llm") -> FunctionLibrary:
+        lib = FunctionLibrary(name, code_size=1 << 20)
+        lib.register("prefill", self.prefill)
+        lib.register("decode", self.decode)
+        lib.register("close_session", self.close_session)
+        return lib
+
+
+@dataclass
+class GenRequest:
+    prompt: np.ndarray                       # (s,) int32
+    max_new_tokens: int = 16
+    request_id: int = 0
+    t_enqueue: float = 0.0
+    tokens_out: List[int] = field(default_factory=list)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (None if self.t_first_token is None
+                else self.t_first_token - self.t_enqueue)
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_enqueue
+
+
+class ServeEngine:
+    """Client-side wave-batched generation over leased rFaaS workers."""
+
+    def __init__(self, invoker: Invoker, *, batch_size: int = 4,
+                 eos_token: int = -1):
+        self.invoker = invoker
+        self.batch_size = batch_size
+        self.eos_token = eos_token
+        self._queue: List[GenRequest] = []
+        self._rid = itertools.count(1)
+        self.completed: List[GenRequest] = []
+
+    def enqueue(self, prompt, max_new_tokens: int = 16) -> GenRequest:
+        req = GenRequest(np.asarray(prompt, np.int32), max_new_tokens,
+                         next(self._rid), time.monotonic())
+        self._queue.append(req)
+        return req
+
+    def run(self) -> List[GenRequest]:
+        """Drain the queue in waves of ``batch_size``."""
+        while self._queue:
+            wave, self._queue = (self._queue[:self.batch_size],
+                                 self._queue[self.batch_size:])
+            self._run_wave(wave)
+        return self.completed
+
+    def _run_wave(self, wave: List[GenRequest]):
+        # left-pad prompts to a common length with token 0
+        s = max(len(r.prompt) for r in wave)
+        toks = np.zeros((len(wave), s), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, s - len(r.prompt):] = r.prompt
+        out = self.invoker.invoke("prefill", {"tokens": toks})
+        sid = out["sid"]
+        nxt = out["next_token"]
+        now = time.monotonic()
+        for i, r in enumerate(wave):
+            r.tokens_out.append(int(nxt[i]))
+            r.t_first_token = now
+        max_new = max(r.max_new_tokens for r in wave)
+        for step in range(1, max_new):
+            out = self.invoker.invoke(
+                "decode", {"sid": sid, "tokens": nxt[:, None]})
+            nxt = out["next_token"]
+            now = time.monotonic()
+            for i, r in enumerate(wave):
+                if len(r.tokens_out) < r.max_new_tokens and \
+                        (not r.tokens_out
+                         or r.tokens_out[-1] != self.eos_token):
+                    r.tokens_out.append(int(nxt[i]))
+                    if len(r.tokens_out) >= r.max_new_tokens:
+                        r.t_done = now
+        now = time.monotonic()
+        for r in wave:
+            if r.t_done is None:
+                r.t_done = now
+        self.invoker.invoke("close_session", {"sid": sid})
+        self.completed.extend(wave)
+
+    # ------------------------------------------------------------ metrics
+    def metrics(self) -> dict:
+        lats = [r.latency for r in self.completed if r.latency is not None]
+        ttfts = [r.ttft for r in self.completed if r.ttft is not None]
+        toks = sum(len(r.tokens_out) for r in self.completed)
+        span = (max(r.t_done for r in self.completed)
+                - min(r.t_enqueue for r in self.completed)
+                if self.completed else 0.0)
+        return {
+            "requests": len(self.completed),
+            "tokens": toks,
+            "throughput_tok_s": toks / span if span else 0.0,
+            "p50_latency_s": float(np.median(lats)) if lats else 0.0,
+            "p99_latency_s": float(np.percentile(lats, 99)) if lats else 0.0,
+            "p50_ttft_s": float(np.median(ttfts)) if ttfts else 0.0,
+        }
+
+
+def backup_submit(invoker: Invoker, fn_name: str, payload,
+                  deadline_s: float):
+    """Straggler mitigation for STATELESS functions: duplicate dispatch
+    after a deadline, first result wins (DESIGN.md §9)."""
+    f1 = invoker.submit(fn_name, payload)
+    t0 = time.monotonic()
+    while not f1.done() and time.monotonic() - t0 < deadline_s:
+        time.sleep(deadline_s / 50)
+    if f1.done():
+        return f1.get(0.0), False
+    f2 = invoker.submit(fn_name, payload)          # backup request
+    while True:
+        if f1.done():
+            return f1.get(0.0), False
+        if f2.done():
+            return f2.get(0.0), True
+        time.sleep(deadline_s / 50)

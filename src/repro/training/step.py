@@ -1,0 +1,132 @@
+"""Train-step factory: remat'ed value_and_grad + microbatch gradient
+accumulation + AdamW update, with shardings derived from the partition
+rules (distribution.sharding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distribution import sharding as S
+from repro.optim import quant
+
+
+def make_train_step(model, optimizer, *, microbatches: int = 1,
+                    accum_dtype=jnp.float32, grad_specs=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``microbatches`` splits the (already DP-sharded) global
+    batch on the leading dim; grads are accumulated in ``accum_dtype``
+    (bf16 halves the grad buffer for the 100B+ cells).  ``grad_specs``
+    (perf iter: shard_grad_accum) constrains the accumulator to the param
+    sharding so each microbatch's cross-DP reduction lowers to a
+    reduce-scatter of the param shard instead of a full all-reduce."""
+    dist = model.dist
+
+    def constrain(g):
+        if grad_specs is None or not dist.active:
+            return g
+        return jax.tree.map(
+            lambda a, sp: jax.lax.with_sharding_constraint(
+                a, NamedSharding(dist.mesh, sp)), g, grad_specs)
+
+    def loss_fn(p, mb):
+        loss, metrics = model.loss(p, mb)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def resplit(x):
+                mb = x.reshape((microbatches, x.shape[0] // microbatches)
+                               + x.shape[1:])
+                if dist.active:
+                    dp = dist.batch_axes()
+                    mb = jax.lax.with_sharding_constraint(
+                        mb, NamedSharding(
+                            dist.mesh,
+                            P(None, dp, *([None] * (x.ndim - 1)))))
+                return mb
+
+            mbs = jax.tree.map(resplit, batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = constrain(jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g))
+                return (g_acc, l_acc + loss), None
+
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)),
+                                            mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {}
+
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        metrics = {**{k: v for k, v in metrics.items()
+                      if not isinstance(v, dict)},
+                   "loss": loss, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def train_state_shardings(model, params_shapes, opt_shapes):
+    """NamedShardings for (params, opt_state).  Quantized (QTensor) moment
+    leaves shard their block dim over `data` when divisible."""
+    dist = model.dist
+    pspecs = S.param_specs(model, params_shapes)
+    if not dist.active:
+        return pspecs, jax.tree.map(lambda _: None, opt_shapes,
+                                    is_leaf=quant.is_qtensor)
+
+    def named(spec):
+        return NamedSharding(dist.mesh, spec)
+
+    def moment_spec(shapes_leaf, pspec):
+        if isinstance(shapes_leaf, quant.QTensor) and \
+                shapes_leaf.q.ndim == 2 and len(shapes_leaf.shape) != 1:
+            # flat baseline layout: block dim over `data` when divisible
+            nblk = shapes_leaf.q.shape[0]
+            fsdp = dist.mesh.shape.get("data", 1)
+            ax = "data" if nblk % fsdp == 0 and nblk >= fsdp else None
+            return quant.QTensor(named(P(ax, None)), named(P(ax, None)),
+                                 shapes_leaf.shape)
+        if isinstance(shapes_leaf, quant.QTensor):
+            # shape-preserving blocks: mirror the param spec; the block
+            # dim inherits the param's last-dim sharding (see quant.py),
+            # unless the block count doesn't divide the axis (e.g. a
+            # 129280-vocab lm_head -> 505 blocks on model=16): then the
+            # block dim is replicated for that leaf only.
+            dims = tuple(pspec) + (None,) * (
+                len(shapes_leaf.shape) - len(tuple(pspec)))
+            last_ax = dims[-1] if dims else None
+            if last_ax is not None:
+                nblk = shapes_leaf.q.shape[-2]
+                axes = last_ax if isinstance(last_ax, tuple) else (last_ax,)
+                size = 1
+                for a in axes:
+                    size *= dist.mesh.shape[a]
+                if nblk % size:
+                    last_ax = None
+            blk = (P(*dims[:-1], last_ax, None) if dims
+                   else P(None, None))
+            return quant.QTensor(named(blk), named(blk),
+                                 shapes_leaf.shape)
+        return named(pspec)
+
+    opt_shardings = {
+        "m": jax.tree.map(moment_spec, opt_shapes["m"], pspecs,
+                          is_leaf=quant.is_qtensor),
+        "v": jax.tree.map(moment_spec, opt_shapes["v"], pspecs,
+                          is_leaf=quant.is_qtensor),
+        "step": named(P()),
+    }
+    return jax.tree.map(named, pspecs,
+                        is_leaf=lambda x: isinstance(x, P)), opt_shardings

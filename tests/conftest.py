@@ -1,0 +1,7 @@
+import os
+
+# Smoke tests / kernels tests run on the single real CPU device.  The
+# 512-device dry-run sets XLA_FLAGS itself in its own process (see
+# repro/launch/dryrun.py) — never here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")

@@ -1,0 +1,142 @@
+"""Invocation tiers, timelines, parallel dispatch, fault tolerance
+(paper §3.3-§3.5)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchSystem, ExecutorCrash, FunctionLibrary,
+                        Invoker, Ledger, ResourceManager, Tier,
+                        payload_bytes, write_time, DEFAULT_NET)
+from repro.core.perf_model import Sandbox, tier_overhead
+
+
+def make_stack(n_nodes=2, workers=2, hot_period=0.05, **kw):
+    ledger = Ledger()
+    rm = ResourceManager(n_replicas=2)
+    bs = BatchSystem(rm, ledger, n_nodes=n_nodes, workers_per_node=workers,
+                     hot_period=hot_period, **kw)
+    bs.release_idle()
+    lib = FunctionLibrary("t")
+    lib.register("echo", lambda x: x)
+    lib.register("square", lambda x: x * x)
+    lib.register("boom", lambda x: (_ for _ in ()).throw(
+        ExecutorCrash("deliberate")))
+    inv = Invoker("c", rm, lib, seed=0)
+    return ledger, rm, bs, lib, inv
+
+
+def test_hot_after_execution_warm_after_idle():
+    _, _, _, _, inv = make_stack(hot_period=0.05)
+    inv.allocate(1)
+    x = np.ones(16, np.float32)
+    f1 = inv.submit("echo", x, worker_hint=0)
+    f1.get()
+    assert f1.invocation.tier == Tier.WARM       # fresh worker: warm
+    f2 = inv.submit("echo", x, worker_hint=0)    # inside hot window
+    f2.get()
+    assert f2.invocation.tier == Tier.HOT
+    time.sleep(0.08)                             # hot window expires
+    f3 = inv.submit("echo", x, worker_hint=0)
+    f3.get()
+    assert f3.invocation.tier == Tier.WARM
+    inv.deallocate()
+
+
+def test_timeline_matches_perf_model():
+    _, _, _, _, inv = make_stack()
+    inv.allocate(1)
+    x = np.ones(256, np.float32)                 # 1 KiB payload
+    f = inv.submit("echo", x, worker_hint=0)
+    f.get()
+    tl = f.timeline
+    b = payload_bytes(x)
+    assert tl.net_in == pytest.approx(write_time(b + 12))
+    assert tl.net_out == pytest.approx(write_time(b))
+    assert tl.overhead == pytest.approx(
+        tier_overhead(f.invocation.tier, Sandbox.BARE))
+    assert tl.rtt_modeled >= tl.net_in + tl.net_out
+    inv.deallocate()
+
+
+def test_hot_faster_than_warm_modeled():
+    _, _, _, _, inv = make_stack(hot_period=10.0)
+    inv.allocate(1)
+    x = np.ones(16, np.float32)
+    f1 = inv.submit("echo", x, worker_hint=0); f1.get()   # warm
+    f2 = inv.submit("echo", x, worker_hint=0); f2.get()   # hot
+    assert f1.invocation.tier == Tier.WARM
+    assert f2.invocation.tier == Tier.HOT
+    assert f2.timeline.rtt_modeled < f1.timeline.rtt_modeled
+    inv.deallocate()
+
+
+def test_parallel_map_disjoint_results():
+    _, _, _, _, inv = make_stack(n_nodes=2, workers=4)
+    inv.allocate(8)
+    payloads = [np.full((32,), i, np.float32) for i in range(64)]
+    outs = inv.map("square", payloads)
+    for i, o in enumerate(outs):
+        assert (o == i * i).all()
+    inv.deallocate()
+
+
+def test_retry_on_executor_crash():
+    """In-flight crash -> client library retries on another worker."""
+    _, _, _, _, inv = make_stack(n_nodes=2, workers=2)
+    inv.allocate(4)
+    with pytest.raises(ExecutorCrash):
+        inv.invoke("boom", np.ones(4, np.float32))
+    assert inv.stats.retries == inv.max_retries   # bounded retries (§3.5)
+    # the cluster still serves work afterwards
+    out = inv.invoke("square", np.full(4, 3.0, np.float32))
+    assert (out == 9.0).all()
+    inv.deallocate()
+
+
+def test_fault_rate_recovery():
+    """Random executor crashes are absorbed by retries."""
+    _, _, _, _, inv = make_stack(n_nodes=3, workers=3, fault_rate=0.15)
+    inv.allocate(9)
+    ok = 0
+    for i in range(30):
+        try:
+            r = inv.invoke("square", np.full(8, float(i), np.float32))
+            assert (r == i * i).all()
+            ok += 1
+        except ExecutorCrash:
+            pass                                  # all workers died
+    assert ok >= 25                               # vast majority succeed
+
+
+def test_private_executors_under_starvation():
+    """Public pool exhausted -> job-internal private executor keeps the
+    same Invoker interface working (paper §3.5)."""
+    ledger, rm, bs, lib, inv = make_stack(n_nodes=1, workers=1)
+    hog = Invoker("hog", rm, lib, seed=9)
+    assert hog.allocate(1) == 1                   # takes the only slot
+    starved = Invoker("starved", rm, lib, seed=10, allocation_rounds=1,
+                      backoff_base=0.001)
+    assert starved.allocate(1) == 0
+    from repro.core import ExecutorManager
+    private = ExecutorManager("job-internal", 2, 1 << 30, ledger)
+    starved.attach_private(private, 1)
+    out = starved.invoke("square", np.full(4, 5.0, np.float32))
+    assert (out == 25.0).all()
+    starved.deallocate()
+    hog.deallocate()
+
+
+def test_accounting_after_invocations():
+    ledger, _, _, _, inv = make_stack()
+    inv.allocate(2)
+    for i in range(5):
+        inv.invoke("square", np.full(1024, 1.0, np.float32))
+    inv.deallocate()
+    bill = ledger.bill("c")
+    assert bill.invocations == 5
+    assert bill.compute_seconds > 0
+    assert bill.gb_seconds > 0
+    assert ledger.cost("c") > 0

@@ -1,0 +1,121 @@
+"""Lease protocol + decentralized allocation behaviour (paper §3.2-§3.4)."""
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from repro.core import (AllocationRejected, BatchSystem, ExecutorManager,
+                        FunctionLibrary, Invoker, Ledger, LeaseRequest,
+                        LeaseState, ResourceManager)
+
+
+def make_cluster(n_nodes=4, workers=4, **kw):
+    ledger = Ledger()
+    rm = ResourceManager(n_replicas=3)
+    bs = BatchSystem(rm, ledger, n_nodes=n_nodes,
+                     workers_per_node=workers, **kw)
+    bs.release_idle()
+    return ledger, rm, bs
+
+
+def lib():
+    return FunctionLibrary("t").register("echo", lambda x: x)
+
+
+def test_allocation_within_capacity():
+    _, rm, bs = make_cluster(2, 4)
+    inv = Invoker("c", rm, lib(), seed=1)
+    assert inv.allocate(8) == 8            # exactly the cluster capacity
+    inv2 = Invoker("c2", rm, lib(), seed=2, allocation_rounds=2,
+                   backoff_base=0.001)
+    assert inv2.allocate(1) == 0           # saturated -> 0 granted
+    inv.deallocate()
+    assert inv2.allocate(1) == 1           # capacity returns after release
+    inv2.deallocate()
+
+
+def test_immediate_rejection():
+    ledger = Ledger()
+    mgr = ExecutorManager("s0", 2, 1 << 30, ledger)
+    req = LeaseRequest("c", 4, 1 << 20, 60.0)     # 4 > 2 workers
+    with pytest.raises(AllocationRejected):
+        mgr.grant(req, lib())
+
+
+def test_saturation_removes_from_ranked_list():
+    _, rm, bs = make_cluster(2, 2)
+    replica = rm.primary()
+    assert len(replica.server_list()) == 2
+    inv = Invoker("c", rm, lib(), seed=3)
+    inv.allocate(2)                        # fills one or two nodes
+    full = [m for m in bs.nodes.values()
+            if m.manager and m.manager.free_workers == 0]
+    for node in full:
+        assert node.manager not in replica.server_list()
+    inv.deallocate()
+    assert len(replica.server_list()) == 2  # availability re-announced
+
+
+def test_no_oversubscription_under_concurrency():
+    """Many clients racing for leases never exceed node capacity."""
+    _, rm, bs = make_cluster(3, 4)          # 12 worker slots
+    invokers = [Invoker(f"c{i}", rm, lib(), seed=i, allocation_rounds=1)
+                for i in range(8)]
+    granted = [0] * len(invokers)
+
+    def worker(i):
+        granted[i] = invokers[i].allocate(3)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(invokers))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(granted) <= 12
+    for node in bs.nodes.values():
+        assert node.manager.free_workers >= 0
+    for inv in invokers:
+        inv.deallocate()
+    assert all(n.manager.free_workers == 4 for n in bs.nodes.values())
+
+
+def test_lease_metering_and_states():
+    ledger = Ledger()
+    mgr = ExecutorManager("s0", 4, 8 << 30, ledger)
+    req = LeaseRequest("c", 2, 2 << 30, 60.0)
+    proc = mgr.grant(req, lib())
+    lease = proc.lease
+    assert lease.state == LeaseState.ACTIVE
+    import time
+    time.sleep(0.02)
+    gbs_live = lease.gb_seconds()
+    assert gbs_live > 0
+    mgr.release(lease.lease_id)
+    assert lease.state == LeaseState.RELEASED
+    assert ledger.bill("c").gb_seconds >= gbs_live
+
+
+def test_batch_retrieval_immediate_and_graceful():
+    _, rm, bs = make_cluster(2, 2)
+    inv = Invoker("c", rm, lib(), seed=4)
+    inv.allocate(4)
+    node_id = next(iter(bs.nodes))
+    bs.retrieve_node(node_id, grace_s=0.0)       # immediate
+    assert bs.nodes[node_id].state == "batch"
+    assert all(m.server_id != node_id
+               for m in rm.primary().server_list())
+    # released leases on that node are marked RETRIEVED
+    inv.deallocate()
+
+
+def test_heartbeat_sweep_removes_dead_servers():
+    _, rm, bs = make_cluster(3, 2)
+    node = next(iter(bs.nodes.values()))
+    node.manager.crash()
+    dead = rm.primary().sweep_heartbeats()
+    assert node.node_id in dead
+    for replica in rm.replicas:
+        assert all(m.server_id != node.node_id
+                   for m in replica.server_list())

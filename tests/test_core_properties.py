@@ -1,0 +1,165 @@
+"""Hypothesis property tests on system invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (DEFAULT_NET, Ledger, Price, plan_split,
+                        n_local_min, write_time)
+from repro.core.accounting import GRANULARITY_S
+from repro.core.perf_model import (BASELINE_MODELS, NetParams, Sandbox,
+                                   Tier, invocation_rtt)
+from repro.core.resource_manager import AvailabilityBus, \
+    ResourceManagerReplica
+from repro.optim import quant
+
+
+# ---------------------------------------------------------- perf model
+@settings(max_examples=50, deadline=None)
+@given(a=st.integers(129, 1 << 22), b=st.integers(129, 1 << 22))
+def test_write_time_monotonic_beyond_inline(a, b):
+    lo, hi = sorted((a, b))
+    assert write_time(lo) <= write_time(hi)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 1 << 20))
+def test_rtt_tier_ordering(n):
+    """hot < warm < cold for any payload size and sandbox."""
+    for sbx in (Sandbox.BARE, Sandbox.DOCKER):
+        hot = invocation_rtt(n, n, Tier.HOT, sbx, 0.0)
+        warm = invocation_rtt(n, n, Tier.WARM, sbx, 0.0)
+        cold = invocation_rtt(n, n, Tier.COLD, sbx, 0.0)
+        assert hot < warm < cold
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(64, 5 << 20))
+def test_rfaas_dominates_baselines(n):
+    """Fig. 1 ordering: rFaaS < nightcore < lambda < openwhisk."""
+    rfaas = invocation_rtt(n, n, Tier.HOT, Sandbox.BARE, 0.0)
+    nc = BASELINE_MODELS["nightcore"](n)
+    lam = BASELINE_MODELS["aws_lambda"](n)
+    ow = BASELINE_MODELS["openwhisk"](n)
+    assert rfaas < nc < lam < ow
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_tasks=st.integers(1, 200),
+       t_local=st.floats(1e-5, 1e-1),
+       t_inv=st.floats(1e-6, 1e-1),
+       nbytes=st.integers(64, 1 << 20),
+       workers=st.integers(1, 16))
+def test_plan_split_never_hurts(n_tasks, t_local, t_inv, nbytes, workers):
+    """Eq. 1 planner: the chosen split never exceeds all-local time, and
+    a pure-local plan is always feasible."""
+    plan = plan_split(n_tasks, t_local, t_inv, nbytes, nbytes, workers)
+    assert plan["n_local"] + plan["n_remote"] == n_tasks
+    assert plan["makespan"] <= n_tasks * t_local + 1e-12
+    assert plan["speedup"] >= 1.0 - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(t_local=st.floats(1e-6, 1e-2), t_inv=st.floats(1e-6, 1e-2),
+       rtt=st.floats(1e-6, 1e-2))
+def test_eq1_threshold(t_local, t_inv, rtt):
+    """N_local·T_local >= T_inv + L at the returned threshold."""
+    n = n_local_min(t_local, t_inv, rtt)
+    assert n * t_local >= t_inv + rtt - 1e-12
+    if n > 0:
+        assert (n - 1) * t_local < t_inv + rtt
+
+
+# ---------------------------------------------------------- accounting
+@settings(max_examples=20, deadline=None)
+@given(chunks=st.lists(st.floats(1e-4, 2.0), min_size=1, max_size=40))
+def test_accounting_conservation(chunks):
+    """Sum of billed compute seconds == sum of reported busy time,
+    regardless of granularity batching."""
+    ledger = Ledger()
+    for c in chunks:
+        ledger.add_compute("c", c)
+    bill = ledger.bill("c")
+    assert bill.compute_seconds == pytest.approx(sum(chunks), rel=1e-9)
+    price = Price(c_a=2.0, c_c=3.0)
+    assert bill.cost(price) == pytest.approx(
+        2.0 * bill.gb_seconds + 3.0 * bill.compute_seconds)
+
+
+def test_discounted_price():
+    p = Price(1.0, 1.0).discounted(0.25)
+    assert p.c_a == 0.25 and p.c_c == 0.25
+
+
+# --------------------------------------------- eventual consistency
+class _FakeManager:
+    def __init__(self, sid):
+        self.server_id = sid
+        self.free_workers = 1
+        self.on_saturated = None
+        self.on_available = None
+
+    def heartbeat(self):
+        return True
+
+    def retrieve(self, grace_s=0.0):
+        pass
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 2),          # replica index
+              st.integers(0, 1),          # op: register / remove
+              st.integers(0, 9)),         # server id
+    min_size=1, max_size=40))
+def test_replicas_converge(ops):
+    """Applying a random op sequence at random replicas converges: after
+    quiescence every replica holds the same server set (paper §3.4)."""
+    bus = AvailabilityBus()
+    reps = [ResourceManagerReplica(i, bus) for i in range(3)]
+    for r in reps:
+        r.connect_peers(reps)
+    mgrs = {i: _FakeManager(f"s{i}") for i in range(10)}
+    for rep_i, op, sid in ops:
+        rep = reps[rep_i]
+        if op == 0:
+            rep.register(mgrs[sid])
+        else:
+            rep.remove(f"s{sid}")
+    views = [sorted(m.server_id for m in r.server_list()) for r in reps]
+    assert views[0] == views[1] == views[2]
+
+
+# ------------------------------------------------------------ quant
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000), scale=st.floats(1e-3, 1e3))
+def test_quantize_error_bound(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q = quant.quantize(x)
+    back = quant.dequantize(q)
+    assert back.shape == x.shape
+    # block-wise absmax int8: error <= absmax_block / 127 (+eps)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+    assert err.max() <= bound * 1.0000001
+
+
+def test_error_feedback_compensates():
+    """Error feedback: accumulated compressed sum converges to the true
+    sum (residual carried, not lost)."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(512) * 0.1, jnp.float32)
+    err = jnp.zeros_like(g)
+    acc_true = np.zeros(512)
+    acc_q = np.zeros(512)
+    for step in range(50):
+        q, err = quant.compress_with_feedback(g, err)
+        acc_q += np.asarray(quant.dequantize(q))
+        acc_true += np.asarray(g)
+    # relative drift of the accumulated signal stays small
+    rel = np.abs(acc_q - acc_true).max() / np.abs(acc_true).max()
+    assert rel < 0.01

@@ -1,0 +1,122 @@
+"""HLO-analysis parser: loop-trip multiplication, dot flops, collective
+byte classification — validated against jitted programs with known
+costs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis
+
+
+def _analyze(fn, *args):
+    comp = jax.jit(fn).lower(*args).compile()
+    return hlo_analysis.analyze(comp.as_text())
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    n, trips = 128, 10
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    out = _analyze(f, x, w)
+    expected = 2.0 * n * n * n * trips
+    assert out["flops"] == expected
+    # cost_analysis (single-visit) would report expected/trips — the
+    # whole point of the custom parser.
+
+
+def test_single_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    out = _analyze(lambda a, b: a @ b, a, b)
+    assert out["flops"] == 2.0 * 64 * 32 * 16
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    out = _analyze(f, x, w)
+    assert out["flops"] == 2.0 * 32 ** 3 * 15        # 5 x 3 trips
+
+
+def test_shape_bytes_parsing():
+    assert hlo_analysis.shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert hlo_analysis.shape_bytes("bf16[2,3]{1,0}") == 12
+    assert hlo_analysis.shape_bytes(
+        "(f32[4]{0}, s32[2]{0})") == 16 + 8
+    assert hlo_analysis.shape_bytes("pred[]") == 1
+
+
+def test_comment_stripping_in_tuple_types():
+    text = """HloModule m
+
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  %t = (f32[4]{0}, /*index=1*/s32[]) tuple(%p, %c)
+  ROOT %gte = f32[4]{0} get-tuple-element(%t), index=0
+}
+"""
+    comps = hlo_analysis.parse_module(text)
+    main = comps["__entry__"]
+    assert any(i.opcode == "tuple" for i in main.instrs)
+
+
+def test_collective_classification():
+    # hand-written SPMD-style module with known collectives
+    text = """HloModule m
+
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[64]{0} all-gather(%ar), replica_groups={{0,1}}, dimensions={0}
+  ROOT %cp = f32[64]{0} collective-permute(%ag), source_target_pairs={{0,1}}
+}
+"""
+    out = hlo_analysis.analyze(text)
+    c = out["collectives"]
+    assert c["all-reduce"]["count"] == 1
+    b = 64 * 4
+    np.testing.assert_allclose(c["all-reduce"]["moved"], 2 * b * 3 / 4)
+    np.testing.assert_allclose(c["all-gather"]["moved"], b * 1 / 2)
+    np.testing.assert_allclose(c["collective-permute"]["moved"], b)
+
+
+def test_dus_counts_update_not_buffer():
+    """In-place cache updates must count the slice, not the aliased
+    buffer (a (L,b,S,h,hd) KV write is ~MBs, not the whole cache)."""
+    text = """HloModule m
+
+%upd_body (p0: f32[64,1024], p1: f32[64,4], p2: s32[]) -> f32[64,1024] {
+  %p0 = f32[64,1024]{1,0} parameter(0)
+  %p1 = f32[64,4]{1,0} parameter(1)
+  %p2 = s32[] parameter(2)
+  %zero = s32[] constant(0)
+  ROOT %dus = f32[64,1024]{1,0} dynamic-update-slice(%p0, %p1, %zero, %p2)
+}
+
+ENTRY %main (a: f32[64,1024], u: f32[64,4], i: s32[]) -> f32[64,1024] {
+  %a = f32[64,1024]{1,0} parameter(0)
+  %u = f32[64,4]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[64,1024]{1,0} fusion(%a, %u, %i), kind=kLoop, calls=%upd_body
+}
+"""
+    out = hlo_analysis.analyze(text)
+    assert out["hbm_bytes"] == 2 * 64 * 4 * 4       # 2x update bytes
