@@ -7,6 +7,8 @@ and the LogP-derived offload model (Eq. 1).
 """
 from repro.core.accounting import ClientBill, Ledger, Price
 from repro.core.batch_system import BatchSystem, Node
+from repro.core.clock import (Clock, REAL_CLOCK, RealClock, ScheduledCall,
+                              VirtualClock)
 from repro.core.executor import (AllocationRejected, ExecutorCrash,
                                  ExecutorManager, ExecutorProcess,
                                  ExecutorWorker)
@@ -15,23 +17,27 @@ from repro.core.invocation import (Invocation, InvocationHeader, RFuture,
                                    Timeline, payload_bytes)
 from repro.core.invoker import (ALWAYS_WARM_INVOCATIONS, AllocationFailed,
                                 Connection, Invoker, RetryingFuture)
-from repro.core.lease import Lease, LeaseRequest, LeaseState
+from repro.core.lease import (Lease, LeaseRequest, LeaseState,
+                              TERMINAL_STATES)
 from repro.core.perf_model import (BASELINE_MODELS, DEFAULT_NET, NetParams,
                                    Sandbox, Tier, invocation_rtt,
                                    max_offload_rate, n_local_min,
                                    plan_split, tier_overhead, write_time)
 from repro.core.resource_manager import (AvailabilityBus, ResourceManager,
                                          ResourceManagerReplica)
+from repro.core.simulation import ScenarioStats, SimulatedCluster
 
 __all__ = [
     "ClientBill", "Ledger", "Price", "BatchSystem", "Node",
+    "Clock", "REAL_CLOCK", "RealClock", "ScheduledCall", "VirtualClock",
     "AllocationRejected", "ExecutorCrash", "ExecutorManager",
     "ExecutorProcess", "ExecutorWorker", "FunctionLibrary", "Invocation",
     "InvocationHeader", "RFuture", "Timeline", "payload_bytes",
     "ALWAYS_WARM_INVOCATIONS", "AllocationFailed", "Connection", "Invoker",
     "RetryingFuture", "Lease", "LeaseRequest", "LeaseState",
-    "BASELINE_MODELS", "DEFAULT_NET", "NetParams", "Sandbox", "Tier",
-    "invocation_rtt", "max_offload_rate", "n_local_min", "plan_split",
-    "tier_overhead", "write_time", "AvailabilityBus", "ResourceManager",
-    "ResourceManagerReplica",
+    "TERMINAL_STATES", "BASELINE_MODELS", "DEFAULT_NET", "NetParams",
+    "Sandbox", "Tier", "invocation_rtt", "max_offload_rate", "n_local_min",
+    "plan_split", "tier_overhead", "write_time", "AvailabilityBus",
+    "ResourceManager", "ResourceManagerReplica", "ScenarioStats",
+    "SimulatedCluster",
 ]

@@ -10,6 +10,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.accounting import Ledger
+from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.executor import ExecutorManager
 from repro.core.resource_manager import ResourceManager
 
@@ -31,9 +32,10 @@ class BatchSystem:
                  n_nodes: int = 8, workers_per_node: int = 8,
                  memory_per_node: int = 8 << 30, *, sandbox: str = "bare",
                  hot_period: float = 1.0, fault_rate: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, clock: Clock = REAL_CLOCK):
         self.rm = rm
         self.ledger = ledger
+        self.clock = clock
         self._rng = random.Random(seed)
         self.nodes: Dict[str, Node] = {
             f"node{i:03d}": Node(f"node{i:03d}", workers_per_node,
@@ -41,7 +43,7 @@ class BatchSystem:
             for i in range(n_nodes)
         }
         self._mk = dict(sandbox=sandbox, hot_period=hot_period,
-                        fault_rate=fault_rate)
+                        fault_rate=fault_rate, clock=clock)
 
     # ----------------------------------------------------------- REST API
     def release_node(self, node_id: str) -> ExecutorManager:

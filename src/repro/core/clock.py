@@ -1,0 +1,399 @@
+"""Deterministic time core: real and virtual clocks.
+
+Everything time-coupled in the rFaaS reproduction (hot/warm tier windows,
+lease expiry and GB-second metering, allocation backoff, heartbeat
+sweeps, serving deadlines) reads time through a ``Clock`` instead of the
+``time`` module.  ``RealClock`` preserves the original wall-clock
+behaviour and is the default everywhere, so production paths are
+unchanged.  ``VirtualClock`` is an event-driven simulated clock: time
+only moves when the driver thread calls ``advance()``/``sleep()``, and
+scheduled callbacks fire in deterministic ``(time, sequence)`` order.
+That makes microsecond-scale behaviour — a 326 ns hot window, a 4.67 us
+warm wakeup, a one-hour lease — testable exactly and instantly, with no
+``time.sleep`` anywhere in the suite (see ``simulation.SimulatedCluster``
+for the composed harness).
+
+Cross-thread rendezvous: a non-driver thread calling ``sleep()`` on a
+``VirtualClock`` blocks on a real event until the driver advances past
+its deadline; the driver wakes sleepers in deadline order and waits for
+each to acknowledge resumption before continuing, which keeps
+multi-threaded tests bounded and repeatable.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+
+class ScheduledCall:
+    """Handle for a callback scheduled on a clock; ``cancel()``-able.
+    ``repeating`` marks recurring maintenance events (heartbeats, lease
+    sweeps) which never count as pending work for idle detection."""
+
+    __slots__ = ("when", "fn", "args", "cancelled", "fired", "repeating",
+                 "timer")
+
+    def __init__(self, when: float, fn: Callable, args: Tuple[Any, ...],
+                 repeating: bool = False):
+        self.when = when
+        self.fn = fn
+        self.args = args
+        self.cancelled = False
+        self.fired = False
+        self.repeating = repeating
+        self.timer: Optional[threading.Timer] = None   # real clock only
+
+    def cancel(self):
+        self.cancelled = True
+        if self.timer is not None:
+            self.timer.cancel()      # free the sleeping Timer thread now
+
+
+class _RepeatingHandle(ScheduledCall):
+    """Handle for ``call_repeating``: cancelling it also cancels the
+    currently-armed tick, so no stale event lingers on the clock."""
+
+    __slots__ = ("inner",)
+
+    def __init__(self, when: float, fn: Callable, args: Tuple[Any, ...]):
+        super().__init__(when, fn, args, repeating=True)
+        self.inner: Optional[ScheduledCall] = None
+
+    def cancel(self):
+        super().cancel()
+        if self.inner is not None:
+            self.inner.cancel()
+
+
+class Clock:
+    """Time source interface.  ``virtual`` distinguishes the two modes
+    where behaviour must genuinely differ (thread spawning, event
+    pumping); everything else is uniform."""
+
+    virtual: bool = False
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def sleep(self, seconds: float) -> None:
+        raise NotImplementedError
+
+    def call_later(self, delay: float, fn: Callable,
+                   *args: Any) -> ScheduledCall:
+        return self._call_at(self.now() + max(0.0, delay), fn, args)
+
+    def call_at(self, when: float, fn: Callable,
+                *args: Any) -> ScheduledCall:
+        return self._call_at(when, fn, args)
+
+    def _call_at(self, when: float, fn: Callable, args: Tuple[Any, ...],
+                 *, repeating: bool = False) -> ScheduledCall:
+        raise NotImplementedError
+
+    def call_repeating(self, interval: float, fn: Callable,
+                       *args: Any) -> ScheduledCall:
+        """Run ``fn`` every ``interval`` seconds until the returned
+        handle is cancelled (heartbeat sweeps, lease-expiry sweeps).
+        Repeating events fire during ``advance``/``run_until`` but are
+        invisible to idle detection — ``run_until_idle`` terminates
+        even while they are armed."""
+        handle = _RepeatingHandle(self.now() + interval, fn, args)
+
+        def tick():
+            if handle.cancelled:
+                return
+            fn(*args)
+            if not handle.cancelled:
+                handle.inner = self._call_at(
+                    self.now() + interval, tick, (), repeating=True)
+                handle.when = handle.inner.when   # next fire instant
+
+        handle.inner = self._call_at(self.now() + interval, tick, (),
+                                     repeating=True)
+        return handle
+
+
+class RealClock(Clock):
+    """Wall-clock time: the original behaviour of the codebase."""
+
+    virtual = False
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+    def _call_at(self, when: float, fn: Callable, args: Tuple[Any, ...],
+                 *, repeating: bool = False) -> ScheduledCall:
+        call = ScheduledCall(when, fn, args, repeating=repeating)
+
+        def fire():
+            if not call.cancelled:
+                call.fired = True
+                call.fn(*call.args)
+
+        t = threading.Timer(max(0.0, when - self.now()), fire)
+        t.daemon = True
+        call.timer = t
+        t.start()
+        return call
+
+
+#: Process-wide default; sharing one instance keeps ``clock is
+#: REAL_CLOCK`` checks and monotonic origins consistent across modules.
+REAL_CLOCK = RealClock()
+
+
+class _Waiter:
+    __slots__ = ("deadline", "wake", "ack")
+
+    def __init__(self, deadline: float):
+        self.deadline = deadline
+        self.wake = threading.Event()
+        self.ack = threading.Event()
+
+
+class VirtualClock(Clock):
+    """Event-driven simulated time.
+
+    The *driver thread* (by default the creating thread) owns time: it
+    advances the clock with ``advance()``/``run_until()``/``sleep()`` and
+    pumps scheduled callbacks, which run inline on the driver thread in
+    strict ``(when, seq)`` order.  Other threads may ``sleep()``; they
+    block until the driver advances past their deadline (deterministic
+    rendezvous, bounded by ``rendezvous_timeout`` real seconds so a
+    missing driver surfaces as an error instead of a hang).
+    """
+
+    virtual = True
+
+    def __init__(self, start: float = 0.0, *,
+                 rendezvous_timeout: float = 30.0):
+        self._now = float(start)
+        self._heap: List[Tuple[float, int, ScheduledCall]] = []
+        # one-shot events only, lazily pruned: keeps idle detection
+        # O(log n) instead of scanning the full heap per retired event
+        self._oneshot: List[Tuple[float, int, ScheduledCall]] = []
+        self._seq = itertools.count()
+        self._lock = threading.RLock()
+        self._driver = threading.current_thread()
+        self._waiters: List[_Waiter] = []
+        self._rendezvous_timeout = rendezvous_timeout
+        self._woke_any = False
+        self.events_run = 0
+
+    # ------------------------------------------------------------ basics
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def is_driver(self) -> bool:
+        return threading.current_thread() is self._driver
+
+    def set_driver(self, thread: Optional[threading.Thread] = None):
+        """Hand time ownership to ``thread`` (default: caller)."""
+        self._driver = thread or threading.current_thread()
+
+    def _call_at(self, when: float, fn: Callable, args: Tuple[Any, ...],
+                 *, repeating: bool = False) -> ScheduledCall:
+        with self._lock:                 # clamp under the lock: _now
+            # may be advancing on the driver thread concurrently
+            call = ScheduledCall(max(when, self._now), fn, args,
+                                 repeating=repeating)
+            entry = (call.when, next(self._seq), call)
+            heapq.heappush(self._heap, entry)
+            if not repeating:
+                heapq.heappush(self._oneshot, entry)
+        return call
+
+    # ---------------------------------------------------------- stepping
+    def _next_due(self, include_repeating: bool = True) -> Optional[float]:
+        """Earliest pending instant: a scheduled callback or a sleeping
+        thread's deadline.  With ``include_repeating=False`` only WORK
+        counts — repeating maintenance events are excluded, otherwise
+        an armed sweeper would make idle unreachable."""
+        with self._lock:
+            heap = self._heap if include_repeating else self._oneshot
+            while heap and (heap[0][2].cancelled or heap[0][2].fired):
+                heapq.heappop(heap)
+            next_ev = heap[0][0] if heap else None
+            next_wait = min((w.deadline for w in self._waiters),
+                            default=None)
+        if next_ev is None:
+            return next_wait
+        if next_wait is None:
+            return next_ev
+        return min(next_ev, next_wait)
+
+    def _pop_due(self, target: float) -> Optional[ScheduledCall]:
+        with self._lock:
+            while self._heap and (self._heap[0][2].cancelled
+                                  or self._heap[0][2].fired):
+                heapq.heappop(self._heap)
+            # keep the one-shot mirror from accumulating fired entries
+            # (pops happen in time order, so its head tracks ours)
+            while self._oneshot and (self._oneshot[0][2].cancelled
+                                     or self._oneshot[0][2].fired):
+                heapq.heappop(self._oneshot)
+            if self._heap and self._heap[0][0] <= target:
+                when, _, call = heapq.heappop(self._heap)
+                call.fired = True
+                self._now = max(self._now, when)
+                return call
+            return None
+
+    def _wake_due_waiters(self):
+        """Wake sleepers whose deadline has passed, in deadline order,
+        waiting for each to acknowledge before proceeding."""
+        while True:
+            with self._lock:
+                due = [w for w in self._waiters if w.deadline <= self._now]
+                if not due:
+                    return
+                due.sort(key=lambda w: w.deadline)
+                w = due[0]
+                self._waiters.remove(w)
+            self._woke_any = True
+            w.wake.set()
+            w.ack.wait(self._rendezvous_timeout)
+
+    def run_until(self, target: float):
+        """Advance to ``target``, firing every due callback and waking
+        every due sleeper along the way, in time order."""
+        while True:
+            t = self._next_due()
+            if t is None or t > target:
+                break
+            # pop the earliest event if it is the due thing; otherwise
+            # the due thing is a sleeper deadline — advance and wake
+            call = self._pop_due(t)
+            if call is not None:
+                self.events_run += 1
+                call.fn(*call.args)
+            else:
+                with self._lock:
+                    self._now = max(self._now, t)
+            self._wake_due_waiters()
+        with self._lock:
+            self._now = max(self._now, target)
+        self._wake_due_waiters()
+
+    def advance(self, dt: float):
+        """Move time forward by ``dt`` simulated seconds."""
+        if dt < 0:
+            raise ValueError("cannot advance a clock backwards")
+        self.run_until(self.now() + dt)
+
+    def run_until_idle(self, max_time: Optional[float] = None):
+        """Drain all pending WORK — one-shot callbacks and sleeping
+        threads' deadlines (bounded by ``max_time`` if given).
+        Repeating maintenance events fire along the way but never keep
+        the loop alive, so this terminates with sweepers still armed."""
+        while True:
+            t = self._next_due(include_repeating=False)
+            if t is not None and (max_time is None or t <= max_time):
+                self.run_until(t)
+                continue
+            if t is None and self._settle_after_rendezvous(
+                    include_repeating=False) == "work":
+                continue              # a woken sleeper enqueued more
+            break
+        if max_time is not None:
+            self.run_until(max_time)
+
+    # ---------------------------------------------------------- sleeping
+    def sleep(self, seconds: float) -> None:
+        seconds = max(0.0, seconds)
+        if self.is_driver():
+            self.advance(seconds)
+            return
+        with self._lock:
+            waiter = _Waiter(self._now + seconds)
+            if waiter.deadline <= self._now:
+                return               # already due: don't register a
+                # waiter the driver may never come back to wake
+            self._waiters.append(waiter)
+        if not waiter.wake.wait(self._rendezvous_timeout):
+            with self._lock:
+                still_registered = waiter in self._waiters
+                if still_registered:
+                    self._waiters.remove(waiter)
+            if still_registered:
+                waiter.ack.set()     # release a driver that arrives late
+                raise RuntimeError(
+                    "VirtualClock.sleep: driver never advanced past "
+                    f"t={waiter.deadline:.6f} (real timeout)")
+            # the driver woke us concurrently with our timeout: it has
+            # already removed the waiter and is blocked on our ack —
+            # this is a normal (if slow) wake, not an error
+        waiter.ack.set()
+
+    def wait_until(self, predicate: Callable[[], bool],
+                   timeout: Optional[float] = None) -> bool:
+        """Pump events until ``predicate()`` is true.  Driver thread
+        only.  With a ``timeout`` (simulated seconds) time never advances
+        beyond it; returns the final predicate value.  Without one,
+        exhausting the event queue while the predicate is still false
+        raises — that is a deadlock, not a wait."""
+        if not self.is_driver():
+            raise RuntimeError(
+                "wait_until must be called from the driver thread")
+        deadline = None if timeout is None else self.now() + timeout
+        while not predicate():
+            # only pending WORK counts: with timeout=None an armed
+            # repeating sweeper must not turn deadlock into a hang
+            include_rep = deadline is not None
+            t = self._next_due(include_repeating=include_rep)
+            if t is None:
+                settled = self._settle_after_rendezvous(
+                    predicate, include_repeating=include_rep)
+                if settled == "predicate":
+                    return True
+                if settled == "work":
+                    continue          # a woken sleeper enqueued more
+                if deadline is None:
+                    raise RuntimeError(
+                        "VirtualClock deadlock: predicate false and no "
+                        "pending work remains (only recurring "
+                        "maintenance events and/or nothing at all)")
+                self.run_until(deadline)
+                return predicate()
+            if deadline is not None and t > deadline:
+                self.run_until(deadline)
+                return (predicate() or self._settle_after_rendezvous(
+                    predicate) == "predicate")
+            self.run_until(t)
+        return True
+
+    def _settle_after_rendezvous(self, predicate=None, *,
+                                 include_repeating: bool = True) -> str:
+        """A woken sleeper runs concurrently after acknowledging; give
+        it a short real-time grace to act — fulfill a future
+        (``"predicate"``) or enqueue follow-up events (``"work"``) —
+        before the driver concludes quiescence (``"quiet"``).  Costs
+        nothing in single-threaded simulations (no waiter ever woken)."""
+        def done() -> Optional[str]:
+            if predicate is not None and predicate():
+                return "predicate"
+            if self._next_due(include_repeating=include_repeating) \
+                    is not None:
+                return "work"
+            return None
+
+        if not self._woke_any:
+            return done() or "quiet"
+        t_end = time.monotonic() + min(1.0, self._rendezvous_timeout)
+        while time.monotonic() < t_end:
+            outcome = done()
+            if outcome:
+                return outcome
+            time.sleep(0.0005)
+        # one full grace with no progress: stop paying it on every
+        # subsequent wait until another sleeper is actually woken
+        self._woke_any = False
+        return done() or "quiet"

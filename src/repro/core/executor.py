@@ -4,25 +4,40 @@ An ``ExecutorManager`` owns the spare capacity of one node (here: worker
 slots + memory budget).  Clients negotiate leases DIRECTLY with managers
 (decentralized allocation, §3.2); a granted lease spawns an
 ``ExecutorProcess`` — an isolated sandbox holding the pushed function
-library and one ``ExecutorWorker`` thread per requested worker.  Workers
+library and one ``ExecutorWorker`` per requested worker.  Workers
 implement the hot/warm state machine: a worker is HOT (busy-polling, +326
 ns modeled overhead) for ``hot_period`` seconds after each execution,
 then falls back to WARM (event-blocked, +4.67 us modeled).  Crashes are
 detected by the manager and surfaced to the client library, which retries
 elsewhere (§3.5).
+
+Time model: every timestamp is read from the manager's ``Clock``.  Under
+the default ``RealClock`` each worker is a daemon thread draining a
+queue, exactly the original behaviour.  Under a ``VirtualClock`` no
+threads are spawned: ``submit`` appends to a FIFO (``_vqueue``) and a
+one-slot dispatch loop (``_vkick``/``_vstart``/``_vfinish``) replays it
+as simulated events — each execution occupies the worker for the
+function library's modeled service time, and the completion event
+re-kicks the queue at the same instant so queued successors observe the
+hot window exactly like the real thread's drain.  A thousand
+microsecond-scale invocations replay deterministically in microseconds
+of simulated — and milliseconds of real — time.
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import random
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax
 
 from repro.core.accounting import Ledger
+from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.functions import FunctionLibrary
 from repro.core.invocation import Invocation, payload_bytes
 from repro.core.lease import Lease, LeaseRequest, LeaseState
@@ -43,12 +58,14 @@ _STOP = object()
 
 class ExecutorWorker(threading.Thread):
     """One function instance: independent queue + completion channel
-    (threads do not share RDMA resources, §3.3)."""
+    (threads do not share RDMA resources, §3.3).  Virtual-clock workers
+    never start the thread; execution happens as clock events."""
 
     def __init__(self, name: str, library: FunctionLibrary,
                  sandbox: Sandbox, hot_period: float,
                  on_done: Callable, net: NetParams,
-                 fault_rate: float = 0.0, seed: int = 0):
+                 fault_rate: float = 0.0, seed: int = 0,
+                 clock: Clock = REAL_CLOCK):
         super().__init__(name=name, daemon=True)
         self.library = library
         self.sandbox = sandbox
@@ -56,51 +73,102 @@ class ExecutorWorker(threading.Thread):
         self.on_done = on_done
         self.net = net
         self.fault_rate = fault_rate
+        self.clock = clock
         self._rng = random.Random(seed)
         self._q: "queue.Queue" = queue.Queue()
         self._last_activity: Optional[float] = None
         self.busy_seconds = 0.0
         self.n_invocations = 0
         self.alive_flag = True
+        self._stopped = False
+        # orders submit() against stop()/crash(): nothing can enqueue
+        # behind _STOP and strand a future until its timeout
+        self._submit_lock = threading.Lock()
+        # virtual-mode dispatch state: FIFO queue + one in-flight slot,
+        # mirroring the real thread draining its queue one item at a time
+        self._vqueue: "deque[Invocation]" = deque()
+        self._vactive = False
+        self._inflight_id: Optional[int] = None
+        self._pending: Dict[int, Invocation] = {}
 
     # ------------------------------------------------------------- client
     def submit(self, inv: Invocation):
-        if not self.alive_flag:
+        if not self.alive_flag or self._stopped:
             raise ExecutorCrash(f"worker {self.name} is dead")
-        inv.timeline.t_submit = time.monotonic()
-        self._q.put(inv)
+        inv.timeline.t_submit = self.clock.now()
+        if inv.future is not None:
+            inv.future._clock = self.clock
+        if self.clock.virtual:
+            self._vsubmit(inv)
+        else:
+            with self._submit_lock:
+                if not self.alive_flag or self._stopped:
+                    raise ExecutorCrash(f"worker {self.name} is dead")
+                self._q.put(inv)
 
     @property
     def tier(self) -> Tier:
         """HOT while the post-execution busy-poll window is open."""
         if self._last_activity is None:
             return Tier.WARM
-        if time.monotonic() - self._last_activity <= self.hot_period:
+        if self.clock.now() - self._last_activity <= self.hot_period:
             return Tier.HOT
         return Tier.WARM
 
+    def has_pending(self) -> bool:
+        """Queued OR in-flight work — identical meaning in both modes,
+        so retrieve()'s grace drain waits out a mid-execution
+        invocation on either clock.  Real mode counts via the queue's
+        unfinished-task counter (decremented only after processing),
+        which has no dequeued-but-not-yet-executing blind window."""
+        if self.clock.virtual:
+            return bool(self._pending)
+        return self._q.unfinished_tasks > 0
+
     def stop(self):
-        self._q.put(_STOP)
+        """Graceful: already-queued work drains, new submits refused
+        (real mode queues _STOP behind pending items for the same
+        effect)."""
+        with self._submit_lock:
+            self._stopped = True
+            if not self.clock.virtual:
+                self._q.put(_STOP)
 
     def crash(self):
         """Fault injection: the process dies mid-flight."""
-        self.alive_flag = False
-        self._q.put(_STOP)
+        with self._submit_lock:
+            self.alive_flag = False
+            if not self.clock.virtual:
+                self._q.put(_STOP)
+        if self.clock.virtual:
+            # real-mode parity: the in-flight invocation completes (a
+            # running function cannot be interrupted there); only
+            # queued work fails
+            self._fail_pending(ExecutorCrash(
+                f"worker {self.name} terminated"),
+                keep_id=self._inflight_id)
 
-    # ------------------------------------------------------------ executor
+    # ------------------------------------------- executor (real threads)
+    def _drain_queue_failing(self):
+        """Fail anything still queued behind a crash/stop, so queued
+        clients get an immediate ExecutorCrash (and retry) instead of
+        blocking until their timeout."""
+        while True:
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                return
+            self._q.task_done()
+            if nxt is not _STOP and nxt.future:
+                nxt.future._fail(ExecutorCrash(
+                    f"worker {self.name} terminated"))
+
     def run(self):
         while True:
             item = self._q.get()
             if item is _STOP:
-                # fail anything still queued behind the crash
-                while True:
-                    try:
-                        nxt = self._q.get_nowait()
-                    except queue.Empty:
-                        break
-                    if nxt is not _STOP and nxt.future:
-                        nxt.future._fail(ExecutorCrash(
-                            f"worker {self.name} terminated"))
+                self._q.task_done()
+                self._drain_queue_failing()
                 return
             inv: Invocation = item
             inv.tier = self.tier
@@ -119,10 +187,10 @@ class ExecutorWorker(threading.Thread):
                 exec_time = time.perf_counter() - t0
                 inv.timeline.exec_time = exec_time
                 inv.timeline.dispatch_measured = max(
-                    0.0, time.monotonic() - inv.timeline.t_submit
+                    0.0, self.clock.now() - inv.timeline.t_submit
                     - exec_time)
                 inv.model_network(payload_bytes(result), self.net)
-                self._last_activity = time.monotonic()
+                self._last_activity = self.clock.now()
                 self.busy_seconds += exec_time
                 self.n_invocations += 1
                 self.on_done(self, inv, exec_time, None)
@@ -133,12 +201,111 @@ class ExecutorWorker(threading.Thread):
                 inv.future._fail(e if isinstance(e, ExecutorCrash)
                                  else ExecutorCrash(repr(e)))
                 if not self.alive_flag:
+                    # mirror virtual-mode _fail_pending: queued work
+                    # behind the crash fails now, not at its timeout
+                    self._drain_queue_failing()
                     return
+            finally:
+                self._q.task_done()
+
+    # --------------------------------------- executor (simulated events)
+    # _vqueue/_vactive/_pending/_inflight_id are guarded by
+    # _submit_lock: non-driver threads may submit while driver-side
+    # clock callbacks dispatch (ServeEngine, backup_submit, rendezvous)
+    def _vsubmit(self, inv: Invocation):
+        with self._submit_lock:
+            self._pending[inv.header.invocation_id] = inv
+            self._vqueue.append(inv)
+            self._vkick_locked()
+
+    def _vkick_locked(self):
+        """Start the next queued invocation if the worker is free.
+        Scheduled AFTER a completion event at the same instant, so a
+        successor always observes the predecessor's _last_activity
+        (tier HOT) — exactly like the real thread's FIFO drain.
+        Caller holds _submit_lock."""
+        if self._vactive or not self._vqueue:
+            return
+        self._vactive = True
+        self.clock.call_later(0.0, self._vstart, self._vqueue.popleft())
+
+    def _vstart(self, inv: Invocation):
+        with self._submit_lock:
+            if inv.header.invocation_id not in self._pending:
+                self._vactive = False     # crashed while queued
+                self._vkick_locked()
+                return
+        inv.tier = self.tier
+        inv.sandbox = self.sandbox
+        if not self.alive_flag or (self.fault_rate and
+                                   self._rng.random() < self.fault_rate):
+            self.alive_flag = False
+            err = ExecutorCrash(f"function crashed executor {self.name}")
+            with self._submit_lock:
+                self._pending.pop(inv.header.invocation_id, None)
+            self.on_done(self, inv, 0.0, err)
+            inv.future._fail(err)
+            self._fail_pending(ExecutorCrash(
+                f"worker {self.name} terminated"))
+            return
+        svc = self.library.service_time_of(inv.header.fn_index)
+        try:
+            fn = self.library.by_index(inv.header.fn_index)
+            result = fn(inv.payload)
+        except BaseException as e:  # noqa: BLE001 — forwarded to client
+            with self._submit_lock:
+                self._pending.pop(inv.header.invocation_id, None)
+            self.on_done(self, inv, 0.0, e)
+            inv.future._fail(e if isinstance(e, ExecutorCrash)
+                             else ExecutorCrash(repr(e)))
+            with self._submit_lock:
+                self._vactive = False
+                self._vkick_locked()
+            return
+        with self._submit_lock:
+            self._inflight_id = inv.header.invocation_id
+        self.clock.call_later(svc, self._vfinish, inv, result, svc)
+
+    def _vfinish(self, inv: Invocation, result, svc: float):
+        with self._submit_lock:
+            if self._inflight_id == inv.header.invocation_id:
+                self._inflight_id = None
+            present = self._pending.pop(inv.header.invocation_id, None)
+        if present is None:
+            return                    # crashed mid-execution
+        now = self.clock.now()
+        inv.timeline.exec_time = svc
+        inv.timeline.dispatch_measured = max(
+            0.0, now - svc - inv.timeline.t_submit)   # queueing delay
+        inv.model_network(payload_bytes(result), self.net)
+        self._last_activity = now
+        self.busy_seconds += svc
+        self.n_invocations += 1
+        self.on_done(self, inv, svc, None)
+        inv.future._fulfill(result)
+        with self._submit_lock:
+            self._vactive = False
+            self._vkick_locked()
+
+    def _fail_pending(self, err: ExecutorCrash,
+                      keep_id: Optional[int] = None):
+        """Fail queued work; ``keep_id`` (the in-flight invocation)
+        survives and completes, matching real-thread crash semantics."""
+        with self._submit_lock:
+            pending, self._pending = self._pending, {}
+            if keep_id is not None and keep_id in pending:
+                self._pending[keep_id] = pending.pop(keep_id)
+            self._vqueue.clear()
+            if not self._pending:
+                self._vactive = False
+        for inv in pending.values():
+            if inv.future is not None:
+                inv.future._fail(err)
 
 
 @dataclass
 class ExecutorProcess:
-    """Sandbox + worker threads for one lease (paper: executor process)."""
+    """Sandbox + workers for one lease (paper: executor process)."""
     lease: Lease
     workers: List[ExecutorWorker]
     library: FunctionLibrary
@@ -159,7 +326,8 @@ class ExecutorManager:
     def __init__(self, server_id: str, n_workers: int, memory_bytes: int,
                  ledger: Ledger, *, sandbox: str = "bare",
                  hot_period: float = 1.0, net: NetParams = DEFAULT_NET,
-                 fault_rate: float = 0.0, seed: int = 0):
+                 fault_rate: float = 0.0, seed: int = 0,
+                 clock: Clock = REAL_CLOCK):
         self.server_id = server_id
         self.capacity_workers = n_workers
         self.capacity_memory = memory_bytes
@@ -168,9 +336,13 @@ class ExecutorManager:
         self.hot_period = hot_period
         self.net = net
         self.fault_rate = fault_rate
+        self.clock = clock
         self._seed = seed
         self._lock = threading.RLock()
         self._processes: Dict[int, ExecutorProcess] = {}
+        # per-manager lease ids keep simulated runs reproducible (global
+        # counters would leak state between same-process scenario runs)
+        self._lease_ids = itertools.count(1)
         self._free_workers = n_workers
         self._free_memory = memory_bytes
         self._alive = True
@@ -209,7 +381,8 @@ class ExecutorManager:
                     f"({self._free_workers}w free)")
             self._free_workers -= request.n_workers
             self._free_memory -= request.memory_bytes
-            lease = Lease(request, self.server_id)
+            lease = Lease(request, self.server_id,
+                          lease_id=next(self._lease_ids), clock=self.clock)
 
         sandbox = Sandbox(request.sandbox) if request.sandbox else \
             self.sandbox
@@ -220,10 +393,14 @@ class ExecutorManager:
                 f"{self.server_id}/L{lease.lease_id}/w{i}", library,
                 sandbox, self.hot_period, self._worker_done, self.net,
                 self.fault_rate, seed=self._seed * 9973 + lease.lease_id
-                * 131 + i)
-            w.start()
+                * 131 + i, clock=self.clock)
+            if not self.clock.virtual:
+                w.start()
             workers.append(w)
-        spawn_measured = time.perf_counter() - t0
+        # measured spawn cost is wall-clock noise; zero it under
+        # simulation so breakdowns stay bit-identical across runs
+        spawn_measured = 0.0 if self.clock.virtual \
+            else time.perf_counter() - t0
 
         proc = ExecutorProcess(lease, workers, library, cold_breakdown={
             "connect": 2 * self.net.latency,
@@ -258,6 +435,17 @@ class ExecutorManager:
             if was_full and self._accepting and self.on_available:
                 self.on_available(self.server_id)
 
+    def sweep_expired(self) -> List[int]:
+        """End leases whose timeout elapsed (paper §3.2: the lease, not
+        the manager, bounds how long a client may hold resources)."""
+        now = self.clock.now()
+        with self._lock:
+            expired = [lid for lid, p in self._processes.items()
+                       if p.lease.expired(now)]
+        for lid in expired:
+            self.release(lid, LeaseState.EXPIRED)
+        return expired
+
     # --------------------------------------------------- batch system API
     def retrieve(self, grace_s: float = 0.0):
         """Batch system takes the node back (paper §5.3): stop accepting,
@@ -266,10 +454,10 @@ class ExecutorManager:
         with self._lock:
             self._accepting = False
             procs = list(self._processes.items())
-        deadline = time.monotonic() + grace_s
-        while time.monotonic() < deadline and any(
-                not w._q.empty() for _, p in procs for w in p.workers):
-            time.sleep(0.001)
+        deadline = self.clock.now() + grace_s
+        while self.clock.now() < deadline and any(
+                w.has_pending() for _, p in procs for w in p.workers):
+            self.clock.sleep(0.001)
         for lid, _ in procs:
             self.release(lid, LeaseState.RETRIEVED)
         self.ledger.flush()
@@ -284,15 +472,17 @@ class ExecutorManager:
         (paper §3.5)."""
         with self._lock:
             self._alive = False
-            procs = list(self._processes.items())
-        for lid, proc in procs:
+            # pop before billing: a racing release() that already
+            # popped (and billed) a lease must not be billed again
+            procs, self._processes = dict(self._processes), {}
+            self._free_workers = self.capacity_workers
+            self._free_memory = self.capacity_memory
+        for lid, proc in procs.items():
             for w in proc.workers:
                 w.crash()
             proc.lease.end(LeaseState.FAILED)
-        with self._lock:
-            self._processes.clear()
-            self._free_workers = self.capacity_workers
-            self._free_memory = self.capacity_memory
+            self.ledger.add_allocation(proc.lease.request.client_id,
+                                       proc.lease.gb_seconds())
 
     # ------------------------------------------------------------ internal
     def _worker_done(self, worker: ExecutorWorker, inv: Invocation,

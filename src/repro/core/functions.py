@@ -19,11 +19,17 @@ class FunctionLibrary:
     code_size: int = 7_880          # bytes written at cold start
     _fns: Dict[str, Callable] = field(default_factory=dict)
     _symbols: List[str] = field(default_factory=list)
+    _service_times: Dict[str, float] = field(default_factory=dict)
 
-    def register(self, name: str, fn: Callable) -> "FunctionLibrary":
+    def register(self, name: str, fn: Callable, *,
+                 service_time_s: float = 0.0) -> "FunctionLibrary":
+        """``service_time_s`` is the *modeled* execution time used when
+        the function runs under a VirtualClock (simulation); real
+        executors measure execution instead and ignore it."""
         if name in self._fns:
             raise ValueError(f"duplicate symbol {name!r}")
         self._fns[name] = fn
+        self._service_times[name] = service_time_s
         self._symbols = sorted(self._fns)      # both sides sort symbols
         return self
 
@@ -44,6 +50,10 @@ class FunctionLibrary:
 
     def by_index(self, idx: int) -> Callable:
         return self._fns[self._symbols[idx]]
+
+    def service_time_of(self, idx: int) -> float:
+        """Modeled execution time of a symbol (virtual-clock runs)."""
+        return self._service_times.get(self._symbols[idx], 0.0)
 
     def __len__(self) -> int:
         return len(self._symbols)

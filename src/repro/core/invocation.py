@@ -70,13 +70,21 @@ class Timeline:
 
 class RFuture:
     """std::future analogue (paper §5.1): blocking get(), non-blocking
-    poll(); carries the timeline for latency accounting."""
+    poll(); carries the timeline for latency accounting.
+
+    Under a ``VirtualClock`` (``_clock`` is stamped by the worker at
+    submission) a driver-thread ``get()`` pumps the simulated event loop
+    instead of blocking, so single-threaded simulations never deadlock
+    and timeouts are measured in simulated seconds.  Non-driver threads
+    block on the real event instead — their timeout is wall-clock
+    seconds, bounded regardless of whether the driver keeps advancing."""
 
     def __init__(self, invocation: "Invocation"):
         self.invocation = invocation
         self._event = threading.Event()
         self._result: Any = None
         self._error: Optional[BaseException] = None
+        self._clock = None            # set on submit when virtual
 
     # executor side -----------------------------------------------------
     def _fulfill(self, result: Any):
@@ -92,7 +100,15 @@ class RFuture:
         return self._event.is_set()
 
     def get(self, timeout: Optional[float] = None) -> Any:
-        if not self._event.wait(timeout):
+        clk = self._clock
+        if (clk is not None and clk.virtual and clk.is_driver()
+                and not self._event.is_set()):
+            clk.wait_until(self._event.is_set, timeout)
+            if not self._event.is_set():
+                raise TimeoutError(
+                    f"invocation {self.invocation.header.invocation_id} "
+                    f"timed out after {timeout} simulated s")
+        elif not self._event.wait(timeout):
             raise TimeoutError(
                 f"invocation {self.invocation.header.invocation_id} timed "
                 f"out after {timeout}s")

@@ -19,10 +19,10 @@ from __future__ import annotations
 import itertools
 import random
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.executor import (AllocationRejected, ExecutorCrash,
                                  ExecutorManager, ExecutorProcess,
                                  ExecutorWorker)
@@ -65,10 +65,12 @@ class Invoker:
     def __init__(self, client_id: str, rm: ResourceManager,
                  library: FunctionLibrary, *, seed: int = 0,
                  max_retries: int = 3, backoff_base: float = 0.005,
-                 backoff_cap: float = 0.5, allocation_rounds: int = 6):
+                 backoff_cap: float = 0.5, allocation_rounds: int = 6,
+                 clock: Clock = REAL_CLOCK):
         self.client_id = client_id
         self.rm = rm
         self.library = library
+        self.clock = clock
         self.max_retries = max_retries
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
@@ -109,7 +111,7 @@ class Invoker:
             servers = [s for s in self._replica.server_list()
                        if s.server_id not in self._removed_servers]
             if not servers:
-                time.sleep(backoff)
+                self.clock.sleep(backoff)
                 backoff = min(backoff * 2, self.backoff_cap)
                 continue
             order = self._rng.sample(servers, len(servers))  # permutation
@@ -129,7 +131,7 @@ class Invoker:
                 self.stats.allocations_granted += 1
                 remaining -= ask
             if remaining > 0:
-                time.sleep(backoff)
+                self.clock.sleep(backoff)
                 backoff = min(backoff * 2, self.backoff_cap)  # §3.5
         return n_workers - remaining
 
@@ -167,6 +169,12 @@ class Invoker:
     @property
     def n_workers(self) -> int:
         return len(self._alive_workers())
+
+    def connections(self) -> List[Connection]:
+        """Snapshot of cached connections (their processes + leases) —
+        the public view for harnesses and tests."""
+        with self._lock:
+            return list(self._conns)
 
     def worker_cold_breakdowns(self) -> List[Dict[str, float]]:
         with self._lock:

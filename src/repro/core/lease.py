@@ -2,16 +2,20 @@
 
 A client leases {workers, memory, timeout} directly from an executor
 manager; the resource manager is NOT involved in the allocation path.
-Lease lifetime is metered in GB-seconds for accounting (§5.4).
+Lease lifetime is metered in GB-seconds for accounting (§5.4).  All
+timestamps come from the lease's ``Clock`` (real by default, virtual
+under simulation) so expiry and metering are exact and testable without
+sleeping.
 """
 from __future__ import annotations
 
 import itertools
 import threading
-import time
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Optional
+
+from repro.core.clock import Clock, REAL_CLOCK
 
 _lease_ids = itertools.count(1)
 
@@ -23,6 +27,11 @@ class LeaseState(Enum):
     RELEASED = "released"        # client deallocated
     RETRIEVED = "retrieved"      # batch system took the node back
     FAILED = "failed"            # executor crash / node loss
+
+
+#: States a lease can never leave (the state machine's sinks).
+TERMINAL_STATES = frozenset({LeaseState.EXPIRED, LeaseState.RELEASED,
+                             LeaseState.RETRIEVED, LeaseState.FAILED})
 
 
 @dataclass
@@ -38,39 +47,48 @@ class LeaseRequest:
 class Lease:
     request: LeaseRequest
     server_id: str
+    # global counter default is for ad-hoc construction only; managers
+    # pass explicit per-manager ids so seeded replays are bit-identical
     lease_id: int = field(default_factory=lambda: next(_lease_ids))
     state: LeaseState = LeaseState.PENDING
-    t_granted: float = 0.0
+    t_granted: Optional[float] = None    # None until activated (a
+    #                                      VirtualClock can start at 0.0)
     t_ended: Optional[float] = None
+    clock: Clock = field(default=REAL_CLOCK, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False)
 
     def activate(self, now: Optional[float] = None):
         with self._lock:
+            if self.state != LeaseState.PENDING:
+                return     # terminal states are sinks; re-activation of
+                # an ACTIVE lease must not reset the allocation meter
             self.state = LeaseState.ACTIVE
-            self.t_granted = time.monotonic() if now is None else now
+            self.t_granted = self.clock.now() if now is None else now
 
     def end(self, state: LeaseState, now: Optional[float] = None):
         with self._lock:
             if self.state == LeaseState.ACTIVE:
                 self.state = state
-                self.t_ended = time.monotonic() if now is None else now
+                self.t_ended = self.clock.now() if now is None else now
 
     @property
     def alive(self) -> bool:
         return self.state == LeaseState.ACTIVE
 
     def expired(self, now: Optional[float] = None) -> bool:
-        now = time.monotonic() if now is None else now
+        if self.t_granted is None:
+            return False
+        now = self.clock.now() if now is None else now
         return (self.state == LeaseState.ACTIVE
                 and now - self.t_granted > self.request.timeout_s)
 
     def gb_seconds(self, now: Optional[float] = None) -> float:
         """Allocation meter t_a: GB of leased memory x seconds held."""
-        if self.t_granted == 0.0:
+        if self.t_granted is None:
             return 0.0
         end = self.t_ended
         if end is None:
-            end = time.monotonic() if now is None else now
+            end = self.clock.now() if now is None else now
         dur = max(0.0, end - self.t_granted)
         return (self.request.memory_bytes / 1e9) * dur

@@ -12,10 +12,10 @@ property test in tests/test_core_properties.py verifies convergence.
 from __future__ import annotations
 
 import threading
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
+from repro.core.clock import Clock, REAL_CLOCK, ScheduledCall
 from repro.core.executor import ExecutorManager
 from repro.core.perf_model import DEFAULT_NET, NetParams
 
@@ -25,7 +25,6 @@ class ServerEntry:
     manager: ExecutorManager
     epoch: int = 0
     available: bool = True
-    last_heartbeat: float = field(default_factory=time.monotonic)
 
     def rank_key(self):
         return (-self.manager.free_workers, self.manager.server_id)
@@ -152,8 +151,6 @@ class ResourceManagerReplica:
                 if not e.manager.heartbeat():
                     dead.append(sid)
                     del self._servers[sid]
-                else:
-                    e.last_heartbeat = time.monotonic()
         for sid in dead:
             self._gossip({"op": "remove", "server_id": sid})
             self.bus.publish({"op": "remove", "server_id": sid})
@@ -165,7 +162,9 @@ class ResourceManager:
     (scalability via replication, §3.4)."""
 
     def __init__(self, n_replicas: int = 3,
-                 net: NetParams = DEFAULT_NET, drop_rate: float = 0.0):
+                 net: NetParams = DEFAULT_NET, drop_rate: float = 0.0,
+                 clock: Clock = REAL_CLOCK):
+        self.clock = clock
         self.bus = AvailabilityBus(net, drop_rate)
         self.replicas = [ResourceManagerReplica(i, self.bus)
                          for i in range(n_replicas)]
@@ -173,6 +172,7 @@ class ResourceManager:
             r.connect_peers(self.replicas)
         self._hb_thread: Optional[threading.Thread] = None
         self._hb_stop = threading.Event()
+        self._hb_call: Optional[ScheduledCall] = None
 
     def primary(self) -> ResourceManagerReplica:
         return self.replicas[0]
@@ -187,8 +187,21 @@ class ResourceManager:
         self.primary().remove(server_id, grace_s)
 
     def start_heartbeats(self, interval_s: float = 0.2):
+        self.stop()                      # restart, don't leak a sweeper
+        if self.clock.virtual:
+            # recurring clock event instead of a thread: sweeps fire at
+            # deterministic simulated instants
+            def tick():
+                for r in self.replicas:
+                    r.sweep_heartbeats()
+            self._hb_call = self.clock.call_repeating(interval_s, tick)
+            return
+
+        stop = self._hb_stop = threading.Event()   # fresh flag: the
+        # previous thread keeps (and exits on) its own set event
+
         def loop():
-            while not self._hb_stop.wait(interval_s):
+            while not stop.wait(interval_s):
                 for r in self.replicas:
                     r.sweep_heartbeats()
         self._hb_thread = threading.Thread(target=loop, daemon=True)
@@ -196,3 +209,6 @@ class ResourceManager:
 
     def stop(self):
         self._hb_stop.set()
+        if self._hb_call is not None:
+            self._hb_call.cancel()
+            self._hb_call = None

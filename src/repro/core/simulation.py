@@ -1,0 +1,280 @@
+"""SimulatedCluster: the whole rFaaS stack under one ``VirtualClock``.
+
+This harness composes the batch system, resource-manager replicas,
+executor managers and client invokers — the full decentralized
+allocation + invocation pipeline — on simulated time, so scenarios that
+would need minutes of wall-clock sleeping (lease expiry, hot→warm decay,
+heartbeat sweeps, allocation backoff races) replay deterministically in
+milliseconds.  Everything is event-driven: worker execution uses the
+function library's *modeled* service times, network costs come from the
+LogfP perf model (§4), and a given seed always produces bit-identical
+latency statistics.
+
+Paper-section map (which simulated scenario exercises which claim):
+
+* §3.2/§3.4 decentralized allocation — ``client()`` invokers walking
+  random permutations of the replicated server list with exponential
+  backoff in virtual time; contention scenarios with hundreds of
+  clients never oversubscribe a node.
+* §3.3 hot/warm/cold tiers — ``hot_period`` windows measured on the
+  virtual clock: interarrival gaps longer than the window decay workers
+  to WARM (+4.67 us) while tight loops stay HOT (+326 ns), visible in
+  ``ScenarioStats.tier_counts``.
+* §3.5 fault tolerance — ``crash_node()`` at a chosen simulated instant
+  fails in-flight invocations; client libraries retry on surviving
+  executors with bounded attempts.
+* §5.3 batch-system retrieval — ``retrieve_node()`` drains and ends
+  leases as RETRIEVED; lease expiry sweeps (``start_lease_sweeper``)
+  end overdue leases as EXPIRED.
+* §5.4 accounting — the ledger's GB-second and compute-second totals
+  are exact functions of simulated time, asserted to femtosecond
+  precision in tests.
+
+``run_multi_tenant`` is the canned flagship scenario: N tenants, a
+Poisson arrival stream of invocations, optional lease churn and executor
+crashes — 1000 invocations complete in well under a second of wall time.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.accounting import Ledger
+from repro.core.batch_system import BatchSystem
+from repro.core.clock import ScheduledCall, VirtualClock
+from repro.core.executor import ExecutorManager
+from repro.core.functions import FunctionLibrary
+from repro.core.invoker import AllocationFailed, ExecutorCrash, Invoker
+from repro.core.lease import Lease
+from repro.core.perf_model import DEFAULT_NET, NetParams
+from repro.core.resource_manager import ResourceManager
+
+
+@dataclass
+class ScenarioStats:
+    """Deterministic summary of one simulated scenario: the same
+    latency-breakdown statistics the wall-clock benchmarks report,
+    comparable across runs with ``==``."""
+
+    invocations_requested: int = 0
+    completed: int = 0
+    failed: int = 0
+    retries: int = 0
+    allocation_rounds: int = 0
+    leases_granted: int = 0
+    tier_counts: Dict[str, int] = field(default_factory=dict)
+    lease_states: Dict[str, int] = field(default_factory=dict)
+    rtt_p50_s: float = 0.0
+    rtt_p99_s: float = 0.0
+    rtt_mean_s: float = 0.0
+    rtt_max_s: float = 0.0
+    net_in_mean_s: float = 0.0
+    overhead_mean_s: float = 0.0
+    exec_mean_s: float = 0.0
+    gb_seconds: float = 0.0
+    compute_seconds: float = 0.0
+    invocations_billed: int = 0
+    t_end_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+class SimulatedCluster:
+    """rFaaS managers + invokers + perf model under one VirtualClock."""
+
+    def __init__(self, *, n_nodes: int = 4, workers_per_node: int = 4,
+                 memory_per_node: int = 8 << 30, n_replicas: int = 2,
+                 hot_period: float = 1.0, fault_rate: float = 0.0,
+                 sandbox: str = "bare", net: NetParams = DEFAULT_NET,
+                 seed: int = 0, start_time: float = 0.0):
+        self.clock = VirtualClock(start_time)
+        self.ledger = Ledger()
+        self.net = net
+        self.seed = seed
+        self.rm = ResourceManager(n_replicas=n_replicas, net=net,
+                                  clock=self.clock)
+        self.bs = BatchSystem(self.rm, self.ledger, n_nodes=n_nodes,
+                              workers_per_node=workers_per_node,
+                              memory_per_node=memory_per_node,
+                              sandbox=sandbox, hot_period=hot_period,
+                              fault_rate=fault_rate, seed=seed,
+                              clock=self.clock)
+        self.bs.release_idle()
+        self.clients: List[Invoker] = []
+        self.leases: List[Lease] = []
+        self._sweeper: Optional[ScheduledCall] = None
+
+    # ------------------------------------------------------------ plumbing
+    def client(self, client_id: str, library: FunctionLibrary,
+               seed: Optional[int] = None, **kw) -> Invoker:
+        inv = Invoker(client_id, self.rm, library, clock=self.clock,
+                      seed=self.seed * 31 + len(self.clients)
+                      if seed is None else seed, **kw)
+        self.clients.append(inv)
+        return inv
+
+    def manager(self, node_id: str) -> ExecutorManager:
+        return self.bs.nodes[node_id].manager
+
+    def managers(self) -> List[ExecutorManager]:
+        return [n.manager for n in self.bs.nodes.values()
+                if n.manager is not None]
+
+    def at(self, t: float, fn, *args) -> ScheduledCall:
+        """Schedule ``fn(*args)`` at simulated time ``t``."""
+        return self.clock.call_at(t, fn, *args)
+
+    def run_for(self, seconds: float):
+        self.clock.advance(seconds)
+
+    def run_until_idle(self, max_time: Optional[float] = None):
+        self.clock.run_until_idle(max_time)
+
+    # ------------------------------------------------------------- control
+    def crash_node(self, node_id: str):
+        """Uncontrolled node loss (§3.5) at the current instant."""
+        mgr = self.bs.nodes[node_id].manager
+        if mgr is not None:
+            mgr.crash()
+
+    def retrieve_node(self, node_id: str, grace_s: float = 0.0):
+        """Batch job preempts the node (§5.3)."""
+        self.bs.retrieve_node(node_id, grace_s)
+
+    def start_lease_sweeper(self, interval_s: float = 0.05):
+        """Periodically end expired leases on every manager (§3.2)."""
+        self.stop_lease_sweeper()        # restart, don't leak a sweeper
+
+        def sweep():
+            for mgr in self.managers():
+                mgr.sweep_expired()
+        self._sweeper = self.clock.call_repeating(interval_s, sweep)
+
+    def stop_lease_sweeper(self):
+        if self._sweeper is not None:
+            self._sweeper.cancel()
+            self._sweeper = None
+
+    def _track_leases(self, inv: Invoker):
+        for c in inv.connections():
+            if all(c.process.lease is not l for l in self.leases):
+                self.leases.append(c.process.lease)
+
+    # ------------------------------------------------------------ scenario
+    def run_multi_tenant(self, *, n_clients: int = 4,
+                         n_invocations: int = 1000,
+                         workers_per_client: int = 2,
+                         payload_elems: int = 256,
+                         service_time_s: float = 100e-6,
+                         mean_interarrival_s: float = 200e-6,
+                         lease_timeout_s: Optional[float] = None,
+                         lease_sweep_interval_s: float = 0.01,
+                         crash_schedule: Optional[Dict[str, float]] = None,
+                         get_timeout_s: float = 120.0) -> ScenarioStats:
+        """Multi-tenant Poisson workload with optional lease churn and
+        node crashes; returns deterministic latency-breakdown stats."""
+        lib = FunctionLibrary("sim")
+        lib.register("work", lambda x: x, service_time_s=service_time_s)
+        rng = random.Random(self.seed * 7919 + 13)
+        churn = lease_timeout_s is not None    # 0.0 is a valid timeout
+        alloc_kw = dict(timeout_s=lease_timeout_s) if churn else {}
+
+        # tight backoffs keep nested virtual-time advances shallow when a
+        # tenant re-leases from inside a scheduled submission event
+        tenants = [self.client(f"tenant{i}", lib, allocation_rounds=2,
+                               backoff_base=1e-4, backoff_cap=1e-3)
+                   for i in range(n_clients)]
+        for t in tenants:
+            t.allocate(workers_per_client, **alloc_kw)
+            self._track_leases(t)
+        if churn:
+            self.start_lease_sweeper(lease_sweep_interval_s)
+        for node_id, t_crash in (crash_schedule or {}).items():
+            self.at(t_crash, self.crash_node, node_id)
+
+        payload = np.ones(payload_elems, np.float32)
+        futures = []
+
+        def fire(tenant: Invoker):
+            try:
+                futures.append(tenant.submit("work", payload))
+            except (AllocationFailed, ExecutorCrash):
+                # capacity lost to expiry/crash: re-lease, then retry
+                tenant.allocate(workers_per_client, **alloc_kw)
+                self._track_leases(tenant)
+                try:
+                    futures.append(tenant.submit("work", payload))
+                except (AllocationFailed, ExecutorCrash):
+                    pass                       # counted as failed below
+
+        t = self.clock.now()
+        for _ in range(n_invocations):
+            t += rng.expovariate(1.0 / mean_interarrival_s)
+            self.at(t, fire, tenants[rng.randrange(n_clients)])
+        # run past the last arrival, retire the sweeper (the scenario
+        # is over), then drain the remaining in-flight work
+        self.clock.run_until(t + 1.0)
+        self.stop_lease_sweeper()
+        self.run_until_idle()
+
+        rtts, tiers, done_timelines = [], {}, []
+        completed = failed = 0
+        for fut in futures:
+            try:
+                fut.get(get_timeout_s)
+            except (ExecutorCrash, TimeoutError, RuntimeError):
+                failed += 1
+                continue
+            completed += 1
+            tl = fut.timeline
+            done_timelines.append(tl)
+            rtts.append(tl.rtt_modeled)
+            tier = fut.invocation.tier.value
+            tiers[tier] = tiers.get(tier, 0) + 1
+        failed += n_invocations - len(futures)
+
+        for tenant in tenants:
+            self._track_leases(tenant)
+            tenant.deallocate()
+        self.run_until_idle()
+
+        lease_states: Dict[str, int] = {}
+        for lease in self.leases:
+            s = lease.state.value
+            lease_states[s] = lease_states.get(s, 0) + 1
+        totals = self.ledger.totals()
+        arr = np.asarray(rtts) if rtts else np.zeros(1)
+        return ScenarioStats(
+            invocations_requested=n_invocations,
+            completed=completed,
+            failed=failed,
+            retries=sum(t.stats.retries for t in tenants),
+            allocation_rounds=sum(t.stats.allocation_rounds
+                                  for t in tenants),
+            leases_granted=len(self.leases),
+            tier_counts=tiers,
+            lease_states=lease_states,
+            rtt_p50_s=float(np.percentile(arr, 50)),
+            rtt_p99_s=float(np.percentile(arr, 99)),
+            rtt_mean_s=float(arr.mean()),
+            rtt_max_s=float(arr.max()),
+            # breakdown means over COMPLETED invocations only (failed
+            # futures carry zeroed timelines), same population as rtt_*
+            net_in_mean_s=float(np.mean(
+                [t.net_in for t in done_timelines])
+                if done_timelines else 0.0),
+            overhead_mean_s=float(np.mean(
+                [t.overhead for t in done_timelines])
+                if done_timelines else 0.0),
+            exec_mean_s=float(np.mean(
+                [t.exec_time for t in done_timelines])
+                if done_timelines else 0.0),
+            gb_seconds=totals.gb_seconds,
+            compute_seconds=totals.compute_seconds,
+            invocations_billed=totals.invocations,
+            t_end_s=self.clock.now(),
+        )

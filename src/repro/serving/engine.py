@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import itertools
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -25,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FunctionLibrary, Invoker
+from repro.core.clock import Clock
 
 _session_ids = itertools.count(1)
 
@@ -112,17 +112,20 @@ class ServeEngine:
     """Client-side wave-batched generation over leased rFaaS workers."""
 
     def __init__(self, invoker: Invoker, *, batch_size: int = 4,
-                 eos_token: int = -1):
+                 eos_token: int = -1, clock: Optional[Clock] = None):
         self.invoker = invoker
         self.batch_size = batch_size
         self.eos_token = eos_token
+        # default to the invoker's clock: request timestamps must live
+        # on the same timeline the invocations complete on
+        self.clock = invoker.clock if clock is None else clock
         self._queue: List[GenRequest] = []
         self._rid = itertools.count(1)
         self.completed: List[GenRequest] = []
 
     def enqueue(self, prompt, max_new_tokens: int = 16) -> GenRequest:
         req = GenRequest(np.asarray(prompt, np.int32), max_new_tokens,
-                         next(self._rid), time.monotonic())
+                         next(self._rid), self.clock.now())
         self._queue.append(req)
         return req
 
@@ -143,7 +146,7 @@ class ServeEngine:
         out = self.invoker.invoke("prefill", {"tokens": toks})
         sid = out["sid"]
         nxt = out["next_token"]
-        now = time.monotonic()
+        now = self.clock.now()
         for i, r in enumerate(wave):
             r.tokens_out.append(int(nxt[i]))
             r.t_first_token = now
@@ -152,7 +155,7 @@ class ServeEngine:
             out = self.invoker.invoke(
                 "decode", {"sid": sid, "tokens": nxt[:, None]})
             nxt = out["next_token"]
-            now = time.monotonic()
+            now = self.clock.now()
             for i, r in enumerate(wave):
                 if len(r.tokens_out) < r.max_new_tokens and \
                         (not r.tokens_out
@@ -160,7 +163,7 @@ class ServeEngine:
                     r.tokens_out.append(int(nxt[i]))
                     if len(r.tokens_out) >= r.max_new_tokens:
                         r.t_done = now
-        now = time.monotonic()
+        now = self.clock.now()
         for r in wave:
             if r.t_done is None:
                 r.t_done = now
@@ -186,13 +189,16 @@ class ServeEngine:
 
 
 def backup_submit(invoker: Invoker, fn_name: str, payload,
-                  deadline_s: float):
+                  deadline_s: float, clock: Optional[Clock] = None):
     """Straggler mitigation for STATELESS functions: duplicate dispatch
-    after a deadline, first result wins (DESIGN.md §9)."""
+    after a deadline, first result wins (DESIGN.md §9).  Deadline
+    polling runs on the invoker's clock (overridable), so simulated
+    deadlines neither sleep nor drift."""
+    clock = invoker.clock if clock is None else clock
     f1 = invoker.submit(fn_name, payload)
-    t0 = time.monotonic()
-    while not f1.done() and time.monotonic() - t0 < deadline_s:
-        time.sleep(deadline_s / 50)
+    t0 = clock.now()
+    while not f1.done() and clock.now() - t0 < deadline_s:
+        clock.sleep(deadline_s / 50)
     if f1.done():
         return f1.get(0.0), False
     f2 = invoker.submit(fn_name, payload)          # backup request
@@ -201,4 +207,4 @@ def backup_submit(invoker: Invoker, fn_name: str, payload,
             return f1.get(0.0), False
         if f2.done():
             return f2.get(0.0), True
-        time.sleep(deadline_s / 50)
+        clock.sleep(deadline_s / 50)

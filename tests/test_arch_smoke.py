@@ -11,6 +11,10 @@ import pytest
 from repro.configs import ARCH_IDS, get_smoke
 from repro.models.factory import build_model
 
+# per-arch model compiles: ~80 s of XLA work; the core rFaaS suite
+# skips these via -m "not slow" (see ROADMAP.md)
+pytestmark = pytest.mark.slow
+
 BATCH, SEQ = 2, 32
 
 

@@ -1,0 +1,193 @@
+"""VirtualClock semantics: deterministic event order, cancellation,
+driver-thread pumping, and cross-thread sleep rendezvous."""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core import REAL_CLOCK, VirtualClock
+
+
+def _await_waiter(clk, deadline_s=5.0):
+    """Bounded spin: fail the test instead of hanging pytest if the
+    sleeper thread never registers."""
+    t0 = time.monotonic()
+    while not clk._waiters:
+        assert time.monotonic() - t0 < deadline_s, "sleeper never registered"
+
+
+def test_events_fire_in_time_then_fifo_order():
+    clk = VirtualClock()
+    order = []
+    clk.call_later(2.0, order.append, "late")
+    clk.call_later(1.0, order.append, "early-first")
+    clk.call_later(1.0, order.append, "early-second")   # same instant
+    clk.advance(3.0)
+    assert order == ["early-first", "early-second", "late"]
+    assert clk.now() == 3.0
+
+
+def test_advance_stops_at_target_not_next_event():
+    clk = VirtualClock()
+    fired = []
+    clk.call_later(5.0, fired.append, True)
+    clk.advance(4.999)
+    assert fired == [] and clk.now() == 4.999
+    clk.advance(0.001)
+    assert fired == [True]
+
+
+def test_cancelled_events_never_fire():
+    clk = VirtualClock()
+    fired = []
+    h = clk.call_later(1.0, fired.append, "a")
+    clk.call_later(2.0, fired.append, "b")
+    h.cancel()
+    clk.advance(5.0)
+    assert fired == ["b"]
+
+
+def test_callbacks_can_schedule_callbacks():
+    """Chained scheduling within one advance() — the pattern recurring
+    sweeps use — fires each hop at its exact instant."""
+    clk = VirtualClock()
+    stamps = []
+
+    def hop():
+        stamps.append(clk.now())
+        if len(stamps) < 4:
+            clk.call_later(0.25, hop)
+
+    clk.call_later(0.25, hop)
+    clk.advance(1.0)
+    assert stamps == [0.25, 0.5, 0.75, 1.0]
+
+
+def test_sleep_on_driver_thread_advances():
+    clk = VirtualClock()
+    clk.sleep(1.5)
+    assert clk.now() == 1.5
+
+
+def test_cross_thread_sleep_rendezvous():
+    """A non-driver thread sleeping on the clock wakes exactly when the
+    driver advances past its deadline."""
+    clk = VirtualClock()
+    woke_at = []
+
+    def sleeper():
+        clk.sleep(1.0)
+        woke_at.append(clk.now())
+
+    t = threading.Thread(target=sleeper, daemon=True)
+    t.start()
+    _await_waiter(clk)
+    clk.advance(0.5)
+    assert woke_at == []                  # deadline not reached yet
+    clk.advance(0.5)
+    t.join(timeout=5.0)
+    assert woke_at == [1.0]
+
+
+def test_wait_until_sees_sleeping_threads():
+    """A driver pumping wait_until() must advance to a non-driver
+    sleeper's deadline instead of declaring deadlock — the sleeper may
+    be the one who makes the predicate true."""
+    clk = VirtualClock()
+    done = threading.Event()
+
+    def sleeper():
+        clk.sleep(2.0)
+        done.set()
+
+    t = threading.Thread(target=sleeper, daemon=True)
+    t.start()
+    _await_waiter(clk)
+    assert clk.wait_until(done.is_set) is True    # no deadlock raise
+    assert clk.now() == 2.0
+    t.join(timeout=5.0)
+
+
+def test_run_until_idle_wakes_sleepers():
+    clk = VirtualClock()
+    woke = []
+
+    def sleeper():
+        clk.sleep(1.0)
+        woke.append(clk.now())
+
+    t = threading.Thread(target=sleeper, daemon=True)
+    t.start()
+    _await_waiter(clk)
+    clk.run_until_idle()
+    t.join(timeout=5.0)
+    assert woke == [1.0]
+
+
+def test_call_repeating_fires_and_cancels():
+    clk = VirtualClock()
+    stamps = []
+    h = clk.call_repeating(0.5, lambda: stamps.append(clk.now()))
+    clk.advance(1.6)
+    assert stamps == [0.5, 1.0, 1.5]
+    h.cancel()
+    clk.advance(2.0)
+    assert stamps == [0.5, 1.0, 1.5]      # no further firings
+
+
+def test_run_until_idle_terminates_with_armed_repeater():
+    """An armed sweeper must not make idle unreachable: repeating
+    events fire while one-shot work drains, then the loop stops."""
+    clk = VirtualClock()
+    sweeps, work = [], []
+    clk.call_repeating(0.1, lambda: sweeps.append(clk.now()))
+    clk.call_later(0.35, work.append, "done")
+    clk.run_until_idle()                  # would hang if repeats counted
+    assert work == ["done"]
+    assert sweeps == [pytest.approx(0.1), pytest.approx(0.2),
+                      pytest.approx(0.3)]
+
+
+def test_wait_until_deadlocks_despite_armed_repeater():
+    clk = VirtualClock()
+    clk.call_repeating(0.1, lambda: None)
+    with pytest.raises(RuntimeError, match="deadlock"):
+        clk.wait_until(lambda: False)     # timeout=None must not hang
+
+
+def test_wait_until_sees_work_enqueued_by_woken_sleeper():
+    """A woken sleeper that schedules follow-up events after waking
+    must not be mistaken for deadlock: the driver re-checks the queue
+    after the rendezvous grace."""
+    clk = VirtualClock()
+    done = threading.Event()
+
+    def sleeper():
+        clk.sleep(1.0)
+        clk.call_later(0.0, done.set)     # work enqueued AFTER waking
+
+    t = threading.Thread(target=sleeper, daemon=True)
+    t.start()
+    _await_waiter(clk)
+    assert clk.wait_until(done.is_set) is True
+    t.join(timeout=5.0)
+
+
+def test_wait_until_deadlock_detection():
+    clk = VirtualClock()
+    with pytest.raises(RuntimeError, match="deadlock"):
+        clk.wait_until(lambda: False)
+
+
+def test_wait_until_with_timeout_advances_to_deadline():
+    clk = VirtualClock()
+    assert clk.wait_until(lambda: False, timeout=2.0) is False
+    assert clk.now() == 2.0
+
+
+def test_real_clock_is_wall_time():
+    t0 = REAL_CLOCK.now()
+    REAL_CLOCK.sleep(0.01)
+    assert REAL_CLOCK.now() - t0 >= 0.009

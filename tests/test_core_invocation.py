@@ -1,35 +1,44 @@
 """Invocation tiers, timelines, parallel dispatch, fault tolerance
-(paper §3.3-§3.5)."""
-from __future__ import annotations
+(paper §3.3-§3.5).
 
-import time
+Tier-sensitive tests run on a ``VirtualClock``: the hot->warm decay
+window is crossed with ``clock.advance``, never ``time.sleep``, so the
++326 ns vs +4.67 us distinction is asserted deterministically.  Tests
+about real threading (parallel map, crash retry, measured timelines)
+keep the default real clock.
+"""
+from __future__ import annotations
 
 import numpy as np
 import pytest
 
 from repro.core import (BatchSystem, ExecutorCrash, FunctionLibrary,
                         Invoker, Ledger, ResourceManager, Tier,
-                        payload_bytes, write_time, DEFAULT_NET)
+                        VirtualClock, payload_bytes, write_time,
+                        DEFAULT_NET)
+from repro.core.invoker import AllocationFailed
 from repro.core.perf_model import Sandbox, tier_overhead
 
 
-def make_stack(n_nodes=2, workers=2, hot_period=0.05, **kw):
+def make_stack(n_nodes=2, workers=2, hot_period=0.05, clock=None, **kw):
+    ck = {} if clock is None else dict(clock=clock)
     ledger = Ledger()
-    rm = ResourceManager(n_replicas=2)
+    rm = ResourceManager(n_replicas=2, **ck)
     bs = BatchSystem(rm, ledger, n_nodes=n_nodes, workers_per_node=workers,
-                     hot_period=hot_period, **kw)
+                     hot_period=hot_period, **ck, **kw)
     bs.release_idle()
     lib = FunctionLibrary("t")
     lib.register("echo", lambda x: x)
     lib.register("square", lambda x: x * x)
     lib.register("boom", lambda x: (_ for _ in ()).throw(
         ExecutorCrash("deliberate")))
-    inv = Invoker("c", rm, lib, seed=0)
+    inv = Invoker("c", rm, lib, seed=0, **ck)
     return ledger, rm, bs, lib, inv
 
 
 def test_hot_after_execution_warm_after_idle():
-    _, _, _, _, inv = make_stack(hot_period=0.05)
+    clock = VirtualClock()
+    _, _, _, _, inv = make_stack(hot_period=0.05, clock=clock)
     inv.allocate(1)
     x = np.ones(16, np.float32)
     f1 = inv.submit("echo", x, worker_hint=0)
@@ -38,10 +47,14 @@ def test_hot_after_execution_warm_after_idle():
     f2 = inv.submit("echo", x, worker_hint=0)    # inside hot window
     f2.get()
     assert f2.invocation.tier == Tier.HOT
-    time.sleep(0.08)                             # hot window expires
+    clock.advance(0.05)                          # window boundary: still hot
     f3 = inv.submit("echo", x, worker_hint=0)
     f3.get()
-    assert f3.invocation.tier == Tier.WARM
+    assert f3.invocation.tier == Tier.HOT
+    clock.advance(0.05 + 1e-9)                   # decayed past the window
+    f4 = inv.submit("echo", x, worker_hint=0)
+    f4.get()
+    assert f4.invocation.tier == Tier.WARM
     inv.deallocate()
 
 
@@ -61,15 +74,33 @@ def test_timeline_matches_perf_model():
     inv.deallocate()
 
 
+def test_burst_queue_matches_real_fifo_tiers():
+    """Back-to-back submissions queued before the clock is pumped must
+    replay like the real thread's FIFO drain: the first is WARM, every
+    queued successor sees the predecessor's completion and runs HOT."""
+    clock = VirtualClock()
+    _, _, _, _, inv = make_stack(hot_period=10.0, clock=clock)
+    inv.allocate(1)
+    x = np.ones(16, np.float32)
+    futs = [inv.submit("echo", x, worker_hint=0) for _ in range(4)]
+    clock.run_until_idle()
+    assert [f.invocation.tier for f in futs] == \
+        [Tier.WARM, Tier.HOT, Tier.HOT, Tier.HOT]
+    inv.deallocate()
+
+
 def test_hot_faster_than_warm_modeled():
-    _, _, _, _, inv = make_stack(hot_period=10.0)
+    clock = VirtualClock()
+    _, _, _, _, inv = make_stack(hot_period=10.0, clock=clock)
     inv.allocate(1)
     x = np.ones(16, np.float32)
     f1 = inv.submit("echo", x, worker_hint=0); f1.get()   # warm
     f2 = inv.submit("echo", x, worker_hint=0); f2.get()   # hot
     assert f1.invocation.tier == Tier.WARM
     assert f2.invocation.tier == Tier.HOT
-    assert f2.timeline.rtt_modeled < f1.timeline.rtt_modeled
+    # exactly the modeled overhead gap: +4.67 us warm vs +326 ns hot
+    assert f1.timeline.rtt_modeled - f2.timeline.rtt_modeled == \
+        pytest.approx(DEFAULT_NET.warm_overhead - DEFAULT_NET.hot_overhead)
     inv.deallocate()
 
 
@@ -81,6 +112,30 @@ def test_parallel_map_disjoint_results():
     for i, o in enumerate(outs):
         assert (o == i * i).all()
     inv.deallocate()
+
+
+def test_queued_work_fails_fast_behind_crash():
+    """Real-thread mode: an invocation queued behind a fault-crash gets
+    an immediate ExecutorCrash, never a blocking TimeoutError —
+    matching virtual-mode _fail_pending (paper §3.5: clients learn of
+    crashes via broken connections, not timeouts)."""
+    import time as _time
+    from repro.core import DEFAULT_NET as net, Invocation
+    from repro.core.executor import ExecutorWorker
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    w = ExecutorWorker("w0", lib, Sandbox.BARE, 1.0, lambda *a: None,
+                       net, fault_rate=1.0, seed=0)   # crashes on 1st run
+    inv1 = Invocation.make(0, "echo", np.ones(4, np.float32))
+    inv2 = Invocation.make(0, "echo", np.ones(4, np.float32))
+    w.submit(inv1)
+    w.submit(inv2)                        # queued behind the crash
+    w.start()
+    with pytest.raises(ExecutorCrash):
+        inv1.future.get(5.0)
+    t0 = _time.monotonic()
+    with pytest.raises(ExecutorCrash):    # fails fast, not at timeout
+        inv2.future.get(5.0)
+    assert _time.monotonic() - t0 < 1.0
 
 
 def test_retry_on_executor_crash():
@@ -106,7 +161,7 @@ def test_fault_rate_recovery():
             r = inv.invoke("square", np.full(8, float(i), np.float32))
             assert (r == i * i).all()
             ok += 1
-        except ExecutorCrash:
+        except (ExecutorCrash, AllocationFailed):
             pass                                  # all workers died
     assert ok >= 25                               # vast majority succeed
 

@@ -1,4 +1,10 @@
-"""Lease protocol + decentralized allocation behaviour (paper §3.2-§3.4)."""
+"""Lease protocol + decentralized allocation behaviour (paper §3.2-§3.4).
+
+Runs on a ``VirtualClock``: lease lifetimes, expiry and GB-second
+metering are asserted *exactly* at simulated instants — no wall-clock
+sleeping anywhere.  The one deliberately threaded test (allocation
+racing) stays on the real clock, since it exercises lock correctness.
+"""
 from __future__ import annotations
 
 import threading
@@ -7,16 +13,17 @@ import pytest
 
 from repro.core import (AllocationRejected, BatchSystem, ExecutorManager,
                         FunctionLibrary, Invoker, Ledger, LeaseRequest,
-                        LeaseState, ResourceManager)
+                        LeaseState, ResourceManager, VirtualClock)
 
 
-def make_cluster(n_nodes=4, workers=4, **kw):
+def make_cluster(n_nodes=4, workers=4, *, clock=None, **kw):
+    clock = clock or VirtualClock()
     ledger = Ledger()
-    rm = ResourceManager(n_replicas=3)
+    rm = ResourceManager(n_replicas=3, clock=clock)
     bs = BatchSystem(rm, ledger, n_nodes=n_nodes,
-                     workers_per_node=workers, **kw)
+                     workers_per_node=workers, clock=clock, **kw)
     bs.release_idle()
-    return ledger, rm, bs
+    return ledger, rm, bs, clock
 
 
 def lib():
@@ -24,30 +31,44 @@ def lib():
 
 
 def test_allocation_within_capacity():
-    _, rm, bs = make_cluster(2, 4)
-    inv = Invoker("c", rm, lib(), seed=1)
+    _, rm, bs, clock = make_cluster(2, 4)
+    inv = Invoker("c", rm, lib(), seed=1, clock=clock)
     assert inv.allocate(8) == 8            # exactly the cluster capacity
     inv2 = Invoker("c2", rm, lib(), seed=2, allocation_rounds=2,
-                   backoff_base=0.001)
+                   backoff_base=0.001, clock=clock)
     assert inv2.allocate(1) == 0           # saturated -> 0 granted
     inv.deallocate()
     assert inv2.allocate(1) == 1           # capacity returns after release
     inv2.deallocate()
 
 
+def test_backoff_advances_virtual_time_only():
+    """Allocation backoff between rounds sleeps on the clock: the
+    failed rounds cost exponentially-growing *simulated* time."""
+    _, rm, bs, clock = make_cluster(1, 2)
+    hog = Invoker("hog", rm, lib(), seed=1, clock=clock)
+    assert hog.allocate(2) == 2
+    t0 = clock.now()
+    starved = Invoker("s", rm, lib(), seed=2, allocation_rounds=3,
+                      backoff_base=0.01, backoff_cap=1.0, clock=clock)
+    assert starved.allocate(1) == 0
+    # rounds back off 0.01 + 0.02 + 0.04 simulated seconds, exactly
+    assert clock.now() - t0 == pytest.approx(0.07)
+
+
 def test_immediate_rejection():
     ledger = Ledger()
-    mgr = ExecutorManager("s0", 2, 1 << 30, ledger)
+    mgr = ExecutorManager("s0", 2, 1 << 30, ledger, clock=VirtualClock())
     req = LeaseRequest("c", 4, 1 << 20, 60.0)     # 4 > 2 workers
     with pytest.raises(AllocationRejected):
         mgr.grant(req, lib())
 
 
 def test_saturation_removes_from_ranked_list():
-    _, rm, bs = make_cluster(2, 2)
+    _, rm, bs, clock = make_cluster(2, 2)
     replica = rm.primary()
     assert len(replica.server_list()) == 2
-    inv = Invoker("c", rm, lib(), seed=3)
+    inv = Invoker("c", rm, lib(), seed=3, clock=clock)
     inv.allocate(2)                        # fills one or two nodes
     full = [m for m in bs.nodes.values()
             if m.manager and m.manager.free_workers == 0]
@@ -58,8 +79,12 @@ def test_saturation_removes_from_ranked_list():
 
 
 def test_no_oversubscription_under_concurrency():
-    """Many clients racing for leases never exceed node capacity."""
-    _, rm, bs = make_cluster(3, 4)          # 12 worker slots
+    """Many clients racing for leases never exceed node capacity.
+    Real clock + real threads: this one is about lock correctness."""
+    ledger = Ledger()
+    rm = ResourceManager(n_replicas=3)
+    bs = BatchSystem(rm, ledger, n_nodes=3, workers_per_node=4)
+    bs.release_idle()                       # 12 worker slots
     invokers = [Invoker(f"c{i}", rm, lib(), seed=i, allocation_rounds=1)
                 for i in range(8)]
     granted = [0] * len(invokers)
@@ -82,24 +107,44 @@ def test_no_oversubscription_under_concurrency():
 
 
 def test_lease_metering_and_states():
+    """GB-second metering is *exact* under simulated time."""
+    clock = VirtualClock()
     ledger = Ledger()
-    mgr = ExecutorManager("s0", 4, 8 << 30, ledger)
+    mgr = ExecutorManager("s0", 4, 8 << 30, ledger, clock=clock)
     req = LeaseRequest("c", 2, 2 << 30, 60.0)
     proc = mgr.grant(req, lib())
     lease = proc.lease
     assert lease.state == LeaseState.ACTIVE
-    import time
-    time.sleep(0.02)
-    gbs_live = lease.gb_seconds()
-    assert gbs_live > 0
+    clock.advance(5.0)                     # hold the lease 5 s, exactly
+    expect = (2 << 30) / 1e9 * 5.0
+    assert lease.gb_seconds() == pytest.approx(expect)
     mgr.release(lease.lease_id)
     assert lease.state == LeaseState.RELEASED
-    assert ledger.bill("c").gb_seconds >= gbs_live
+    assert ledger.bill("c").gb_seconds == pytest.approx(expect)
+    clock.advance(10.0)                    # the meter stopped at release
+    assert lease.gb_seconds() == pytest.approx(expect)
+
+
+def test_lease_expiry_exact():
+    """A lease expires the instant its timeout elapses — asserted at
+    the boundary, no sleeping (paper §3.2)."""
+    clock = VirtualClock()
+    mgr = ExecutorManager("s0", 4, 8 << 30, Ledger(), clock=clock)
+    proc = mgr.grant(LeaseRequest("c", 1, 1 << 30, timeout_s=2.0), lib())
+    lease = proc.lease
+    clock.advance(2.0)
+    assert not lease.expired()             # t == timeout: still valid
+    assert mgr.sweep_expired() == []
+    clock.advance(1e-6)                    # one simulated microsecond past
+    assert lease.expired()
+    assert mgr.sweep_expired() == [lease.lease_id]
+    assert lease.state == LeaseState.EXPIRED
+    assert mgr.free_workers == 4           # capacity returned
 
 
 def test_batch_retrieval_immediate_and_graceful():
-    _, rm, bs = make_cluster(2, 2)
-    inv = Invoker("c", rm, lib(), seed=4)
+    _, rm, bs, clock = make_cluster(2, 2)
+    inv = Invoker("c", rm, lib(), seed=4, clock=clock)
     inv.allocate(4)
     node_id = next(iter(bs.nodes))
     bs.retrieve_node(node_id, grace_s=0.0)       # immediate
@@ -111,7 +156,7 @@ def test_batch_retrieval_immediate_and_graceful():
 
 
 def test_heartbeat_sweep_removes_dead_servers():
-    _, rm, bs = make_cluster(3, 2)
+    _, rm, bs, clock = make_cluster(3, 2)
     node = next(iter(bs.nodes.values()))
     node.manager.crash()
     dead = rm.primary().sweep_heartbeats()
@@ -119,3 +164,20 @@ def test_heartbeat_sweep_removes_dead_servers():
     for replica in rm.replicas:
         assert all(m.server_id != node.node_id
                    for m in replica.server_list())
+
+
+def test_heartbeat_sweeps_fire_on_schedule():
+    """start_heartbeats under a VirtualClock runs as recurring clock
+    events: a crashed server disappears at the next sweep instant."""
+    _, rm, bs, clock = make_cluster(2, 2)
+    rm.start_heartbeats(interval_s=0.5)
+    node = next(iter(bs.nodes.values()))
+    node.manager.crash()
+    clock.advance(0.4)                     # before the sweep: still listed
+    assert any(e.manager.server_id == node.node_id
+               for e in rm.primary()._servers.values())
+    clock.advance(0.2)                     # sweep at t=0.5 removed it
+    assert all(m.server_id != node.node_id
+               for m in rm.primary().server_list())
+    rm.stop()
+    clock.advance(2.0)                     # cancelled: no further events

@@ -3,7 +3,11 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax.numpy as jnp
 

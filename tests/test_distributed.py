@@ -11,6 +11,10 @@ import textwrap
 
 import pytest
 
+# minutes of XLA compile work per test; the core rFaaS suite skips
+# these via -m "not slow" (see ROADMAP.md)
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

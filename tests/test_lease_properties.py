@@ -1,0 +1,165 @@
+"""Property-style tests of the lease state machine and its accounting
+invariants (paper §3.2, §5.4).
+
+Seeded exhaustive/randomized transition fuzzing — deliberately NOT
+hypothesis-based, so these invariants are always checked even where the
+optional dependency is missing.  Invariants:
+
+* terminal states (EXPIRED/RELEASED/RETRIEVED/FAILED) are sinks;
+* ``gb_seconds`` is monotone non-decreasing in time and freezes at end;
+* after ``retrieve()`` / ``crash()`` the ledger's allocation and
+  compute totals are consistent with the leases' own meters.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (ExecutorManager, FunctionLibrary, Invoker, Ledger,
+                        Lease, LeaseRequest, LeaseState, ResourceManager,
+                        BatchSystem, TERMINAL_STATES, VirtualClock)
+
+END_STATES = [LeaseState.EXPIRED, LeaseState.RELEASED,
+              LeaseState.RETRIEVED, LeaseState.FAILED]
+
+
+def test_terminal_states_are_sinks_exhaustive():
+    """No (terminal state, operation) pair escapes the terminal state."""
+    for terminal, op_state in itertools.product(END_STATES, END_STATES):
+        clock = VirtualClock()
+        lease = Lease(LeaseRequest("c", 1, 1 << 30, 60.0), "s0",
+                      clock=clock)
+        lease.activate()
+        clock.advance(1.0)
+        lease.end(terminal)
+        t_ended = lease.t_ended
+        # attempt every further transition: end(), activate(), expiry
+        lease.end(op_state)
+        assert lease.state == terminal
+        assert lease.t_ended == t_ended
+        lease.activate()
+        assert lease.state == terminal
+        clock.advance(120.0)
+        assert not lease.expired()        # ended leases never re-expire
+
+
+def test_random_transition_walks_preserve_invariants():
+    """Random op sequences: once terminal, forever terminal; the meter
+    is monotone while active and frozen afterwards."""
+    rng = random.Random(1234)
+    for trial in range(200):
+        clock = VirtualClock()
+        lease = Lease(LeaseRequest("c", rng.randint(1, 8),
+                                   rng.randrange(1 << 20, 4 << 30),
+                                   rng.uniform(0.1, 100.0)), "s0",
+                      clock=clock)
+        lease.activate()
+        first_terminal = None
+        prev_gbs = -1.0
+        for step in range(20):
+            op = rng.randrange(3)
+            if op == 0:
+                clock.advance(rng.uniform(0.0, 10.0))
+            elif op == 1:
+                lease.end(rng.choice(END_STATES))
+                if first_terminal is None:
+                    first_terminal = lease.state
+            else:
+                lease.activate()
+            gbs = lease.gb_seconds()
+            assert gbs >= prev_gbs, "gb_seconds must never decrease"
+            prev_gbs = gbs
+            if first_terminal is not None:
+                assert lease.state == first_terminal
+        if first_terminal is not None:
+            frozen = lease.gb_seconds()
+            clock.advance(1e6)
+            assert lease.gb_seconds() == frozen
+
+
+def test_expiry_only_from_active():
+    clock = VirtualClock()
+    lease = Lease(LeaseRequest("c", 1, 1 << 30, 1.0), "s0", clock=clock)
+    assert not lease.expired()            # PENDING never expires
+    lease.activate()
+    clock.advance(2.0)
+    assert lease.expired()
+    lease.end(LeaseState.RELEASED)
+    assert not lease.expired()            # terminal never expires
+
+
+@pytest.mark.parametrize("teardown", ["retrieve", "crash"])
+def test_ledger_consistent_after_node_teardown(teardown):
+    """After the batch system retrieves a node (§5.3) or the node
+    crashes (§3.5), every lease is terminal and the ledger's totals
+    equal the sums over the leases' own meters."""
+    clock = VirtualClock()
+    ledger = Ledger()
+    mgr = ExecutorManager("s0", 8, 32 << 30, ledger, clock=clock)
+    lib = FunctionLibrary("t").register("echo", lambda x: x,
+                                        service_time_s=1e-3)
+    leases = []
+    for i in range(4):
+        proc = mgr.grant(LeaseRequest(f"c{i}", 2, 2 << 30, 3600.0), lib)
+        leases.append(proc.lease)
+        clock.advance(0.25)               # staggered grant times
+    # some compute happens before the teardown
+    worker = mgr._processes[leases[0].lease_id].workers[0]
+    from repro.core.invocation import Invocation
+    inv = Invocation.make(0, "echo", np.ones(4, np.float32))
+    worker.submit(inv)
+    clock.advance(0.1)
+    assert inv.future.done()
+
+    if teardown == "retrieve":
+        mgr.retrieve(grace_s=0.0)
+        expect_state = LeaseState.RETRIEVED
+    else:
+        mgr.crash()
+        expect_state = LeaseState.FAILED
+
+    assert all(l.state == expect_state for l in leases)
+    assert all(l.state in TERMINAL_STATES for l in leases)
+    # allocation totals: ledger == sum over lease meters, exactly
+    ledger.flush()
+    total_gbs = sum(ledger.bill(f"c{i}").gb_seconds for i in range(4))
+    assert total_gbs == pytest.approx(
+        sum(l.gb_seconds() for l in leases))
+    # compute totals: exactly the one modeled 1 ms execution
+    assert ledger.totals().compute_seconds == pytest.approx(1e-3)
+    assert ledger.totals().invocations == 1
+    # capacity fully returned
+    assert mgr.free_workers == 8
+
+
+def test_ledger_consistent_after_client_release_with_expiry_mix():
+    """Releases, expiries and live leases together: allocation billing
+    matches the per-lease meters at every point."""
+    clock = VirtualClock()
+    ledger = Ledger()
+    rm = ResourceManager(n_replicas=2, clock=clock)
+    bs = BatchSystem(rm, ledger, n_nodes=2, workers_per_node=4,
+                     clock=clock)
+    bs.release_idle()
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    short = Invoker("short", rm, lib, seed=1, clock=clock)
+    long_ = Invoker("long", rm, lib, seed=2, clock=clock)
+    short.allocate(2, timeout_s=1.0)
+    long_.allocate(2, timeout_s=3600.0)
+    leases = [c.process.lease for inv in (short, long_)
+              for c in inv.connections()]
+    clock.advance(2.0)                    # short's leases are overdue
+    expired = [lid for m in [n.manager for n in bs.nodes.values()]
+               for lid in m.sweep_expired()]
+    assert expired                        # the sweep ended them
+    long_.deallocate()
+    assert all(l.state in (LeaseState.EXPIRED, LeaseState.RELEASED)
+               for l in leases)
+    billed = (ledger.bill("short").gb_seconds
+              + ledger.bill("long").gb_seconds)
+    # ledger == sum of per-lease meters == n_leases x 1 GiB x 2 s, exact
+    assert billed == pytest.approx(sum(l.gb_seconds() for l in leases))
+    assert billed == pytest.approx(len(leases) * (1 << 30) / 1e9 * 2.0)

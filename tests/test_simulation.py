@@ -1,0 +1,157 @@
+"""SimulatedCluster harness: deterministic replay, crash-retry under
+simulated time, and allocation contention at a scale wall-clock
+threading could never reach (paper §3.3-§3.5 on a VirtualClock)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ExecutorCrash, FunctionLibrary, LeaseState,
+                        SimulatedCluster, Tier)
+
+
+def test_same_seed_identical_latency_stats():
+    """Two runs of a 1000-invocation multi-tenant scenario with lease
+    churn and an executor crash produce bit-identical statistics."""
+    def run(seed):
+        sim = SimulatedCluster(n_nodes=4, workers_per_node=4,
+                               hot_period=0.001, seed=seed)
+        return sim.run_multi_tenant(
+            n_clients=4, n_invocations=1000, lease_timeout_s=0.05,
+            crash_schedule={"node001": 0.03})
+
+    t0 = time.perf_counter()
+    s1 = run(seed=7)
+    wall = time.perf_counter() - t0
+    s2 = run(seed=7)
+    s3 = run(seed=11)
+    assert s1 == s2                       # bit-identical, not approx
+    assert s1 != s3                       # the seed actually matters
+    assert s1.completed + s1.failed == 1000
+    assert s1.completed >= 990            # crashes absorbed by retries
+    # lease churn happened: every lease the sweeper ended is terminal
+    assert s1.lease_states.get("expired", 0) > 0
+    # hot→warm decay happened: both tiers appear in the mix
+    assert s1.tier_counts.get("hot", 0) > 0
+    assert s1.tier_counts.get("warm", 0) > 0
+    # microsecond-scale RTTs out of the perf model, not wall time
+    assert 0 < s1.rtt_p50_s < 1e-3
+    assert wall < 2.0                     # simulated, not slept
+
+
+def test_latency_breakdown_matches_perf_model():
+    """The harness reports the same breakdown the benchmarks report:
+    rtt = net_in + overhead + exec + net_out, all modeled."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=3)
+    stats = sim.run_multi_tenant(n_clients=2, n_invocations=100,
+                                 service_time_s=50e-6)
+    assert stats.completed == 100
+    assert stats.exec_mean_s == pytest.approx(50e-6)
+    assert stats.rtt_mean_s > stats.exec_mean_s      # + net + overhead
+    # billing is an exact function of simulated time: 100 x 50 us
+    assert stats.compute_seconds == pytest.approx(100 * 50e-6)
+    assert stats.gb_seconds > 0
+
+
+def test_crash_retry_under_simulated_time():
+    """A node crash mid-stream fails in-flight work; the client library
+    retries on surviving executors without any wall-clock waiting."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2,
+                           hot_period=1.0, seed=5)
+    lib = FunctionLibrary("t").register("echo", lambda x: x,
+                                        service_time_s=10e-3)
+    c = sim.client("c0", lib)
+    assert c.allocate(4) == 4             # both nodes
+    x = np.ones(8, np.float32)
+    futs = [c.submit("echo", x) for _ in range(8)]
+    # crash one node while all 8 invocations are in flight
+    sim.at(5e-3, sim.crash_node, "node000")
+    sim.run_until_idle()
+    results = [f.get(10.0) for f in futs]  # retries pump the clock
+    assert len(results) == 8
+    assert all((r == 1.0).all() for r in results)
+    assert c.stats.retries > 0            # the crash really hit work
+    # the dead node's lease failed; the survivor's lease is still live
+    states = {conn.process.lease.server_id: conn.process.lease.state
+              for conn in c.connections()}
+    assert states.get("node001") == LeaseState.ACTIVE
+    c.deallocate()
+
+
+def test_hundred_client_allocation_contention():
+    """100 clients race for 32 slots: decentralized negotiation never
+    oversubscribes, losers back off in virtual time, and the whole
+    scramble takes milliseconds of wall clock."""
+    t0 = time.perf_counter()
+    sim = SimulatedCluster(n_nodes=8, workers_per_node=4, seed=2)
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    clients = [sim.client(f"c{i}", lib, allocation_rounds=2,
+                          backoff_base=1e-4) for i in range(100)]
+    granted = [c.allocate(1) for c in clients]
+    assert sum(granted) == 32             # exactly cluster capacity
+    for mgr in sim.managers():
+        assert mgr.free_workers == 0
+    # winners can invoke; losers failed cleanly with 0 workers
+    winners = [c for c, g in zip(clients, granted) if g]
+    f = winners[0].submit("echo", np.ones(4, np.float32))
+    assert (f.get(1.0) == 1.0).all()
+    # releasing frees capacity for the starved clients
+    for c in winners[:10]:
+        c.deallocate()
+    starved = [c for c, g in zip(clients, granted) if not g]
+    regrant = sum(c.allocate(1) for c in starved[:10])
+    assert regrant == 10
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_hot_warm_decay_in_scenario():
+    """Interarrival gaps longer than hot_period decay workers to WARM;
+    tight arrivals stay HOT (paper §3.3, Fig. 5)."""
+    # arrivals every ~50 us, hot window 1 s: everything after the first
+    # invocation per worker is HOT
+    sim = SimulatedCluster(n_nodes=1, workers_per_node=1, hot_period=1.0,
+                           seed=4)
+    hot = sim.run_multi_tenant(n_clients=1, n_invocations=50,
+                               workers_per_client=1,
+                               mean_interarrival_s=50e-6)
+    assert hot.tier_counts.get("hot", 0) == 49
+    assert hot.tier_counts.get("warm", 0) == 1    # first touch is warm
+    # arrivals every ~3x the hot window: every invocation decays to WARM
+    sim2 = SimulatedCluster(n_nodes=1, workers_per_node=1,
+                            hot_period=0.01, seed=4)
+    cold = sim2.run_multi_tenant(n_clients=1, n_invocations=20,
+                                 workers_per_client=1,
+                                 mean_interarrival_s=0.03)
+    assert cold.tier_counts.get("hot", 0) < 5
+    assert cold.tier_counts.get("warm", 0) > 15
+
+
+def test_retrieval_marks_leases_retrieved():
+    """Batch-system preemption (§5.3) under simulated time."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=6)
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    c = sim.client("c0", lib)
+    c.allocate(4)
+    leases = [conn.process.lease for conn in c.connections()]
+    sim.retrieve_node("node000")
+    assert any(l.state == LeaseState.RETRIEVED for l in leases)
+    assert sim.bs.nodes["node000"].state == "batch"
+    # the surviving node still serves invocations
+    f = c.submit("echo", np.ones(4, np.float32))
+    assert (f.get(1.0) == 1.0).all()
+    c.deallocate()
+
+
+def test_scenario_timing_is_virtual_not_wall():
+    """A scenario spanning >1 simulated second of lease churn finishes
+    in a fraction of that wall time — the whole point of the clock."""
+    t0 = time.perf_counter()
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=9)
+    stats = sim.run_multi_tenant(n_clients=2, n_invocations=200,
+                                 mean_interarrival_s=5e-3)  # ~1 s span
+    wall = time.perf_counter() - t0
+    assert stats.t_end_s > 1.0            # simulated seconds elapsed
+    assert wall < stats.t_end_s           # faster than real time
+    assert stats.completed == 200

@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpointing import latest_step, restore, save
 from repro.configs import get_smoke
@@ -13,6 +14,10 @@ from repro.data import SyntheticLMDataset
 from repro.models.factory import build_model
 from repro.optim import AdamW, AdamWConfig
 from repro.training.step import make_train_step
+
+# model build + jit + 30 train steps: minutes of XLA work; the core
+# rFaaS suite skips these via -m "not slow" (see ROADMAP.md)
+pytestmark = pytest.mark.slow
 
 
 def setup():
