@@ -15,14 +15,18 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
 def make_stack(lib: FunctionLibrary, *, n_nodes=2, workers=4,
                hot_period=5.0, sandbox="bare", fault_rate=0.0,
-               client="bench", seed=0):
+               client="bench", seed=0, fabric=None, clock=None):
+    """Full rFaaS stack; pass ``fabric`` (a transport.Fabric) to rerun
+    the same benchmark over a baseline transport (Fig. 1), and
+    ``clock`` (e.g. a VirtualClock) for deterministic modeled runs."""
+    ck = {} if clock is None else dict(clock=clock)
     ledger = Ledger()
-    rm = ResourceManager(n_replicas=2)
+    rm = ResourceManager(n_replicas=2, fabric=fabric, **ck)
     bs = BatchSystem(rm, ledger, n_nodes=n_nodes, workers_per_node=workers,
                      hot_period=hot_period, sandbox=sandbox,
-                     fault_rate=fault_rate, seed=seed)
+                     fault_rate=fault_rate, seed=seed, **ck)
     bs.release_idle()
-    inv = Invoker(client, rm, lib, seed=seed)
+    inv = Invoker(client, rm, lib, seed=seed, **ck)
     return ledger, rm, bs, inv
 
 

@@ -1,9 +1,15 @@
-"""Paper Fig. 10 / §6.1: RTT of a no-op function vs raw RDMA transport.
+"""Paper Fig. 10 / §6.1 + Fig. 1: RTT of a no-op function vs raw RDMA
+transport, and rFaaS vs baseline platforms expressed as FABRIC CONFIGS.
 
-Payloads 1 B .. 4 KiB; hot vs warm tiers; bare-metal vs Docker sandbox.
-``modeled`` columns are paper-comparable (LogfP network + measured exec);
-``measured`` is this host's in-process dispatch wall time (control-plane
-overhead actually incurred here).  Raw RDMA = network model alone.
+Part 1 (§6.1): payloads 1 B .. 4 KiB; hot vs warm tiers; bare-metal vs
+Docker sandbox.  ``modeled`` columns are paper-comparable (LogfP network
++ measured exec); ``measured`` is this host's in-process dispatch wall
+time.  Raw RDMA = the rdma fabric's message times alone.
+
+Part 2 (Fig. 1): the SAME stack re-run over the ``nightcore`` and
+``tcp`` fabrics — the baselines differ only in transport parameters, not
+code path (DESIGN.md §12).  Warm-tier rFaaS-over-RDMA vs nightcore must
+land in the paper's reported 17–28x speedup range.
 """
 from __future__ import annotations
 
@@ -12,14 +18,17 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, make_stack, median, p99
-from repro.core import FunctionLibrary, Tier, write_time
+from repro.core import Fabric, FunctionLibrary, Tier, VirtualClock
 
 SIZES = [1, 16, 64, 128, 256, 512, 1024, 2048, 4096]
+FIG1_SIZES = [1, 128, 1024, 16384, 262144, 1 << 20, 5 << 20]
+FIG1_FABRICS = ("rdma", "tcp", "nightcore")
 REPS = 200
 
 
 def run(quick: bool = False):
     reps = 50 if quick else REPS
+    rdma = Fabric("rdma")
     rows = []
     for sandbox in ("bare", "docker"):
         lib = FunctionLibrary("noop")
@@ -29,7 +38,7 @@ def run(quick: bool = False):
         inv.allocate(1, sandbox=sandbox)
         for size in SIZES:
             payload = np.zeros(size, np.uint8)
-            raw_rtt = write_time(size + 12) + write_time(size)
+            raw_rtt = rdma.message_time(size + 12) + rdma.message_time(size)
             # first call after idle -> warm; rest -> hot
             per_tier = {Tier.WARM.value: [], Tier.HOT.value: []}
             meas = {Tier.WARM.value: [], Tier.HOT.value: []}
@@ -69,6 +78,48 @@ def run(quick: bool = False):
     over = sum(r[6] for r in hot) / len(hot)
     print(f"# mean hot overhead over raw RDMA (excl. function exec): "
           f"{over:.0f} ns (paper: ~326 ns)")
+    fabric_rows = run_fabric_comparison(quick)
+    return rows, fabric_rows
+
+
+def run_fabric_comparison(quick: bool = False):
+    """Fig. 1 through one code path: the identical stack + workload per
+    fabric, on a VirtualClock so exec time is exactly zero and every
+    number is the transport model alone.  Warm tier (no busy-polling
+    assumption about the baselines)."""
+    sizes = FIG1_SIZES[:4] if quick else FIG1_SIZES
+    rtts = {}                    # fabric -> {size: warm rtt}
+    for fname in FIG1_FABRICS:
+        clock = VirtualClock()
+        lib = FunctionLibrary("noop")
+        lib.register("noop", lambda x: x)         # service_time 0
+        _, _, _, inv = make_stack(lib, n_nodes=1, workers=1,
+                                  hot_period=1e-9,
+                                  fabric=Fabric(fname, clock=clock),
+                                  clock=clock)
+        inv.allocate(1)
+        rtts[fname] = {}
+        for size in sizes:
+            clock.advance(1.0)   # decay past the hot window -> WARM
+            f = inv.submit("noop", np.zeros(size, np.uint8),
+                           worker_hint=0)
+            f.get(1.0)
+            assert f.invocation.tier == Tier.WARM
+            rtts[fname][size] = f.timeline.rtt_modeled
+        inv.deallocate()
+    rows = []
+    for size in sizes:
+        base = rtts["rdma"][size]
+        rows.append([size, base * 1e6]
+                    + [x for fname in FIG1_FABRICS[1:]
+                       for x in (rtts[fname][size] * 1e6,
+                                 rtts[fname][size] / base)])
+    emit("invocation_latency_fabrics", rows,
+         ["bytes", "rdma_us", "tcp_us", "tcp_x",
+          "nightcore_us", "nightcore_x"])
+    nc = [rtts["nightcore"][s] / rtts["rdma"][s] for s in sizes]
+    print(f"# rFaaS(rdma) vs nightcore fabric, warm tier: "
+          f"{min(nc):.1f}-{max(nc):.1f}x (paper Fig. 1: 17-28x)")
     return rows
 
 

@@ -25,7 +25,12 @@ from repro.core.perf_model import (BASELINE_MODELS, DEFAULT_NET, NetParams,
                                    plan_split, tier_overhead, write_time)
 from repro.core.resource_manager import (AvailabilityBus, ResourceManager,
                                          ResourceManagerReplica)
-from repro.core.simulation import ScenarioStats, SimulatedCluster
+from repro.core.simulation import (PartitionStats, ScenarioStats,
+                                   SimulatedCluster)
+from repro.core.transport import (Channel, ChannelDropped, ChannelError,
+                                  ChannelPartitioned, CONTROL_MSG_BYTES,
+                                  FABRICS, Fabric, FabricParams,
+                                  HEARTBEAT_MSG_BYTES)
 
 __all__ = [
     "ClientBill", "Ledger", "Price", "BatchSystem", "Node",
@@ -38,6 +43,8 @@ __all__ = [
     "TERMINAL_STATES", "BASELINE_MODELS", "DEFAULT_NET", "NetParams",
     "Sandbox", "Tier", "invocation_rtt", "max_offload_rate", "n_local_min",
     "plan_split", "tier_overhead", "write_time", "AvailabilityBus",
-    "ResourceManager", "ResourceManagerReplica", "ScenarioStats",
-    "SimulatedCluster",
+    "ResourceManager", "ResourceManagerReplica", "PartitionStats",
+    "ScenarioStats", "SimulatedCluster", "Channel", "ChannelDropped",
+    "ChannelError", "ChannelPartitioned", "CONTROL_MSG_BYTES", "FABRICS",
+    "Fabric", "FabricParams", "HEARTBEAT_MSG_BYTES",
 ]

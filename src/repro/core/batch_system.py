@@ -42,8 +42,11 @@ class BatchSystem:
                                  memory_per_node)
             for i in range(n_nodes)
         }
+        # node managers join the resource manager's transport fabric so
+        # cluster-wide partitions/faults cover their traffic too
         self._mk = dict(sandbox=sandbox, hot_period=hot_period,
-                        fault_rate=fault_rate, clock=clock)
+                        fault_rate=fault_rate, clock=clock,
+                        fabric=rm.fabric)
 
     # ----------------------------------------------------------- REST API
     def release_node(self, node_id: str) -> ExecutorManager:

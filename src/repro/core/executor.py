@@ -2,9 +2,11 @@
 
 An ``ExecutorManager`` owns the spare capacity of one node (here: worker
 slots + memory budget).  Clients negotiate leases DIRECTLY with managers
-(decentralized allocation, §3.2); a granted lease spawns an
-``ExecutorProcess`` — an isolated sandbox holding the pushed function
-library and one ``ExecutorWorker`` per requested worker.  Workers
+(decentralized allocation, §3.2) over control channels of the shared
+transport fabric (DESIGN.md §12) — connection setup, the negotiation
+message and the code push are all modeled channel traffic; a granted
+lease spawns an ``ExecutorProcess`` — an isolated sandbox holding the
+pushed function library and one ``ExecutorWorker`` per requested worker.  Workers
 implement the hot/warm state machine: a worker is HOT (busy-polling, +326
 ns modeled overhead) for ``hot_period`` seconds after each execution,
 then falls back to WARM (event-blocked, +4.67 us modeled).  Crashes are
@@ -42,7 +44,9 @@ from repro.core.functions import FunctionLibrary
 from repro.core.invocation import Invocation, payload_bytes
 from repro.core.lease import Lease, LeaseRequest, LeaseState
 from repro.core.perf_model import (DEFAULT_NET, NetParams, Sandbox, Tier,
-                                   tier_overhead, write_time)
+                                   tier_overhead)
+from repro.core.transport import (Channel, ChannelError, CONTROL_MSG_BYTES,
+                                  Fabric, fabric_params_for_net)
 
 
 class ExecutorCrash(RuntimeError):
@@ -189,12 +193,7 @@ class ExecutorWorker(threading.Thread):
                 inv.timeline.dispatch_measured = max(
                     0.0, self.clock.now() - inv.timeline.t_submit
                     - exec_time)
-                inv.model_network(payload_bytes(result), self.net)
-                self._last_activity = self.clock.now()
-                self.busy_seconds += exec_time
-                self.n_invocations += 1
-                self.on_done(self, inv, exec_time, None)
-                inv.future._fulfill(result)
+                self._complete(inv, result, exec_time)
             except BaseException as e:  # noqa: BLE001 — forwarded to client
                 exec_time = time.perf_counter() - t0
                 self.on_done(self, inv, exec_time, e)
@@ -273,19 +272,35 @@ class ExecutorWorker(threading.Thread):
             present = self._pending.pop(inv.header.invocation_id, None)
         if present is None:
             return                    # crashed mid-execution
-        now = self.clock.now()
         inv.timeline.exec_time = svc
         inv.timeline.dispatch_measured = max(
-            0.0, now - svc - inv.timeline.t_submit)   # queueing delay
-        inv.model_network(payload_bytes(result), self.net)
-        self._last_activity = now
-        self.busy_seconds += svc
-        self.n_invocations += 1
-        self.on_done(self, inv, svc, None)
-        inv.future._fulfill(result)
+            0.0, self.clock.now() - svc
+            - inv.timeline.t_submit)      # queueing delay
+        self._complete(inv, result, svc)
         with self._submit_lock:
             self._vactive = False
             self._vkick_locked()
+
+    def _complete(self, inv: Invocation, result, exec_time: float):
+        """Deliver the result home and retire the invocation — shared
+        by the threaded and virtual paths so their semantics cannot
+        drift.  The work ran regardless of delivery: the tier window,
+        worker counters AND billing all advance (§5.4 accounts executed
+        compute); only the future observes a broken route — the client
+        sees a dead connection and retries elsewhere (§3.5)."""
+        derr: Optional[BaseException] = None
+        try:
+            inv.finish_transport(payload_bytes(result), net=self.net)
+        except ChannelError as ce:
+            derr = ExecutorCrash(f"result return failed: {ce}")
+        self._last_activity = self.clock.now()
+        self.busy_seconds += exec_time
+        self.n_invocations += 1
+        self.on_done(self, inv, exec_time, None)
+        if derr is not None:
+            inv.future._fail(derr)
+        else:
+            inv.future._fulfill(result)
 
     def _fail_pending(self, err: ExecutorCrash,
                       keep_id: Optional[int] = None):
@@ -327,14 +342,20 @@ class ExecutorManager:
                  ledger: Ledger, *, sandbox: str = "bare",
                  hot_period: float = 1.0, net: NetParams = DEFAULT_NET,
                  fault_rate: float = 0.0, seed: int = 0,
-                 clock: Clock = REAL_CLOCK):
+                 clock: Clock = REAL_CLOCK,
+                 fabric: Optional[Fabric] = None):
         self.server_id = server_id
         self.capacity_workers = n_workers
         self.capacity_memory = memory_bytes
         self.ledger = ledger
         self.sandbox = Sandbox(sandbox)
         self.hot_period = hot_period
-        self.net = net
+        # the shared transport fabric: clients negotiate leases and push
+        # code over its control channels; a legacy bare ``net`` argument
+        # gets a private rdma-style fabric with the same parameters
+        self.fabric = fabric if fabric is not None else Fabric(
+            fabric_params_for_net(net), clock=clock, seed=seed)
+        self.net = self.fabric.net
         self.fault_rate = fault_rate
         self.clock = clock
         self._seed = seed
@@ -367,10 +388,14 @@ class ExecutorManager:
                     "sandbox": self.sandbox.value}
 
     # ----------------------------------------------------------- allocation
-    def grant(self, request: LeaseRequest,
-              library: FunctionLibrary) -> ExecutorProcess:
+    def grant(self, request: LeaseRequest, library: FunctionLibrary,
+              channel: Optional[Channel] = None) -> ExecutorProcess:
         """Direct client->manager negotiation.  Rejection is IMMEDIATE
-        (paper §3.3 cold): no queueing, the client walks on."""
+        (paper §3.3 cold): no queueing, the client walks on.
+
+        ``channel`` is the client's cached control channel: its one-time
+        setup cost lands in the cold breakdown on first use only, so a
+        repeat allocation over the same connection is visibly warm."""
         with self._lock:
             if not (self._alive and self._accepting):
                 raise AllocationRejected(f"{self.server_id} not accepting")
@@ -402,10 +427,22 @@ class ExecutorManager:
         spawn_measured = 0.0 if self.clock.virtual \
             else time.perf_counter() - t0
 
+        # all control-plane wire costs flow through the transport layer:
+        # connection setup (paid once per cached channel), the lease
+        # negotiation message (already counted by the client's rpc, so
+        # modeled only here), and the code push (§5.2 .so transfer —
+        # counted, it rides the negotiation that just succeeded)
+        connect_cost = (channel.take_setup() if channel is not None
+                        else self.fabric.params.connect_cost)
+        code_push = (channel.transfer(library.code_size)
+                     if channel is not None
+                     else self.fabric.message_time(library.code_size))
         proc = ExecutorProcess(lease, workers, library, cold_breakdown={
-            "connect": 2 * self.net.latency,
-            "submit_allocation": self.net.latency,
-            "code_push": write_time(library.code_size, self.net),
+            "connect": connect_cost,
+            "submit_allocation": (channel if channel is not None
+                                  else self.fabric).message_time(
+                                      CONTROL_MSG_BYTES),
+            "code_push": code_push,
             "spawn_workers": tier_overhead(Tier.COLD, sandbox, self.net),
             "spawn_measured": spawn_measured,
         })

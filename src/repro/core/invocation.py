@@ -4,9 +4,11 @@ The wire protocol mirrors the paper (§5.2): a 12-byte header (function
 index, invocation id, return-buffer rkey) is RDMA-written with the
 payload into the worker's buffer; the result is RDMA-written back with an
 immediate value carrying (status, invocation id).  Here the "write" is an
-in-process handoff; the *modeled* network time (perf_model) and the
-*measured* execution/dispatch times are recorded in a per-invocation
-timeline so benchmarks report paper-comparable round trips.
+in-process handoff over an explicit transport ``Channel`` (DESIGN.md
+§12): the client's dispatch stamps the modeled inbound write on the
+timeline, the executor's result return stamps the outbound one, and the
+*measured* execution/dispatch times are recorded alongside so benchmarks
+report paper-comparable round trips.
 """
 from __future__ import annotations
 
@@ -17,8 +19,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core.perf_model import (DEFAULT_NET, Sandbox, Tier,
-                                   tier_overhead, write_time)
+from repro.core.perf_model import NetParams, Sandbox, Tier, tier_overhead
+from repro.core.transport import fabric_params_for_net
 
 _inv_ids = itertools.count(1)
 
@@ -133,6 +135,9 @@ class Invocation:
     sandbox: Sandbox = Sandbox.BARE
     retries: int = 0
     on_complete: Optional[Callable] = None
+    #: data channel the invocation was dispatched on (transport.Channel);
+    #: the executor returns the result over the same queue pair
+    via: Optional[Any] = None
 
     @classmethod
     def make(cls, fn_index: int, fn_name: str, payload: Any,
@@ -143,9 +148,25 @@ class Invocation:
         inv.future = RFuture(inv)
         return inv
 
-    def model_network(self, bytes_out: int, net=DEFAULT_NET):
-        """Fill modeled components once tier/result size are known."""
-        self.timeline.net_in = write_time(
-            self.bytes_in + InvocationHeader.SIZE, net)
-        self.timeline.net_out = write_time(bytes_out, net)
-        self.timeline.overhead = tier_overhead(self.tier, self.sandbox, net)
+    def finish_transport(self, bytes_out: int,
+                         net: Optional[NetParams] = None):
+        """Model the result write back over the dispatch channel plus
+        the tier overhead, once tier and result size are known.  May
+        raise ``ChannelError`` when the route home is gone (partition
+        mid-execution) — the executor surfaces that as a crash and the
+        client retries elsewhere (§3.5).  ``net`` is the fallback
+        parameter set for channel-less direct submissions (no Invoker
+        dispatch stamped ``via``/``net_in``): both wire components are
+        modeled from it so their RTTs stay paper-comparable."""
+        ch = self.via
+        if ch is not None:
+            self.timeline.net_out = ch.deliver_result(bytes_out)
+            net = ch.fabric.net
+        elif net is not None:
+            params = fabric_params_for_net(net)
+            self.timeline.net_in = params.message_time(
+                self.bytes_in + InvocationHeader.SIZE)
+            self.timeline.net_out = params.message_time(bytes_out)
+        if net is not None:
+            self.timeline.overhead = tier_overhead(self.tier, self.sandbox,
+                                                   net)

@@ -6,11 +6,17 @@
   * ``allocate(n_workers, ...)`` — reads a ranked server list from a
     random resource-manager REPLICA, walks a RANDOM PERMUTATION of it
     (each server asked at most once per round), negotiates leases
-    directly with executor managers, retries rounds with exponential
-    backoff; connections are cached for warm/hot reuse.
+    directly with executor managers OVER CONTROL CHANNELS (transport
+    fabric, DESIGN.md §12) — the connection-setup cost is paid once and
+    the channel cached, making the paper's warm/hot connection reuse
+    explicit — and retries rounds with exponential backoff.  Lost
+    negotiation messages (injected drops, partitions) are absorbed by
+    the same backoff loop.
   * ``submit(fn, payload)`` -> RFuture — round-robin over connected
-    workers; on executor crash the library retries the invocation on
-    another worker/server up to ``max_retries`` (§3.5).
+    workers; each dispatch is a data-channel send whose modeled wire
+    time lands on the invocation timeline.  On executor crash OR broken
+    route the library retries the invocation on another worker/server
+    up to ``max_retries`` (§3.5).
   * private executors (§3.5): a job-internal manager can be attached so
     offloading still works under public-resource starvation.
 """
@@ -20,16 +26,19 @@ import itertools
 import random
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.executor import (AllocationRejected, ExecutorCrash,
                                  ExecutorManager, ExecutorProcess,
                                  ExecutorWorker)
 from repro.core.functions import FunctionLibrary
-from repro.core.invocation import Invocation, RFuture
+from repro.core.invocation import Invocation, InvocationHeader, RFuture
 from repro.core.lease import LeaseRequest
 from repro.core.resource_manager import ResourceManager
+from repro.core.transport import (Channel, ChannelDropped, ChannelError,
+                                  ChannelPartitioned, CONTROL_MSG_BYTES,
+                                  Fabric, WIRE_COUNTERS)
 
 ALWAYS_WARM_INVOCATIONS = "always_warm"
 
@@ -59,6 +68,11 @@ class InvokerStats:
     invocations: int = 0
     retries: int = 0
     failures: int = 0
+    # transport-layer surface (DESIGN.md §12)
+    connections_opened: int = 0      # control channels set up (cold)
+    connections_reused: int = 0      # cached-channel allocations (warm)
+    negotiation_faults: int = 0      # lease rpcs lost to drops/partitions
+    dispatch_faults: int = 0         # data-channel sends that failed over
 
 
 class Invoker:
@@ -66,7 +80,8 @@ class Invoker:
                  library: FunctionLibrary, *, seed: int = 0,
                  max_retries: int = 3, backoff_base: float = 0.005,
                  backoff_cap: float = 0.5, allocation_rounds: int = 6,
-                 clock: Clock = REAL_CLOCK):
+                 clock: Clock = REAL_CLOCK,
+                 fabric: Optional[Fabric] = None):
         self.client_id = client_id
         self.rm = rm
         self.library = library
@@ -75,14 +90,23 @@ class Invoker:
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
         self.allocation_rounds = allocation_rounds
+        # one fabric per cluster: default to the resource manager's so a
+        # single partition() severs control and data plane together
+        self.fabric = fabric if fabric is not None else rm.fabric
+        self.endpoint = f"client:{client_id}"
         self._rng = random.Random(seed)
         self._replica = rm.replica_for(seed)
         self._conns: List[Connection] = []
+        self._ctrl: Dict[str, Channel] = {}      # server_id -> control ch
+        self._data: Dict[str, Channel] = {}      # worker name -> data ch
+        # counters of channels already closed, so transport_stats()
+        # stays monotonic across failover/deallocate
+        self._retired_wire = {key: 0 for key in WIRE_COUNTERS}
         self._rr = itertools.count()
         self._lock = threading.RLock()
         self.stats = InvokerStats()
         self._removed_servers: set = set()
-        rm.bus.subscribe(self._on_delta)
+        rm.bus.subscribe(self._on_delta, endpoint=self.endpoint)
 
     # ------------------------------------------------------- notifications
     def _on_delta(self, delta: dict):
@@ -94,16 +118,70 @@ class Invoker:
             # paper §5.3) — clear the tombstone
             self._removed_servers.discard(delta["server_id"])
 
+    def _backoffs(self):
+        """Exponential backoff schedule: base, doubling to the cap
+        (§3.5) — the one implementation behind every retry loop."""
+        b = self.backoff_base
+        while True:
+            yield b
+            b = min(b * 2, self.backoff_cap)
+
+    # ----------------------------------------------------------- transport
+    def _control(self, server_id: str) -> Channel:
+        """Cached control channel to a manager: the connection-setup
+        cost is paid on first contact only (warm reuse, §3.3)."""
+        with self._lock:
+            ch = self._ctrl.get(server_id)
+            if ch is None or ch.closed:
+                ch = self.fabric.connect(self.endpoint, server_id)
+                self._ctrl[server_id] = ch
+                self.stats.connections_opened += 1
+            else:
+                self.stats.connections_reused += 1
+            return ch
+
+    def _add_connection(self, conn: Connection):
+        """Open one data channel per leased worker (paper §3.3: threads
+        never share RDMA resources), THEN publish the connection — a
+        concurrent dispatch never sees a worker without its channel."""
+        with self._lock:
+            for w in conn.process.workers:
+                self._data[w.name] = self.fabric.connect(
+                    self.endpoint, conn.manager.server_id)
+            self._conns.append(conn)
+
+    def _close_conn_locked(self, conn: Connection, faulted: bool = False):
+        """Drop a connection's data channels (folding their counters
+        into the retired totals); caller holds the lock.  ``faulted``
+        marks the route broken so a late in-flight result cannot slip
+        through a post-heal delivery window."""
+        for w in conn.process.workers:
+            ch = self._data.pop(w.name, None)
+            if ch is not None:
+                ch.fold_into(self._retired_wire)
+                ch.close(faulted=faulted)
+
+    def transport_stats(self) -> dict:
+        """Cumulative wire counters over this client's channels, open
+        and retired — monotonic across failover and deallocate."""
+        with self._lock:
+            chans = list(self._ctrl.values()) + list(self._data.values())
+            out = {"channels": len(chans), **self._retired_wire}
+        for ch in chans:
+            ch.fold_into(out)
+        return out
+
     # ----------------------------------------------------------- allocation
     def allocate(self, n_workers: int, memory_bytes: int = 1 << 30,
                  timeout_s: float = 3600.0, sandbox: str = "bare",
                  mode: str = ALWAYS_WARM_INVOCATIONS) -> int:
         """Lease ``n_workers`` across servers; returns workers granted.
         Decentralized: random permutation of the replica's ranked list,
-        direct negotiation, exponential backoff between rounds."""
+        direct negotiation over control channels, exponential backoff
+        between rounds (which also absorbs lost negotiation messages)."""
         del mode                         # pre-allocation IS the warm mode
         remaining = n_workers
-        backoff = self.backoff_base
+        delays = self._backoffs()
         for rnd in range(self.allocation_rounds):
             if remaining <= 0:
                 break
@@ -111,28 +189,35 @@ class Invoker:
             servers = [s for s in self._replica.server_list()
                        if s.server_id not in self._removed_servers]
             if not servers:
-                self.clock.sleep(backoff)
-                backoff = min(backoff * 2, self.backoff_cap)
+                self.clock.sleep(next(delays))
                 continue
             order = self._rng.sample(servers, len(servers))  # permutation
             for mgr in order:
                 if remaining <= 0:
                     break
-                ask = min(remaining, max(1, mgr.free_workers))
+                free = mgr.free_workers
+                if free <= 0:
+                    continue     # saturated: asking would only burn a
+                    # guaranteed-rejected negotiation round trip
+                ask = min(remaining, free)
                 req = LeaseRequest(self.client_id, ask, memory_bytes,
                                    timeout_s, sandbox)
                 self.stats.allocations_tried += 1
+                ctrl = self._control(mgr.server_id)
                 try:
-                    proc = mgr.grant(req, self.library)
+                    ctrl.rpc(CONTROL_MSG_BYTES)   # lease negotiation
+                except ChannelError:
+                    self.stats.negotiation_faults += 1
+                    continue     # lost/blocked rpc -> walk on, back off
+                try:
+                    proc = mgr.grant(req, self.library, channel=ctrl)
                 except AllocationRejected:
                     continue             # immediate rejection -> walk on
-                with self._lock:
-                    self._conns.append(Connection(mgr, proc))
+                self._add_connection(Connection(mgr, proc))
                 self.stats.allocations_granted += 1
                 remaining -= ask
             if remaining > 0:
-                self.clock.sleep(backoff)
-                backoff = min(backoff * 2, self.backoff_cap)  # §3.5
+                self.clock.sleep(next(delays))                # §3.5
         return n_workers - remaining
 
     def attach_private(self, manager: ExecutorManager, n_workers: int,
@@ -141,30 +226,70 @@ class Invoker:
         through the same interface — used when public allocation starves."""
         req = LeaseRequest(self.client_id, n_workers, memory_bytes,
                            3600.0, "bare")
-        proc = manager.grant(req, self.library)
-        with self._lock:
-            self._conns.append(Connection(manager, proc, private=True))
+        ctrl = self._control(manager.server_id)
+        # same fault surface and the same tolerance as allocate():
+        # transient losses back off and resend, only a severed route
+        # (or exhausted retries) surfaces to the caller
+        delays = self._backoffs()
+        for attempt in range(self.max_retries + 1):
+            try:
+                ctrl.rpc(CONTROL_MSG_BYTES)
+                break
+            except ChannelDropped:
+                self.stats.negotiation_faults += 1
+                if attempt == self.max_retries:
+                    raise
+                self.clock.sleep(next(delays))
+            except ChannelPartitioned:
+                self.stats.negotiation_faults += 1
+                raise
+        proc = manager.grant(req, self.library, channel=ctrl)
+        self._add_connection(Connection(manager, proc, private=True))
         return n_workers
 
     def deallocate(self):
         with self._lock:
             conns, self._conns = self._conns, []
+            for c in conns:
+                self._close_conn_locked(c)
         for c in conns:
             try:
                 c.manager.release(c.process.lease.lease_id)
             except Exception:            # noqa: BLE001 — already dead
                 pass
 
+    def shutdown(self):
+        """Full client teardown: release leases, detach from the
+        availability bus, retire cached control channels.  A churned
+        client must not keep costing the multicast fan-out forever."""
+        self.deallocate()
+        self.rm.bus.unsubscribe(self._on_delta)
+        with self._lock:
+            for ch in self._ctrl.values():
+                ch.fold_into(self._retired_wire)
+                ch.close()
+            self._ctrl.clear()
+
     # ------------------------------------------------------------- workers
-    def _alive_workers(self) -> List[ExecutorWorker]:
+    def _worker_pairs(self) -> List[Tuple[ExecutorWorker, Connection]]:
         with self._lock:
             dead = [c for c in self._conns if not c.alive()]
             for c in dead:               # disrupted connection -> drop (§3.5)
                 self._conns.remove(c)
-            out: List[ExecutorWorker] = []
-            for c in self._conns:
-                out.extend(c.process.alive_workers())
-            return out
+                self._close_conn_locked(c, faulted=True)
+            return [(w, c) for c in self._conns
+                    for w in c.process.alive_workers()]
+
+    def _alive_workers(self) -> List[ExecutorWorker]:
+        return [w for w, _ in self._worker_pairs()]
+
+    def _drop_connection(self, conn: Connection):
+        """A broken route is indistinguishable from a dead executor on
+        the client side (§3.5): drop the cached connection."""
+        with self._lock:
+            if conn in self._conns:
+                self._conns.remove(conn)
+            self._close_conn_locked(conn, faulted=True)
 
     @property
     def n_workers(self) -> int:
@@ -204,13 +329,56 @@ class Invoker:
 
     # ------------------------------------------------------------ internals
     def _dispatch(self, inv: Invocation, worker_hint: Optional[int] = None):
-        workers = self._alive_workers()
-        if not workers:
-            raise AllocationFailed(
-                f"{self.client_id}: no live executor workers")
-        i = (worker_hint if worker_hint is not None
-             else next(self._rr)) % len(workers)
-        workers[i].submit(inv)
+        """Send the invocation over the chosen worker's data channel
+        (modeled inbound write stamped on the timeline), walking on to
+        the next worker when the route or the executor is gone.  A pass
+        where every failure was a transient loss (``ChannelDropped``)
+        is retried with backoff — the reliable-channel contract — up to
+        ``max_retries`` passes."""
+        delays = self._backoffs()
+        for sweep in range(self.max_retries + 1):
+            pairs = self._worker_pairs()
+            if not pairs:
+                raise AllocationFailed(
+                    f"{self.client_id}: no live executor workers")
+            start = (worker_hint if worker_hint is not None
+                     else next(self._rr)) % len(pairs)
+            last_err: Optional[BaseException] = None
+            saw_drop = False
+            for k in range(len(pairs)):
+                worker, conn = pairs[(start + k) % len(pairs)]
+                with self._lock:
+                    ch = self._data.get(worker.name)
+                if ch is None or ch.closed:   # connection already dropped
+                    continue
+                try:
+                    t_in = ch.send(inv.bytes_in + InvocationHeader.SIZE)
+                except ChannelPartitioned as e:
+                    self.stats.dispatch_faults += 1
+                    self._drop_connection(conn)  # broken route == dead
+                    last_err = e
+                    continue
+                except ChannelDropped as e:
+                    self.stats.dispatch_faults += 1
+                    last_err = e              # transient loss: keep conn
+                    saw_drop = True
+                    continue
+                inv.timeline.net_in = t_in
+                inv.via = ch
+                try:
+                    worker.submit(inv)
+                    return
+                except ExecutorCrash as e:
+                    last_err = e
+                    continue
+            # any transient loss this pass is worth a resend — dead
+            # workers/routes were pruned and won't be revisited
+            if not (saw_drop and sweep < self.max_retries):
+                break
+            self.clock.sleep(next(delays))    # transient loss: resend
+        raise AllocationFailed(
+            f"{self.client_id}: no reachable executor workers"
+            + (f" (last error: {last_err})" if last_err else ""))
 
     def _wrap_retries(self, inv: Invocation, fn_name: str,
                       payload: Any) -> "RetryingFuture":

@@ -3,21 +3,30 @@
 The manager never sits on the invocation path: it only (a) accepts node
 registrations from the batch system via a REST-analogue call, (b) keeps a
 heartbeat-verified ranked list of executor servers, and (c) multicasts
-availability *deltas* to subscribed clients (the UD-multicast analogue is
-an in-process pub/sub bus with modeled latency).  Replicas gossip deltas
-asynchronously — eventual consistency is sufficient because stale reads
-only shrink the visible resource pool temporarily (paper §3.4), and the
-property test in tests/test_core_properties.py verifies convergence.
+availability *deltas* to subscribed clients.  All of it rides the
+transport fabric (DESIGN.md §12): registrations and heartbeat probes go
+over reliable control channels — a partitioned node misses its
+heartbeats and is evicted — while the multicast fans out over
+unreliable-datagram channels whose seeded drop rate makes loss scenarios
+reproducible.  Replicas gossip deltas asynchronously — eventual
+consistency is sufficient because stale reads only shrink the visible
+resource pool temporarily (paper §3.4), and the property test in
+tests/test_core_properties.py verifies convergence.
 """
 from __future__ import annotations
 
+import itertools
 import threading
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.clock import Clock, REAL_CLOCK, ScheduledCall
 from repro.core.executor import ExecutorManager
 from repro.core.perf_model import DEFAULT_NET, NetParams
+from repro.core.transport import (Channel, ChannelDropped,
+                                  ChannelPartitioned, CONTROL_MSG_BYTES,
+                                  Fabric, HEARTBEAT_MSG_BYTES,
+                                  fabric_params_for_net)
 
 
 @dataclass
@@ -25,57 +34,126 @@ class ServerEntry:
     manager: ExecutorManager
     epoch: int = 0
     available: bool = True
+    #: this replica's control channel to the server (heartbeat probes)
+    channel: Optional[Channel] = field(default=None, repr=False)
 
     def rank_key(self):
         return (-self.manager.free_workers, self.manager.server_id)
 
 
 class AvailabilityBus:
-    """Unreliable-datagram multicast analogue: fan-out callbacks, modeled
-    microsecond-scale latency, optional injected drop rate (losses are
-    tolerable for delta updates, §3.4)."""
+    """Unreliable-datagram multicast analogue (§3.4): one UD channel per
+    subscriber, modeled microsecond-scale latency, optional injected
+    drop rate.  Losses are silent and tolerable for delta updates —
+    clients catch up on the next delta.  Drop decisions draw from the
+    fabric's seeded RNG, so loss patterns are reproducible per seed."""
 
-    def __init__(self, net: NetParams = DEFAULT_NET, drop_rate: float = 0.0):
-        self.net = net
-        self.drop_rate = drop_rate
-        self._subs: List[Callable[[dict], None]] = []
+    ENDPOINT = "rm:bus"
+
+    def __init__(self, fabric: Optional[Fabric] = None,
+                 drop_rate: float = 0.0, *, seed: int = 7):
+        self.fabric = fabric if fabric is not None else Fabric(
+            "rdma", seed=seed)
+        self._drop_rate = drop_rate
+        self._subs: List[Tuple[Callable[[dict], None], Channel]] = []
         self._lock = threading.Lock()
+        self._sub_ids = itertools.count()    # labels never reused, even
+        # after unsubscribes — endpoint-keyed faults must not alias
         self.multicasts = 0
-        import random
-        self._rng = random.Random(7)
+        self.delivered = 0
+        self.dropped = 0
 
-    def subscribe(self, cb: Callable[[dict], None]):
+    @property
+    def drop_rate(self) -> float:
+        return self._drop_rate
+
+    @drop_rate.setter
+    def drop_rate(self, rate: float):
+        """Assigning a new bus rate applies it to every live subscriber
+        channel immediately; 0.0 means 'defer to the fabric-wide rate',
+        exactly as it does at subscribe time.  Last writer wins between
+        this and ``Fabric.set_faults`` — no hidden reconciliation."""
         with self._lock:
-            self._subs.append(cb)
+            self._drop_rate = rate
+            for _, ch in self._subs:
+                ch.drop_rate = rate if rate else self.fabric.drop_rate
+
+    def subscribe(self, cb: Callable[[dict], None],
+                  endpoint: Optional[str] = None):
+        with self._lock:
+            ep = endpoint or f"sub:{next(self._sub_ids)}"
+            # a zero bus rate defers to the fabric-wide fault settings;
+            # an explicit bus rate overrides them for delta traffic
+            ch = self.fabric.datagram(self.ENDPOINT, ep,
+                                      drop_rate=self._drop_rate or None)
+            self._subs.append((cb, ch))
+
+    def unsubscribe(self, cb: Callable[[dict], None]):
+        """Detach a subscriber and retire its datagram channel (churned
+        clients must not leak fan-out work forever)."""
+        with self._lock:
+            keep = []
+            for sub in self._subs:
+                # == not `is`: bound methods are fresh objects per
+                # attribute access but compare equal by (self, func)
+                if sub[0] == cb:
+                    sub[1].close()
+                else:
+                    keep.append(sub)
+            self._subs = keep
 
     def publish(self, delta: dict):
         with self._lock:
             subs = list(self._subs)
             self.multicasts += 1
-        for cb in subs:
-            if self.drop_rate and self._rng.random() < self.drop_rate:
+        delivered = dropped = 0
+        for cb, ch in subs:
+            if ch.send(CONTROL_MSG_BYTES) is None:
+                dropped += 1
                 continue            # UD loss: clients catch up on next delta
+            delivered += 1
             cb(delta)
+        with self._lock:
+            self.delivered += delivered
+            self.dropped += dropped
 
 
 class ResourceManagerReplica:
-    def __init__(self, replica_id: int, bus: AvailabilityBus):
+    def __init__(self, replica_id: int, bus: AvailabilityBus,
+                 fabric: Optional[Fabric] = None):
         self.replica_id = replica_id
         self.bus = bus
+        self.fabric = fabric if fabric is not None else bus.fabric
+        self.endpoint = f"rm:{replica_id}"
         self._servers: Dict[str, ServerEntry] = {}
         self._lock = threading.RLock()
         self._peers: List["ResourceManagerReplica"] = []
+        self._peer_channels: Dict[int, Channel] = {}
         self._epoch = 0
 
     # ------------------------------------------------------- REST analogue
+    def _server_channel(self, server_id: str) -> Channel:
+        return self.fabric.connect(self.endpoint, server_id)
+
     def register(self, manager: ExecutorManager, propagate: bool = True):
-        """Batch system releases a node for FaaS processing (§5.3)."""
+        """Batch system releases a node for FaaS processing (§5.3); the
+        registration message rides this replica's control channel."""
         with self._lock:
             self._epoch += 1
-            self._servers[manager.server_id] = ServerEntry(
-                manager, epoch=self._epoch)
+            old = self._servers.get(manager.server_id)
+            entry = ServerEntry(manager, epoch=self._epoch,
+                                channel=self._server_channel(
+                                    manager.server_id))
+            self._servers[manager.server_id] = entry
             manager.on_saturated = self._on_saturated
             manager.on_available = self._on_available
+        if old is not None and old.channel is not None:
+            old.channel.close()          # don't leak the stale channel
+        try:
+            entry.channel.send(CONTROL_MSG_BYTES)      # REST-analogue POST
+        except (ChannelDropped, ChannelPartitioned):
+            pass         # registration recorded; reachability is the
+            # heartbeat sweep's problem, not the registration's
         if propagate:
             self._gossip({"op": "register", "server": manager,
                           "epoch": self._epoch})
@@ -87,10 +165,18 @@ class ResourceManagerReplica:
         with self._lock:
             entry = self._servers.pop(server_id, None)
         if entry is not None:
+            if entry.channel is not None:
+                entry.channel.close()
             entry.manager.retrieve(grace_s)
         if propagate:
             self._gossip({"op": "remove", "server_id": server_id})
             self.bus.publish({"op": "remove", "server_id": server_id})
+
+    def known_server_ids(self) -> set:
+        """Every registered server id, including saturated ones (which
+        ``server_list`` hides from allocating clients)."""
+        with self._lock:
+            return set(self._servers)
 
     # -------------------------------------------------------------- client
     def server_list(self) -> List[ExecutorManager]:
@@ -120,9 +206,22 @@ class ResourceManagerReplica:
     # ------------------------------------------------------------- gossip
     def connect_peers(self, peers: List["ResourceManagerReplica"]):
         self._peers = [p for p in peers if p is not self]
+        self._peer_channels = {
+            p.replica_id: self.fabric.connect(self.endpoint, p.endpoint)
+            for p in self._peers}
 
     def _gossip(self, delta: dict):
+        """Asynchronous delta propagation over replica-to-replica
+        channels: a peer behind a partition or a lost datagram simply
+        misses the delta — eventual consistency tolerates it (§3.4) and
+        the next full delta catches it up."""
         for p in self._peers:
+            ch = self._peer_channels.get(p.replica_id)
+            if ch is not None:
+                try:
+                    ch.send(CONTROL_MSG_BYTES)
+                except (ChannelDropped, ChannelPartitioned):
+                    continue         # peer misses this delta
             p._apply(delta)
 
     def _apply(self, delta: dict):
@@ -130,10 +229,16 @@ class ResourceManagerReplica:
             op = delta["op"]
             if op == "register":
                 m = delta["server"]
+                old = self._servers.get(m.server_id)
+                if old is not None and old.channel is not None:
+                    old.channel.close()
                 self._servers[m.server_id] = ServerEntry(
-                    m, epoch=delta["epoch"])
+                    m, epoch=delta["epoch"],
+                    channel=self._server_channel(m.server_id))
             elif op == "remove":
-                self._servers.pop(delta["server_id"], None)
+                gone = self._servers.pop(delta["server_id"], None)
+                if gone is not None and gone.channel is not None:
+                    gone.channel.close()
             elif op == "saturated":
                 if delta["server_id"] in self._servers:
                     self._servers[delta["server_id"]].available = False
@@ -143,14 +248,36 @@ class ResourceManagerReplica:
 
     # ---------------------------------------------------------- heartbeats
     def sweep_heartbeats(self):
-        """Periodic liveness check; dead servers are dropped (paper §3.1).
-        Called by the heartbeat thread or explicitly in tests."""
+        """Periodic liveness check over the control fabric; dead OR
+        unreachable (partitioned) servers are dropped (paper §3.1).  A
+        single lost probe (injected drop) is a miss, not a death — the
+        server survives until a sweep can actually reach it."""
+        suspects = []
+        with self._lock:
+            entries = list(self._servers.items())
+        for sid, e in entries:
+            alive = e.manager.heartbeat()
+            if alive and e.channel is not None:
+                try:
+                    e.channel.rpc(HEARTBEAT_MSG_BYTES,
+                                  HEARTBEAT_MSG_BYTES)
+                except ChannelPartitioned:
+                    alive = False              # unreachable == dead (§3.5)
+                except ChannelDropped:
+                    continue                   # missed beat: retry next sweep
+            if not alive:
+                suspects.append((sid, e))
         dead = []
         with self._lock:
-            for sid, e in list(self._servers.items()):
-                if not e.manager.heartbeat():
-                    dead.append(sid)
+            for sid, e in suspects:
+                # evict only the entry we probed: a concurrent
+                # re-registration replaced it with a live server and
+                # must not be collateral damage
+                if self._servers.get(sid) is e:
                     del self._servers[sid]
+                    dead.append(sid)
+                    if e.channel is not None:
+                        e.channel.close()
         for sid in dead:
             self._gossip({"op": "remove", "server_id": sid})
             self.bus.publish({"op": "remove", "server_id": sid})
@@ -163,10 +290,16 @@ class ResourceManager:
 
     def __init__(self, n_replicas: int = 3,
                  net: NetParams = DEFAULT_NET, drop_rate: float = 0.0,
-                 clock: Clock = REAL_CLOCK):
+                 clock: Clock = REAL_CLOCK,
+                 fabric: Optional[Fabric] = None, seed: int = 7):
         self.clock = clock
-        self.bus = AvailabilityBus(net, drop_rate)
-        self.replicas = [ResourceManagerReplica(i, self.bus)
+        # the cluster-wide transport fabric: replicas, bus, executor
+        # managers and invokers all default to this instance, so one
+        # partition() severs control and data plane together
+        self.fabric = fabric if fabric is not None else Fabric(
+            fabric_params_for_net(net), clock=clock, seed=seed)
+        self.bus = AvailabilityBus(self.fabric, drop_rate, seed=seed)
+        self.replicas = [ResourceManagerReplica(i, self.bus, self.fabric)
                          for i in range(n_replicas)]
         for r in self.replicas:
             r.connect_peers(self.replicas)

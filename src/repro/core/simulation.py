@@ -29,6 +29,12 @@ Paper-section map (which simulated scenario exercises which claim):
 * §5.4 accounting — the ledger's GB-second and compute-second totals
   are exact functions of simulated time, asserted to femtosecond
   precision in tests.
+* §3.3/§3.4 transport — the whole cluster shares one ``Fabric``
+  (DESIGN.md §12): swap ``fabric="tcp"``/``"nightcore"`` to rerun any
+  scenario over a baseline transport, and ``isolate_nodes()``/``heal()``
+  drive partition scenarios where heartbeat eviction, client failover
+  and re-registration all play out in virtual time
+  (``run_partition_heal``).
 
 ``run_multi_tenant`` is the canned flagship scenario: N tenants, a
 Poisson arrival stream of invocations, optional lease churn and executor
@@ -38,7 +44,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -51,6 +57,7 @@ from repro.core.invoker import AllocationFailed, ExecutorCrash, Invoker
 from repro.core.lease import Lease
 from repro.core.perf_model import DEFAULT_NET, NetParams
 from repro.core.resource_manager import ResourceManager
+from repro.core.transport import Fabric, FabricParams, fabric_params_for_net
 
 
 @dataclass
@@ -83,6 +90,33 @@ class ScenarioStats:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
 
 
+@dataclass
+class PartitionStats:
+    """Deterministic summary of a partition/heal scenario: client-side
+    outcomes plus the fabric's wire counters, comparable with ``==``."""
+
+    invocations_requested: int = 0
+    completed: int = 0
+    failed: int = 0
+    retries: int = 0
+    reallocations: int = 0           # emergency re-leases after failures
+    evicted_servers: int = 0         # heartbeat evictions during partition
+    negotiation_faults: int = 0      # lease rpcs lost to the partition
+    dispatch_faults: int = 0         # data sends that failed over
+    leases_granted: int = 0
+    lease_states: Dict[str, int] = field(default_factory=dict)
+    fabric_messages: int = 0
+    fabric_bytes: int = 0
+    fabric_drops: int = 0
+    fabric_blocked: int = 0
+    rtt_p50_s: float = 0.0
+    rtt_mean_s: float = 0.0
+    t_end_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
 class SimulatedCluster:
     """rFaaS managers + invokers + perf model under one VirtualClock."""
 
@@ -90,13 +124,27 @@ class SimulatedCluster:
                  memory_per_node: int = 8 << 30, n_replicas: int = 2,
                  hot_period: float = 1.0, fault_rate: float = 0.0,
                  sandbox: str = "bare", net: NetParams = DEFAULT_NET,
-                 seed: int = 0, start_time: float = 0.0):
+                 seed: int = 0, start_time: float = 0.0,
+                 fabric: Union[str, FabricParams, None] = None,
+                 drop_rate: float = 0.0):
         self.clock = VirtualClock(start_time)
         self.ledger = Ledger()
-        self.net = net
         self.seed = seed
-        self.rm = ResourceManager(n_replicas=n_replicas, net=net,
-                                  clock=self.clock)
+        # one shared fabric: "rdma" by default, or any FABRICS preset /
+        # custom FabricParams so a whole scenario reruns over a baseline
+        # transport through the same code path (Fig. 1)
+        if fabric is None:
+            params = fabric_params_for_net(net)
+        elif isinstance(fabric, str):
+            params = None            # let Fabric resolve the preset name
+        else:
+            params = fabric
+        self.fabric = Fabric(fabric if params is None else params,
+                             clock=self.clock, seed=seed)
+        self.net = self.fabric.net
+        self.rm = ResourceManager(n_replicas=n_replicas,
+                                  clock=self.clock, fabric=self.fabric,
+                                  drop_rate=drop_rate, seed=seed)
         self.bs = BatchSystem(self.rm, self.ledger, n_nodes=n_nodes,
                               workers_per_node=workers_per_node,
                               memory_per_node=memory_per_node,
@@ -145,6 +193,41 @@ class SimulatedCluster:
         """Batch job preempts the node (§5.3)."""
         self.bs.retrieve_node(node_id, grace_s)
 
+    # ----------------------------------------------------------- partitions
+    def partition(self, group_a: Sequence[str], group_b: Sequence[str]):
+        """Sever fabric connectivity between two endpoint groups (node
+        ids, ``client:<id>``, ``rm:<i>``, ``rm:bus``)."""
+        self.fabric.partition(group_a, group_b)
+
+    def isolate_nodes(self, node_ids: Sequence[str]):
+        """Cut the given nodes off from everything else: clients lose
+        their data channels, replicas lose heartbeats, allocations to
+        the island fail — the full §3.5 fault surface at once."""
+        island = set(node_ids)
+        mainland = self.fabric.endpoints() - island
+        # endpoints that may not have carried traffic yet
+        mainland |= {inv.endpoint for inv in self.clients}
+        mainland |= {r.endpoint for r in self.rm.replicas}
+        mainland |= {self.rm.bus.ENDPOINT}
+        mainland |= {nid for nid in self.bs.nodes if nid not in island}
+        self.fabric.partition(island, mainland)
+
+    def heal(self, reregister: bool = True):
+        """Remove all partitions; optionally re-register evicted nodes
+        with the resource manager (their managers never died — the
+        availability delta clears client-side tombstones)."""
+        self.fabric.heal()
+        if not reregister:
+            return
+        # a node must be known to EVERY replica: a lossy fabric can
+        # leave one replica holding an eviction the others missed
+        known = set.intersection(*[r.known_server_ids()
+                                   for r in self.rm.replicas])
+        for nid, node in self.bs.nodes.items():
+            if (node.state == "faas" and node.manager is not None
+                    and node.manager.heartbeat() and nid not in known):
+                self.rm.register(node.manager)
+
     def start_lease_sweeper(self, interval_s: float = 0.05):
         """Periodically end expired leases on every manager (§3.2)."""
         self.stop_lease_sweeper()        # restart, don't leak a sweeper
@@ -163,6 +246,19 @@ class SimulatedCluster:
         for c in inv.connections():
             if all(c.process.lease is not l for l in self.leases):
                 self.leases.append(c.process.lease)
+
+    def _teardown_tenants(self, tenants: List[Invoker]) -> Dict[str, int]:
+        """Shared scenario teardown: release every tenant (leases back,
+        off the multicast bus), drain, tally terminal lease states."""
+        for tenant in tenants:
+            self._track_leases(tenant)
+            tenant.shutdown()
+        self.run_until_idle()
+        lease_states: Dict[str, int] = {}
+        for lease in self.leases:
+            state = lease.state.value
+            lease_states[state] = lease_states.get(state, 0) + 1
+        return lease_states
 
     # ------------------------------------------------------------ scenario
     def run_multi_tenant(self, *, n_clients: int = 4,
@@ -237,15 +333,7 @@ class SimulatedCluster:
             tiers[tier] = tiers.get(tier, 0) + 1
         failed += n_invocations - len(futures)
 
-        for tenant in tenants:
-            self._track_leases(tenant)
-            tenant.deallocate()
-        self.run_until_idle()
-
-        lease_states: Dict[str, int] = {}
-        for lease in self.leases:
-            s = lease.state.value
-            lease_states[s] = lease_states.get(s, 0) + 1
+        lease_states = self._teardown_tenants(tenants)
         totals = self.ledger.totals()
         arr = np.asarray(rtts) if rtts else np.zeros(1)
         return ScenarioStats(
@@ -276,5 +364,119 @@ class SimulatedCluster:
             gb_seconds=totals.gb_seconds,
             compute_seconds=totals.compute_seconds,
             invocations_billed=totals.invocations,
+            t_end_s=self.clock.now(),
+        )
+
+    def run_partition_heal(self, *, n_clients: int = 2,
+                           n_invocations: int = 400,
+                           workers_per_client: int = 2,
+                           isolate: Optional[Sequence[str]] = None,
+                           t_partition: float = 0.02,
+                           t_heal: float = 0.06,
+                           payload_elems: int = 64,
+                           service_time_s: float = 100e-6,
+                           mean_interarrival_s: float = 150e-6,
+                           heartbeat_interval_s: float = 0.005,
+                           get_timeout_s: float = 60.0) -> PartitionStats:
+        """Network partition + heal under virtual time (§3.5 fault
+        tolerance on the transport layer): at ``t_partition`` the
+        ``isolate`` nodes are cut off from clients AND the resource
+        manager.  In-flight work on the island fails over to surviving
+        executors via client retries; heartbeat sweeps evict the
+        unreachable servers; at ``t_heal`` the fabric heals and the
+        nodes re-register, becoming allocatable again.  Every step is a
+        deterministic function of the seed.
+
+        ``isolate`` defaults to the first node actually holding a
+        client lease, so the partition always hits live traffic."""
+        lib = FunctionLibrary("sim")
+        lib.register("work", lambda x: x, service_time_s=service_time_s)
+        rng = random.Random(self.seed * 6271 + 29)
+        tenants = [self.client(f"tenant{i}", lib, allocation_rounds=2,
+                               backoff_base=1e-4, backoff_cap=1e-3)
+                   for i in range(n_clients)]
+        for t in tenants:
+            t.allocate(workers_per_client)
+            self._track_leases(t)
+        if isolate is None:
+            leased = sorted({c.manager.server_id for ten in tenants
+                             for c in ten.connections()})
+            isolate = leased[:1] if leased else ["node000"]
+        evicted: List[str] = []
+        for replica in self.rm.replicas:
+            orig = replica.sweep_heartbeats
+
+            def counting_sweep(orig=orig):
+                dead = orig()
+                evicted.extend(dead)
+                return dead
+            replica.sweep_heartbeats = counting_sweep
+        self.rm.start_heartbeats(heartbeat_interval_s)
+
+        self.at(t_partition, self.isolate_nodes, list(isolate))
+        self.at(t_heal, self.heal)
+
+        payload = np.ones(payload_elems, np.float32)
+        futures: List = []
+        reallocations = [0]
+
+        def fire(tenant: Invoker):
+            try:
+                futures.append(tenant.submit("work", payload))
+            except (AllocationFailed, ExecutorCrash):
+                reallocations[0] += 1   # island capacity lost: re-lease
+                tenant.allocate(workers_per_client)
+                self._track_leases(tenant)
+                try:
+                    futures.append(tenant.submit("work", payload))
+                except (AllocationFailed, ExecutorCrash):
+                    pass                # counted as failed below
+
+        t = self.clock.now()
+        for _ in range(n_invocations):
+            t += rng.expovariate(1.0 / mean_interarrival_s)
+            self.at(t, fire, tenants[rng.randrange(n_clients)])
+        self.clock.run_until(max(t, t_heal) + 0.5)
+        self.rm.stop()                  # retire sweeps deterministically
+        for replica in self.rm.replicas:
+            # restore the un-instrumented sweep (class attribute) so a
+            # later scenario on this cluster doesn't stack wrappers
+            replica.__dict__.pop("sweep_heartbeats", None)
+        self.run_until_idle()
+
+        rtts: List[float] = []
+        completed = failed = 0
+        for fut in futures:
+            try:
+                fut.get(get_timeout_s)
+            except (ExecutorCrash, AllocationFailed, TimeoutError,
+                    RuntimeError):
+                failed += 1
+                continue
+            completed += 1
+            rtts.append(fut.timeline.rtt_modeled)
+        failed += n_invocations - len(futures)
+
+        lease_states = self._teardown_tenants(tenants)
+        wire = self.fabric.stats()
+        arr = np.asarray(rtts) if rtts else np.zeros(1)
+        return PartitionStats(
+            invocations_requested=n_invocations,
+            completed=completed,
+            failed=failed,
+            retries=sum(t.stats.retries for t in tenants),
+            reallocations=reallocations[0],
+            evicted_servers=len(set(evicted)),
+            negotiation_faults=sum(t.stats.negotiation_faults
+                                   for t in tenants),
+            dispatch_faults=sum(t.stats.dispatch_faults for t in tenants),
+            leases_granted=len(self.leases),
+            lease_states=lease_states,
+            fabric_messages=wire["messages"],
+            fabric_bytes=wire["bytes"],
+            fabric_drops=wire["drops"],
+            fabric_blocked=wire["blocked"],
+            rtt_p50_s=float(np.percentile(arr, 50)),
+            rtt_mean_s=float(arr.mean()),
             t_end_s=self.clock.now(),
         )

@@ -1,0 +1,450 @@
+"""Unified transport fabric: every cross-node interaction as a channel
+(paper §3.3 connection caching, §3.4 UD multicast, §5.2 wire protocol;
+DESIGN.md §12).
+
+rFaaS's performance claim lives in the transport: RDMA queue pairs with
+inline writes, connections cached across invocations, and one-way
+microsecond latencies (§3.3, §6.1).  This module makes that layer
+explicit instead of leaving it scattered across ad-hoc ``write_time``
+calls:
+
+* ``FabricParams`` — a named, frozen parameter set describing one
+  transport technology: the LogfP ``NetParams`` plus per-connection
+  setup cost, a wire-encoding expansion factor (other platforms base64
+  their payloads, Fig. 1), and the default reliability class.  The
+  ``FABRICS`` registry carries the calibrated presets: ``rdma`` (the
+  paper's testbed — identical numbers to ``perf_model.DEFAULT_NET``),
+  ``tcp`` (rFaaS software over a kernel TCP stack), ``nightcore``
+  (microsecond dispatcher, TCP + JSON — the strongest Fig.-1 baseline)
+  and ``local`` (same-host shared memory).
+
+* ``Fabric`` — the runtime instance: owns the shared ``Clock``, a seeded
+  RNG for fault injection, the set of known endpoints and the active
+  partitions.  ``connect()`` returns a reliable channel (RC queue-pair
+  analogue), ``datagram()`` an unreliable one (UD analogue, used by the
+  availability multicast).  ``partition(a, b)`` severs connectivity
+  between two endpoint groups until ``heal()``.
+
+* ``Channel`` — one queue pair: ``send()`` models the wire time of a
+  message through the shared clock's timeline and returns it, updating
+  per-channel byte/message counters; injected faults surface as
+  ``ChannelDropped`` (lost message, reliable channels — the caller
+  backs off and retries, §3.5) or ``ChannelPartitioned`` (no route),
+  while unreliable channels swallow losses silently (datagram
+  semantics, §3.4).  The connection-setup cost is charged once per
+  channel via ``take_setup()`` — the explicit form of the paper's
+  warm/hot connection reuse.
+
+Delivery itself stays an in-process handoff (as in ``invocation.py``):
+the *modeled* time is what flows into timelines and scenario stats, so
+the same code path expresses rFaaS-over-RDMA and its TCP baselines by
+swapping fabric parameters only.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass, replace
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple, Union
+
+from repro.core.clock import Clock, REAL_CLOCK
+from repro.core.perf_model import NetParams, write_time
+
+#: Modeled wire size of one control-plane message (lease request or
+#: response, registration, availability delta) — a few header fields.
+CONTROL_MSG_BYTES = 64
+#: Modeled wire size of one heartbeat probe/ack.
+HEARTBEAT_MSG_BYTES = 16
+
+#: Per-channel wire counters, defined once (aggregators fold on these).
+WIRE_COUNTERS = ("messages", "bytes", "drops", "blocked")
+
+
+class ChannelError(RuntimeError):
+    """Base class for transport faults surfaced to callers."""
+
+
+class ChannelDropped(ChannelError):
+    """A message was lost (injected drop).  On a reliable channel the
+    loss is detected (retransmission timeout analogue) and surfaced so
+    the caller can back off and retry."""
+
+
+class ChannelPartitioned(ChannelError):
+    """No route between the endpoints: the fabric is partitioned or the
+    channel was closed."""
+
+
+@dataclass(frozen=True)
+class FabricParams:
+    """One transport technology as a parameter set (Fig. 1: platforms
+    differ only in these numbers, not in the code path)."""
+
+    name: str
+    net: NetParams
+    connect_cost: float            # one-time connection setup (QP/handshake)
+    encoding: float = 1.0          # wire expansion (4/3 = base64 payloads)
+    reliable: bool = True          # RC verbs vs UD datagrams by default
+
+    def message_time(self, nbytes: int) -> float:
+        """Modeled one-way time of one message of ``nbytes`` payload."""
+        return write_time(int(round(nbytes * self.encoding)), self.net)
+
+
+def _rdma_params() -> FabricParams:
+    net = NetParams()
+    # connection setup = the paper's cold-breakdown "connect" step:
+    # one RTT of QP exchange (2 one-way latencies)
+    return FabricParams("rdma", net, connect_cost=2 * net.latency)
+
+
+def _tcp_params() -> FabricParams:
+    """rFaaS software stack over kernel TCP on 10 GbE: ~25 us one-way
+    (syscall + stack traversal), ~1.15 GiB/s effective, no inline
+    optimization, 3-way handshake at connect."""
+    net = NetParams(latency=25e-6, bandwidth=1180 * 1024 ** 2,
+                    inline_limit=0, inline_save=0.0)
+    return FabricParams("tcp", net, connect_cost=3 * 25e-6)
+
+
+def _nightcore_params() -> FabricParams:
+    """nightcore as a fabric (Fig. 1's strongest baseline): microsecond
+    dispatcher but TCP + JSON serialization.  Calibrated so a symmetric
+    request/response round trip reproduces ``perf_model.nightcore_rtt``
+    (190 us base + base64 payload at 450 MiB/s counted once per RTT):
+    95 us one-way, 900 MiB/s per direction x 4/3 encoding.  Tier
+    overheads are zero — nightcore has no busy-polling hot tier; its
+    dispatcher cost lives in the wire latency."""
+    net = NetParams(latency=95e-6, bandwidth=2 * 450 * 1024 ** 2,
+                    inline_limit=0, inline_save=0.0,
+                    hot_overhead=0.0, warm_overhead=0.0,
+                    docker_hot_extra=0.0, docker_warm_extra=0.0,
+                    cold_bare=100e-3, cold_docker=2.7)
+    return FabricParams("nightcore", net, connect_cost=3 * 95e-6,
+                        encoding=4.0 / 3.0)
+
+
+def _local_params() -> FabricParams:
+    """Same-host shared-memory handoff: ~100 ns, memcpy bandwidth."""
+    net = NetParams(latency=100e-9, bandwidth=40 * 1024 ** 3,
+                    inline_limit=0, inline_save=0.0)
+    return FabricParams("local", net, connect_cost=0.0)
+
+
+#: Named calibrated parameter sets; benchmarks select baselines by name.
+FABRICS: Dict[str, FabricParams] = {
+    "rdma": _rdma_params(),
+    "tcp": _tcp_params(),
+    "nightcore": _nightcore_params(),
+    "local": _local_params(),
+}
+
+
+def fabric_params_for_net(net: NetParams,
+                          name: str = "rdma") -> FabricParams:
+    """Wrap a bare ``NetParams`` (legacy constructor argument) in fabric
+    parameters with the rdma-style connection cost."""
+    base = FABRICS.get(name, FABRICS["rdma"])
+    if net == base.net:
+        return base
+    return replace(base, name=f"{name}*", net=net,
+                   connect_cost=2 * net.latency)
+
+
+class Channel:
+    """Queue-pair analogue between two named endpoints.
+
+    Reliable channels (RC) surface faults as exceptions; unreliable ones
+    (UD) lose messages silently.  All modeled times come from the owning
+    fabric's parameters; counters accumulate per channel so harnesses
+    can audit exactly what crossed the wire."""
+
+    __slots__ = ("fabric", "src", "dst", "reliable", "drop_rate",
+                 "extra_delay", "connected_at", "messages", "bytes",
+                 "drops", "blocked", "closed", "faulted", "_rng",
+                 "_setup_pending", "_lock")
+
+    def __init__(self, fabric: "Fabric", src: str, dst: str, *,
+                 reliable: bool, drop_rate: float, extra_delay: float,
+                 rng: random.Random):
+        self.fabric = fabric
+        self.src = src
+        self.dst = dst
+        self.reliable = reliable
+        self.drop_rate = drop_rate
+        self.extra_delay = extra_delay
+        self.connected_at = fabric.clock.now()
+        self.messages = 0
+        self.bytes = 0
+        self.drops = 0
+        self.blocked = 0
+        self.closed = False
+        self.faulted = False             # closed because the route broke
+        self._rng = rng
+        self._setup_pending = fabric.params.connect_cost
+        # per-channel lock: counters never contend across channels (the
+        # per-message path must not serialize the whole cluster)
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ model
+    @property
+    def setup_cost(self) -> float:
+        return self.fabric.params.connect_cost
+
+    def take_setup(self) -> float:
+        """Connection-setup cost, charged once: the first caller pays it,
+        every later use of the cached channel is free — the paper's warm
+        connection reuse made explicit (§3.3)."""
+        with self._lock:                 # exactly-once even when two
+            # grants race over the same cached control channel
+            cost, self._setup_pending = self._setup_pending, 0.0
+        return cost
+
+    def message_time(self, nbytes: int) -> float:
+        """Modeled one-way time for ``nbytes``, including any injected
+        delay (fault surface for straggler scenarios)."""
+        return self.fabric.params.message_time(nbytes) + self.extra_delay
+
+    # ------------------------------------------------------------- wire
+    def send(self, nbytes: int) -> Optional[float]:
+        """Model one message crossing the channel.
+
+        Returns the modeled one-way time, or ``None`` when an unreliable
+        channel lost the message.  Reliable channels raise
+        ``ChannelPartitioned`` (no route / closed) or ``ChannelDropped``
+        (injected loss) instead of silently failing."""
+        if self.closed or self.fabric.partitioned(self.src, self.dst):
+            with self._lock:
+                self.blocked += 1        # keeps ch.stats() honest
+            if self.closed:
+                # counters were already folded away at close(): record
+                # the event on the fabric directly too, so the
+                # authoritative aggregate stays exact (per-client
+                # transport_stats may miss teardown-racing blocks)
+                with self.fabric._lock:
+                    self.fabric._retired["blocked"] += 1
+            if self.reliable:
+                raise ChannelPartitioned(
+                    f"{self.src} -/-> {self.dst}: no route")
+            return None
+        if self.drop_rate and self._rng.random() < self.drop_rate:
+            with self._lock:
+                self.drops += 1
+            if self.reliable:
+                raise ChannelDropped(
+                    f"{self.src} -> {self.dst}: message lost")
+            return None
+        return self.transfer(nbytes)
+
+    def send_retransmitting(self, nbytes: int, attempts: int = 3) -> float:
+        """``send`` with the RC retransmission behaviour made explicit:
+        injected losses are resent (each lost attempt still costs the
+        modeled wire time).  A loss burst outlasting ``attempts``
+        re-raises ``ChannelDropped`` — the RC retry-count-exceeded
+        analogue, and the boundary where delivery degrades to
+        at-least-once (the client re-executes elsewhere, §3.5).  Used
+        for result returns, where the executor — not a client backoff
+        loop — owns delivery."""
+        t = 0.0
+        for i in range(attempts):
+            try:
+                return t + (self.send(nbytes) or 0.0)
+            except ChannelDropped:
+                t += self.message_time(nbytes)   # lost attempt's wire time
+                if i == attempts - 1:
+                    raise
+        return t
+
+    def deliver_result(self, nbytes: int) -> float:
+        """The result-return leg, policy owned by the channel: a
+        GRACEFULLY closed channel (client teardown while the executor
+        drains) still delivers — modeled time, no fault check, no
+        counters; a faulted or partitioned one behaves like
+        ``send_retransmitting`` and surfaces the broken route."""
+        if (self.closed and not self.faulted
+                and not self.fabric.partitioned(self.src, self.dst)):
+            return self.message_time(nbytes)
+        return self.send_retransmitting(nbytes)
+
+    def transfer(self, nbytes: int) -> float:
+        """A counted leg WITHOUT a fault check: used for the pieces of
+        an exchange whose fate the caller already settled with ``send``
+        — rpc responses, and the code push riding a negotiation that
+        just succeeded.  Keeps counters equal to what actually crossed
+        the wire."""
+        t = self.message_time(nbytes)
+        with self._lock:
+            self.messages += 1
+            self.bytes += nbytes
+        return t
+
+    def rpc(self, bytes_request: int,
+            bytes_response: int = CONTROL_MSG_BYTES) -> float:
+        """A request/response round trip with a single fault check —
+        the unit of control-plane negotiation (lease requests,
+        heartbeats).  Both legs hit the counters."""
+        t = self.send(bytes_request)
+        if t is None:                # unreliable rpc: loss = no reply
+            return 0.0
+        return t + self.transfer(bytes_response)
+
+    def close(self, faulted: bool = False):
+        """Mark closed and hand the counters back to the fabric's
+        retired totals, so long-churn runs don't accumulate channel
+        objects (aggregate stats stay monotonic and O(live)).
+        ``faulted`` records that the route broke (vs a graceful client
+        teardown) — a faulted channel never delivers a late result,
+        even after the fabric heals."""
+        if faulted:
+            self.faulted = True
+        if not self.closed:
+            self.closed = True
+            self.fabric._retire(self)
+
+    def fold_into(self, totals: dict):
+        for key in WIRE_COUNTERS:
+            totals[key] += getattr(self, key)
+
+    def stats(self) -> dict:
+        out = {"src": self.src, "dst": self.dst}
+        for key in WIRE_COUNTERS:
+            out[key] = getattr(self, key)
+        return out
+
+
+class Fabric:
+    """Runtime transport instance: parameters + clock + fault state.
+
+    One ``Fabric`` is shared by every component of a cluster (resource
+    manager, executor managers, invokers, availability bus), so a single
+    ``partition()`` call severs all traffic between two endpoint groups
+    — control and data plane alike — and aggregate counters describe
+    the whole cluster's wire activity."""
+
+    def __init__(self, params: Union[str, FabricParams] = "rdma", *,
+                 clock: Clock = REAL_CLOCK, seed: int = 0,
+                 drop_rate: float = 0.0, extra_delay: float = 0.0):
+        if isinstance(params, str):
+            params = FABRICS[params]
+        self.params = params
+        self.net = params.net
+        self.clock = clock
+        self.seed = seed
+        self.drop_rate = drop_rate
+        self.extra_delay = extra_delay
+        self._lock = threading.Lock()
+        self._rng = random.Random(seed)
+        self._nchannels = 0
+        self._channels: List[Channel] = []
+        self._retired = {key: 0 for key in WIRE_COUNTERS}
+        self._endpoints: Set[str] = set()
+        # immutable snapshot, swapped atomically: the per-message
+        # partitioned() check reads it without taking the fabric lock
+        self._partitions: Tuple[
+            Tuple[FrozenSet[str], FrozenSet[str]], ...] = ()
+
+    # ------------------------------------------------------- connections
+    def _mk_channel(self, src: str, dst: str, *, reliable: bool,
+                    drop_rate: Optional[float],
+                    extra_delay: Optional[float]) -> Channel:
+        with self._lock:
+            self._nchannels += 1
+            # per-channel RNG derived from (fabric seed, creation order):
+            # fault decisions are reproducible per seed regardless of
+            # which thread sends
+            rng = random.Random((self.seed * 1_000_003 + self._nchannels)
+                                & 0x7FFFFFFF)
+            ch = Channel(self, src, dst, reliable=reliable,
+                         drop_rate=self.drop_rate if drop_rate is None
+                         else drop_rate,
+                         extra_delay=self.extra_delay if extra_delay is None
+                         else extra_delay, rng=rng)
+            self._channels.append(ch)
+            self._endpoints.add(src)
+            self._endpoints.add(dst)
+        return ch
+
+    def connect(self, src: str, dst: str, *,
+                drop_rate: Optional[float] = None,
+                extra_delay: Optional[float] = None) -> Channel:
+        """Open a reliable channel (RC queue pair analogue)."""
+        return self._mk_channel(src, dst, reliable=True,
+                                drop_rate=drop_rate,
+                                extra_delay=extra_delay)
+
+    def datagram(self, src: str, dst: str, *,
+                 drop_rate: Optional[float] = None,
+                 extra_delay: Optional[float] = None) -> Channel:
+        """Open an unreliable channel (UD analogue): losses are silent."""
+        return self._mk_channel(src, dst, reliable=False,
+                                drop_rate=drop_rate,
+                                extra_delay=extra_delay)
+
+    def message_time(self, nbytes: int) -> float:
+        return self.params.message_time(nbytes) + self.extra_delay
+
+    def endpoints(self) -> Set[str]:
+        with self._lock:
+            return set(self._endpoints)
+
+    # ---------------------------------------------------------- faults
+    def set_faults(self, *, drop_rate: Optional[float] = None,
+                   extra_delay: Optional[float] = None,
+                   existing_channels: bool = True):
+        """Adjust fault injection; optionally retrofit open channels."""
+        with self._lock:
+            if drop_rate is not None:
+                self.drop_rate = drop_rate
+            if extra_delay is not None:
+                self.extra_delay = extra_delay
+            if existing_channels:
+                for ch in self._channels:
+                    if drop_rate is not None:
+                        ch.drop_rate = drop_rate
+                    if extra_delay is not None:
+                        ch.extra_delay = extra_delay
+
+    def partition(self, group_a, group_b):
+        """Sever connectivity between two endpoint groups (both
+        directions) until ``heal()``.  Traffic within a group — e.g. a
+        worker's result write to a client on the same side — still
+        flows."""
+        a, b = frozenset(group_a), frozenset(group_b)
+        if a & b:
+            raise ValueError(f"partition groups overlap: {sorted(a & b)}")
+        with self._lock:
+            self._partitions = self._partitions + ((a, b),)
+
+    def heal(self):
+        """Remove every active partition."""
+        with self._lock:
+            self._partitions = ()
+
+    def partitioned(self, x: str, y: str) -> bool:
+        for a, b in self._partitions:    # atomic snapshot read, lock-free
+            if (x in a and y in b) or (x in b and y in a):
+                return True
+        return False
+
+    # ------------------------------------------------------------ stats
+    def _retire(self, ch: Channel):
+        """Fold a closed channel's counters into the retired totals and
+        drop the object (called from Channel.close())."""
+        with self._lock:
+            for key in WIRE_COUNTERS:
+                self._retired[key] += getattr(ch, key)
+            try:
+                self._channels.remove(ch)
+            except ValueError:
+                pass                     # already retired
+
+    def stats(self) -> dict:
+        """Cumulative wire counters: every live channel plus everything
+        already retired — monotonic across churn."""
+        with self._lock:
+            chans = list(self._channels)
+            out = {"fabric": self.params.name, "channels": len(chans),
+                   **self._retired}
+        for ch in chans:
+            ch.fold_into(out)
+        return out

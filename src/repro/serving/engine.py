@@ -178,6 +178,7 @@ class ServeEngine:
         span = (max(r.t_done for r in self.completed)
                 - min(r.t_enqueue for r in self.completed)
                 if self.completed else 0.0)
+        wire = self.invoker.transport_stats()    # DESIGN.md §12
         return {
             "requests": len(self.completed),
             "tokens": toks,
@@ -185,6 +186,10 @@ class ServeEngine:
             "p50_latency_s": float(np.median(lats)) if lats else 0.0,
             "p99_latency_s": float(np.percentile(lats, 99)) if lats else 0.0,
             "p50_ttft_s": float(np.median(ttfts)) if ttfts else 0.0,
+            # wire activity of the serving session: tokens ship as
+            # channel messages, so cost-per-token is auditable
+            "net_messages": wire["messages"],
+            "net_bytes": wire["bytes"],
         }
 
 
