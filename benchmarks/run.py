@@ -12,6 +12,7 @@
 | Fig. 13b Jacobi           | benchmarks.usecase_jacobi      |
 | Fig. 13c Black-Scholes    | benchmarks.usecase_blackscholes|
 | §Roofline table           | benchmarks.roofline            |
+| §2/§6 elasticity + cost   | benchmarks.elasticity          |
 """
 from __future__ import annotations
 
@@ -26,7 +27,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (cold_start, invocation_latency,
+    from benchmarks import (cold_start, elasticity, invocation_latency,
                             parallel_workers, payload_scaling, roofline,
                             usecase_blackscholes, usecase_jacobi,
                             usecase_matmul)
@@ -39,6 +40,7 @@ def main() -> None:
         "usecase_jacobi": usecase_jacobi,
         "usecase_blackscholes": usecase_blackscholes,
         "roofline": roofline,
+        "elasticity": elasticity,
     }
     failures = 0
     for name, mod in mods.items():

@@ -1,0 +1,28 @@
+"""Version compatibility shims for the accelerator stack.
+
+``jax.shard_map`` graduated out of ``jax.experimental`` only in newer
+releases; the pinned container jax (0.4.x) still exports it from
+``jax.experimental.shard_map`` and spells the replication-check kwarg
+``check_rep`` instead of ``check_vma``.  Import ``shard_map`` from here
+so every caller works on both sides of the move.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                     # newer jax: top-level export
+    _impl = jax.shard_map
+except AttributeError:                   # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _impl
+
+if "check_vma" in inspect.signature(_impl).parameters:
+    shard_map = _impl
+else:
+    def shard_map(f, *, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _impl(f, **kw)
+
+__all__ = ["shard_map"]

@@ -6,7 +6,7 @@ with bounded retries + private executors, GB-s + compute-s accounting,
 and the LogP-derived offload model (Eq. 1).
 """
 from repro.core.accounting import ClientBill, Ledger, Price
-from repro.core.batch_system import BatchSystem, Node
+from repro.core.batch_system import BatchJob, BatchSystem, Node
 from repro.core.clock import (Clock, REAL_CLOCK, RealClock, ScheduledCall,
                               VirtualClock)
 from repro.core.executor import (AllocationRejected, ExecutorCrash,
@@ -27,13 +27,17 @@ from repro.core.resource_manager import (AvailabilityBus, ResourceManager,
                                          ResourceManagerReplica)
 from repro.core.simulation import (PartitionStats, ScenarioStats,
                                    SimulatedCluster)
+from repro.core.trace import (ChurnTrace, ElasticityStats, EVENT_KINDS,
+                              TraceEvent, TraceReplayer, replay_trace)
 from repro.core.transport import (Channel, ChannelDropped, ChannelError,
                                   ChannelPartitioned, CONTROL_MSG_BYTES,
                                   FABRICS, Fabric, FabricParams,
                                   HEARTBEAT_MSG_BYTES)
 
 __all__ = [
-    "ClientBill", "Ledger", "Price", "BatchSystem", "Node",
+    "ClientBill", "Ledger", "Price", "BatchJob", "BatchSystem", "Node",
+    "ChurnTrace", "ElasticityStats", "EVENT_KINDS", "TraceEvent",
+    "TraceReplayer", "replay_trace",
     "Clock", "REAL_CLOCK", "RealClock", "ScheduledCall", "VirtualClock",
     "AllocationRejected", "ExecutorCrash", "ExecutorManager",
     "ExecutorProcess", "ExecutorWorker", "FunctionLibrary", "Invocation",

@@ -2,9 +2,29 @@
 that releases idle nodes to the rFaaS resource manager and retrieves them
 when batch jobs arrive.  Utilization traces with rapid availability churn
 (the Piz Daint pattern of Fig. 2) drive the elasticity benchmarks.
+
+The batch system is the PREEMPTION SOURCE of the whole reproduction:
+batch jobs always outrank serverless tenants (§5.3 — rFaaS only soaks
+up what the batch scheduler is not using), so starting a job reclaims
+FaaS nodes mid-invocation, ending the leases RETRIEVED, and finishing a
+job hands the nodes back through a fresh registration.  Three drivers
+feed it:
+
+* ``submit_job`` — an explicit SLURM-like submission into a priority
+  queue; jobs start when enough nodes can be claimed (idle first, FaaS
+  preempted next, in deterministic order) and completion is a scheduled
+  clock event that re-releases the nodes and starts queued successors.
+* ``apply_trace_event`` — ``core.trace`` replays recorded/synthetic
+  churn (node_down/node_up/batch_job events) through the same claim and
+  return paths, so a trace replay and an explicit job stream exercise
+  identical code.
+* ``churn_step`` — the original random-walk driver, kept for quick
+  scenarios.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -22,6 +42,26 @@ class Node:
     memory_bytes: int
     state: str = "idle"               # idle | faas | batch
     manager: Optional[ExecutorManager] = None
+    job_id: Optional[int] = None      # batch job currently holding it
+
+
+@dataclass
+class BatchJob:
+    """One batch submission (§5.3).  Lower ``priority`` is more urgent;
+    ties break by submission order, so scheduling is deterministic."""
+    job_id: int
+    n_nodes: int
+    duration_s: float
+    priority: int = 0
+    grace_s: float = 0.0              # drain window for preempted leases
+    t_submit: float = 0.0
+    t_start: Optional[float] = None
+    t_end: Optional[float] = None
+    state: str = "queued"             # queued | running | done
+    nodes: List[str] = field(default_factory=list)
+
+    def sort_key(self):
+        return (self.priority, self.t_submit, self.job_id)
 
 
 class BatchSystem:
@@ -42,11 +82,30 @@ class BatchSystem:
                                  memory_per_node)
             for i in range(n_nodes)
         }
+        # incremental state tally: every transition goes through
+        # _set_state, so occupancy reads are O(1) even at 1000 nodes
+        # with trace replays querying per event.  The node-seconds
+        # integrator lives HERE (not in the replayer) because states
+        # also flip on clock events between trace events — job
+        # completions, deferred starts — and integrating only at trace
+        # instants would attribute those intervals to the wrong state.
+        self._state_counts = {"idle": n_nodes, "faas": 0, "batch": 0}
+        self._occ = {"idle": 0.0, "faas": 0.0, "batch": 0.0}
+        self._occ_t = clock.now()
         # node managers join the resource manager's transport fabric so
         # cluster-wide partitions/faults cover their traffic too
         self._mk = dict(sandbox=sandbox, hot_period=hot_period,
                         fault_rate=fault_rate, clock=clock,
                         fabric=rm.fabric)
+        # SLURM-analogue job machinery: priority heap of queued jobs,
+        # running set, deterministic id sequence
+        self._job_ids = itertools.count(1)
+        self._queue: List[tuple] = []          # (sort_key, job)
+        self.jobs: Dict[int, BatchJob] = {}
+        # elasticity accounting (trace replays read these)
+        self.preemptions = 0                   # FaaS nodes reclaimed
+        self.node_returns = 0                  # nodes handed back to FaaS
+        self.jobs_completed = 0
 
     # ----------------------------------------------------------- REST API
     def release_node(self, node_id: str) -> ExecutorManager:
@@ -60,7 +119,7 @@ class BatchSystem:
                 seed=self._rng.randrange(1 << 30), **self._mk)
         else:
             node.manager.restore()     # retrieved earlier -> accept again
-        node.state = "faas"
+        self._set_state(node, "faas")
         self.rm.register(node.manager)
         return node.manager
 
@@ -72,18 +131,123 @@ class BatchSystem:
                 out.append(nid)
         return out
 
-    def retrieve_node(self, node_id: str, grace_s: float = 0.0):
+    def retrieve_node(self, node_id: str, grace_s: float = 0.0,
+                      job_id: Optional[int] = None):
         """A batch job needs the node back: immediate (grace 0 — abort
         running invocations) or graceful drain (§5.3)."""
         node = self.nodes[node_id]
         if node.state == "faas":
+            self.preemptions += 1
             self.rm.remove(node_id, grace_s)
-        node.state = "batch"
+            node.job_id = job_id
+        elif node.state == "idle" or job_id is not None:
+            node.job_id = job_id
+        # else: a bare node_down on a node a RUNNING job holds keeps the
+        # job's binding — clobbering it to None would make the job's
+        # completion skip the node and leak it out of the pool forever
+        self._set_state(node, "batch")
 
     def finish_batch_job(self, node_id: str):
-        self.nodes[node_id].state = "idle"
+        node = self.nodes[node_id]
+        self._set_state(node, "idle")
+        node.job_id = None
+
+    def return_node(self, node_id: str) -> Optional[ExecutorManager]:
+        """Batch work done: the node comes back to the FaaS pool through
+        a fresh registration (trace node_up / job completion path)."""
+        self.finish_batch_job(node_id)
+        self.node_returns += 1
+        return self.release_node(node_id)
+
+    # -------------------------------------------------------- job queue
+    def submit_job(self, n_nodes: int, duration_s: float, *,
+                   priority: int = 0, grace_s: float = 0.0) -> BatchJob:
+        """SLURM-analogue submission: the job enters the priority queue
+        and starts as soon as ``n_nodes`` can be claimed — idle nodes
+        first, then FaaS nodes preempted in deterministic id order
+        (batch always outranks serverless, §5.3).  Completion is a
+        scheduled clock event that returns every node to the FaaS pool
+        and starts queued successors."""
+        job = BatchJob(next(self._job_ids), n_nodes, duration_s,
+                       priority=priority, grace_s=grace_s,
+                       t_submit=self.clock.now())
+        self.jobs[job.job_id] = job
+        heapq.heappush(self._queue, (job.sort_key(), job))
+        self._schedule()
+        return job
+
+    def _claimable(self) -> List[str]:
+        """Node ids a job may take, in claim order: idle first, then
+        FaaS (preemption), both by node id — deterministic."""
+        idle = [nid for nid, n in sorted(self.nodes.items())
+                if n.state == "idle"]
+        faas = [nid for nid, n in sorted(self.nodes.items())
+                if n.state == "faas"]
+        return idle + faas
+
+    def _schedule(self):
+        """Start queued jobs while capacity (claimable nodes) lasts.
+        Strict priority order: a wide high-priority job at the head
+        blocks narrower lower-priority ones (no backfill — conservative
+        SLURM semantics, and deterministic).  Each job preempts with
+        ITS OWN grace window, whenever it ends up starting."""
+        while self._queue:
+            _, job = self._queue[0]
+            if job.state != "queued":          # cancelled/defensive
+                heapq.heappop(self._queue)
+                continue
+            avail = self._claimable()
+            if len(avail) < job.n_nodes:
+                return                         # head job must wait
+            heapq.heappop(self._queue)
+            take = avail[:job.n_nodes]
+            for nid in take:
+                self.retrieve_node(nid, job.grace_s, job_id=job.job_id)
+            job.nodes = take
+            job.state = "running"
+            job.t_start = self.clock.now()
+            job.t_end = job.t_start + job.duration_s
+            self.clock.call_later(job.duration_s, self._complete_job,
+                                  job.job_id)
+
+    def _complete_job(self, job_id: int):
+        job = self.jobs.get(job_id)
+        if job is None or job.state != "running":
+            return
+        job.state = "done"
+        self.jobs_completed += 1
+        for nid in job.nodes:
+            if self.nodes[nid].job_id == job_id:
+                self.return_node(nid)
+        self._schedule()                       # successors may start now
+
+    def queued_jobs(self) -> List[BatchJob]:
+        return sorted((j for j in self.jobs.values()
+                       if j.state == "queued"),
+                      key=BatchJob.sort_key)
 
     # ------------------------------------------------------ trace driving
+    def apply_trace_event(self, ev) -> bool:
+        """Apply one ``core.trace`` churn event; returns True when the
+        event touched this subsystem (transport fault events belong to
+        the fabric and return False)."""
+        kind = ev.kind
+        if kind == "node_down":
+            self.retrieve_node(ev.node_id, ev.grace_s)
+            return True
+        if kind == "node_up":
+            node = self.nodes[ev.node_id]
+            if node.state == "batch":
+                self.return_node(ev.node_id)
+            elif node.state == "idle":
+                self.release_node(ev.node_id)
+            return True
+        if kind == "batch_job":
+            self.submit_job(ev.n_nodes, ev.duration_s,
+                            priority=ev.priority, grace_s=ev.grace_s)
+            return True
+        return False
+
     def churn_step(self, p_claim: float = 0.2, p_release: float = 0.3,
                    grace_s: float = 0.0) -> dict:
         """One step of a Piz-Daint-like availability random walk: batch
@@ -103,3 +267,28 @@ class BatchSystem:
     def utilization(self) -> float:
         busy = sum(1 for n in self.nodes.values() if n.state == "batch")
         return busy / max(len(self.nodes), 1)
+
+    def state_counts(self) -> Dict[str, int]:
+        return dict(self._state_counts)
+
+    def occupancy(self, up_to: Optional[float] = None) -> Dict[str, float]:
+        """Node-seconds spent in each state, integrated exactly at
+        every transition, up to ``up_to`` (default: now)."""
+        self._integrate_occupancy(self.clock.now() if up_to is None
+                                  else up_to)
+        return dict(self._occ)
+
+    def _integrate_occupancy(self, now: float):
+        dt = now - self._occ_t
+        if dt > 0:
+            occ = self._occ
+            for state, n in self._state_counts.items():
+                occ[state] += n * dt
+            self._occ_t = now
+
+    def _set_state(self, node: Node, state: str):
+        self._integrate_occupancy(self.clock.now())
+        counts = self._state_counts
+        counts[node.state] -= 1
+        counts[state] += 1
+        node.state = state

@@ -34,7 +34,7 @@ class ScheduledCall:
     sweeps) which never count as pending work for idle detection."""
 
     __slots__ = ("when", "fn", "args", "cancelled", "fired", "repeating",
-                 "timer")
+                 "timer", "vclock")
 
     def __init__(self, when: float, fn: Callable, args: Tuple[Any, ...],
                  repeating: bool = False):
@@ -45,11 +45,22 @@ class ScheduledCall:
         self.fired = False
         self.repeating = repeating
         self.timer: Optional[threading.Timer] = None   # real clock only
+        self.vclock = None           # owning VirtualClock, if any
 
     def cancel(self):
-        self.cancelled = True
         if self.timer is not None:
             self.timer.cancel()      # free the sleeping Timer thread now
+        vclock = self.vclock
+        if vclock is None:
+            self.cancelled = True
+            return
+        # virtual clock: keep the pending-work counter exact — a
+        # cancelled one-shot must stop counting as work exactly once
+        with vclock._lock:
+            if not self.cancelled:
+                self.cancelled = True
+                if not self.fired and not self.repeating:
+                    vclock._oneshot_pending -= 1
 
 
 class _RepeatingHandle(ScheduledCall):
@@ -176,12 +187,17 @@ class VirtualClock(Clock):
                  rendezvous_timeout: float = 30.0):
         self._now = float(start)
         self._heap: List[Tuple[float, int, ScheduledCall]] = []
-        # one-shot events only, lazily pruned: keeps idle detection
-        # O(log n) instead of scanning the full heap per retired event
-        self._oneshot: List[Tuple[float, int, ScheduledCall]] = []
+        # live one-shot events (scheduled, not yet fired or cancelled):
+        # idle detection is a counter read, and the event loop keeps a
+        # single heap — no mirror-heap traffic on the hot path
+        self._oneshot_pending = 0
         self._seq = itertools.count()
-        self._lock = threading.RLock()
+        # plain Lock, not RLock: nothing schedules while holding it
+        # (callbacks run after the event-loop critical section) and the
+        # uncontended acquire is measurably cheaper at 100k-event scale
+        self._lock = threading.Lock()
         self._driver = threading.current_thread()
+        self._driver_ident = threading.get_ident()
         self._waiters: List[_Waiter] = []
         self._rendezvous_timeout = rendezvous_timeout
         self._woke_any = False
@@ -189,37 +205,55 @@ class VirtualClock(Clock):
 
     # ------------------------------------------------------------ basics
     def now(self) -> float:
-        with self._lock:
-            return self._now
+        # lock-free: a float attribute read is atomic under the GIL and
+        # now() sits on every hot path (sends, tier checks, billing)
+        return self._now
 
     def is_driver(self) -> bool:
-        return threading.current_thread() is self._driver
+        # ident comparison, not current_thread(): this check runs twice
+        # per simulated invocation
+        ident = self._driver_ident
+        if ident is None:
+            # driver was handed to a not-yet-started thread; its ident
+            # only exists once it runs — resolve lazily, fall back to
+            # object identity until then
+            ident = self._driver.ident
+            if ident is None:
+                return threading.current_thread() is self._driver
+            self._driver_ident = ident
+        return threading.get_ident() == ident
 
     def set_driver(self, thread: Optional[threading.Thread] = None):
         """Hand time ownership to ``thread`` (default: caller)."""
         self._driver = thread or threading.current_thread()
+        self._driver_ident = self._driver.ident   # None until started
 
     def _call_at(self, when: float, fn: Callable, args: Tuple[Any, ...],
                  *, repeating: bool = False) -> ScheduledCall:
         with self._lock:                 # clamp under the lock: _now
             # may be advancing on the driver thread concurrently
-            call = ScheduledCall(max(when, self._now), fn, args,
+            now = self._now
+            call = ScheduledCall(when if when > now else now, fn, args,
                                  repeating=repeating)
-            entry = (call.when, next(self._seq), call)
-            heapq.heappush(self._heap, entry)
+            call.vclock = self
+            heapq.heappush(self._heap, (call.when, next(self._seq), call))
             if not repeating:
-                heapq.heappush(self._oneshot, entry)
+                self._oneshot_pending += 1
         return call
 
     # ---------------------------------------------------------- stepping
-    def _next_due(self, include_repeating: bool = True) -> Optional[float]:
-        """Earliest pending instant: a scheduled callback or a sleeping
-        thread's deadline.  With ``include_repeating=False`` only WORK
-        counts — repeating maintenance events are excluded, otherwise
-        an armed sweeper would make idle unreachable."""
+    def _has_work(self) -> bool:
+        """Pending WORK: live one-shot callbacks or sleeping threads.
+        Repeating maintenance events (heartbeats, sweeps) never count —
+        an armed sweeper must not make idle unreachable."""
+        return self._oneshot_pending > 0 or bool(self._waiters)
+
+    def _next_due(self) -> Optional[float]:
+        """Earliest pending instant: a scheduled callback (one-shot or
+        repeating) or a sleeping thread's deadline."""
         with self._lock:
-            heap = self._heap if include_repeating else self._oneshot
-            while heap and (heap[0][2].cancelled or heap[0][2].fired):
+            heap = self._heap
+            while heap and heap[0][2].cancelled:
                 heapq.heappop(heap)
             next_ev = heap[0][0] if heap else None
             next_wait = min((w.deadline for w in self._waiters),
@@ -229,23 +263,6 @@ class VirtualClock(Clock):
         if next_wait is None:
             return next_ev
         return min(next_ev, next_wait)
-
-    def _pop_due(self, target: float) -> Optional[ScheduledCall]:
-        with self._lock:
-            while self._heap and (self._heap[0][2].cancelled
-                                  or self._heap[0][2].fired):
-                heapq.heappop(self._heap)
-            # keep the one-shot mirror from accumulating fired entries
-            # (pops happen in time order, so its head tracks ours)
-            while self._oneshot and (self._oneshot[0][2].cancelled
-                                     or self._oneshot[0][2].fired):
-                heapq.heappop(self._oneshot)
-            if self._heap and self._heap[0][0] <= target:
-                when, _, call = heapq.heappop(self._heap)
-                call.fired = True
-                self._now = max(self._now, when)
-                return call
-            return None
 
     def _wake_due_waiters(self):
         """Wake sleepers whose deadline has passed, in deadline order,
@@ -264,24 +281,42 @@ class VirtualClock(Clock):
 
     def run_until(self, target: float):
         """Advance to ``target``, firing every due callback and waking
-        every due sleeper along the way, in time order."""
+        every due sleeper along the way, in time order.  One lock
+        acquisition per step: next-due detection, head pruning and the
+        pop are a single critical section (this loop runs hundreds of
+        thousands of times in large replays)."""
+        heap = self._heap
         while True:
-            t = self._next_due()
-            if t is None or t > target:
-                break
-            # pop the earliest event if it is the due thing; otherwise
-            # the due thing is a sleeper deadline — advance and wake
-            call = self._pop_due(t)
+            call = None
+            with self._lock:
+                while heap and heap[0][2].cancelled:
+                    heapq.heappop(heap)
+                next_ev = heap[0][0] if heap else None
+                next_wait = min((w.deadline for w in self._waiters),
+                                default=None) if self._waiters else None
+                t = (next_ev if next_wait is None
+                     else next_wait if next_ev is None
+                     else min(next_ev, next_wait))
+                if t is None or t > target:
+                    break
+                if next_ev is not None and next_ev <= t:
+                    when, _, call = heapq.heappop(heap)
+                    call.fired = True
+                    if not call.repeating:
+                        self._oneshot_pending -= 1
+                    if when > self._now:
+                        self._now = when
+                elif t > self._now:  # the due thing is a sleeper deadline
+                    self._now = t
             if call is not None:
                 self.events_run += 1
                 call.fn(*call.args)
-            else:
-                with self._lock:
-                    self._now = max(self._now, t)
-            self._wake_due_waiters()
+            if self._waiters:
+                self._wake_due_waiters()
         with self._lock:
             self._now = max(self._now, target)
-        self._wake_due_waiters()
+        if self._waiters:
+            self._wake_due_waiters()
 
     def advance(self, dt: float):
         """Move time forward by ``dt`` simulated seconds."""
@@ -295,11 +330,16 @@ class VirtualClock(Clock):
         Repeating maintenance events fire along the way but never keep
         the loop alive, so this terminates with sweepers still armed."""
         while True:
-            t = self._next_due(include_repeating=False)
-            if t is not None and (max_time is None or t <= max_time):
-                self.run_until(t)
-                continue
-            if t is None and self._settle_after_rendezvous(
+            if self._has_work():
+                # advance to the earliest event of ANY kind: repeating
+                # events on the way to the work fire exactly as they
+                # would inside one long run_until
+                t = self._next_due()
+                if t is not None and (max_time is None or t <= max_time):
+                    self.run_until(t)
+                    continue
+                break                 # work exists but beyond max_time
+            if self._settle_after_rendezvous(
                     include_repeating=False) == "work":
                 continue              # a woken sleeper enqueued more
             break
@@ -348,7 +388,8 @@ class VirtualClock(Clock):
             # only pending WORK counts: with timeout=None an armed
             # repeating sweeper must not turn deadlock into a hang
             include_rep = deadline is not None
-            t = self._next_due(include_repeating=include_rep)
+            t = self._next_due() if (include_rep or self._has_work()) \
+                else None
             if t is None:
                 settled = self._settle_after_rendezvous(
                     predicate, include_repeating=include_rep)
@@ -380,8 +421,9 @@ class VirtualClock(Clock):
         def done() -> Optional[str]:
             if predicate is not None and predicate():
                 return "predicate"
-            if self._next_due(include_repeating=include_repeating) \
-                    is not None:
+            pending = (self._next_due() is not None if include_repeating
+                       else self._has_work())
+            if pending:
                 return "work"
             return None
 

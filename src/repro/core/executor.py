@@ -36,8 +36,6 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-import jax
-
 from repro.core.accounting import Ledger
 from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.functions import FunctionLibrary
@@ -168,6 +166,12 @@ class ExecutorWorker(threading.Thread):
                     f"worker {self.name} terminated"))
 
     def run(self):
+        # lazy jax: only real executor threads need it (the virtual
+        # path never does, and a core-only session saves the ~2 s XLA
+        # import).  Imported HERE, before any timed region — inside the
+        # invocation loop it would land on the first invocation's
+        # measured exec_time as a ~1 s warm-tier outlier.
+        import jax
         while True:
             item = self._q.get()
             if item is _STOP:
@@ -215,18 +219,30 @@ class ExecutorWorker(threading.Thread):
         with self._submit_lock:
             self._pending[inv.header.invocation_id] = inv
             self._vqueue.append(inv)
-            self._vkick_locked()
+            nxt = self._vkick_locked(inline=True)
+        if nxt is not None:
+            self._vstart(nxt)
 
-    def _vkick_locked(self):
+    def _vkick_locked(self, inline: bool = False):
         """Start the next queued invocation if the worker is free.
         Scheduled AFTER a completion event at the same instant, so a
         successor always observes the predecessor's _last_activity
         (tier HOT) — exactly like the real thread's FIFO drain.
-        Caller holds _submit_lock."""
+        Caller holds _submit_lock.
+
+        With ``inline=True`` and the clock driver calling, the next
+        invocation is RETURNED instead of scheduled: the caller runs
+        ``_vstart`` directly after releasing the lock (same simulated
+        instant, same ordering, one less heap event on the hot path —
+        a third of the clock traffic in a 100k-invocation replay)."""
         if self._vactive or not self._vqueue:
-            return
+            return None
         self._vactive = True
-        self.clock.call_later(0.0, self._vstart, self._vqueue.popleft())
+        nxt = self._vqueue.popleft()
+        if inline and self.clock.is_driver():
+            return nxt
+        self.clock.call_later(0.0, self._vstart, nxt)
+        return None
 
     def _vstart(self, inv: Invocation):
         with self._submit_lock:
@@ -279,7 +295,9 @@ class ExecutorWorker(threading.Thread):
         self._complete(inv, result, svc)
         with self._submit_lock:
             self._vactive = False
-            self._vkick_locked()
+            nxt = self._vkick_locked(inline=True)
+        if nxt is not None:
+            self._vstart(nxt)             # successor, same instant
 
     def _complete(self, inv: Invocation, result, exec_time: float):
         """Deliver the result home and retire the invocation — shared
@@ -419,6 +437,7 @@ class ExecutorManager:
                 sandbox, self.hot_period, self._worker_done, self.net,
                 self.fault_rate, seed=self._seed * 9973 + lease.lease_id
                 * 131 + i, clock=self.clock)
+            w.lease_id = lease.lease_id      # O(1) completion billing
             if not self.clock.virtual:
                 w.start()
             workers.append(w)
@@ -524,12 +543,13 @@ class ExecutorManager:
     # ------------------------------------------------------------ internal
     def _worker_done(self, worker: ExecutorWorker, inv: Invocation,
                      exec_time: float, err: Optional[BaseException]):
-        client = None
-        with self._lock:
-            for proc in self._processes.values():
-                if worker in proc.workers:
-                    client = proc.lease.request.client_id
-                    break
-        if client is not None and err is None:
+        if err is not None:
+            return
+        # lock-free dict read (GIL-atomic): a lease already released or
+        # crashed has been popped, and its late completions — exactly as
+        # before — are not billed
+        proc = self._processes.get(worker.lease_id)
+        if proc is not None:
             # off the critical path: accounting after completion (§5.4)
-            self.ledger.add_compute(client, exec_time)
+            self.ledger.add_compute(proc.lease.request.client_id,
+                                    exec_time)

@@ -13,14 +13,19 @@ report paper-comparable round trips.
 from __future__ import annotations
 
 import itertools
+import sys
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import numpy as np
 
 from repro.core.perf_model import NetParams, Sandbox, Tier, tier_overhead
 from repro.core.transport import fabric_params_for_net
+
+#: dataclass(slots=True) where the interpreter supports it (3.10+):
+#: these objects are minted once per invocation in 100k-scale replays.
+SLOTS = {"slots": True} if sys.version_info >= (3, 10) else {}
 
 _inv_ids = itertools.count(1)
 
@@ -42,8 +47,10 @@ def payload_bytes(obj: Any) -> int:
     return len(repr(obj).encode())
 
 
-@dataclass(frozen=True)
-class InvocationHeader:
+class InvocationHeader(NamedTuple):
+    """12 wire bytes (paper §5.2); a NamedTuple, not a dataclass —
+    frozen-dataclass construction costs a per-field object.__setattr__
+    and headers are minted once per invocation on the hot path."""
     fn_index: int
     invocation_id: int
     return_buffer: int            # rkey/address analogue (opaque)
@@ -51,7 +58,7 @@ class InvocationHeader:
     SIZE = 12                     # bytes on the wire (paper §5.2)
 
 
-@dataclass
+@dataclass(**SLOTS)
 class Timeline:
     """Modeled+measured event times (seconds, monotonic-origin)."""
     t_submit: float = 0.0
@@ -70,6 +77,52 @@ class Timeline:
         return self.dispatch_measured + self.exec_time
 
 
+#: guards lazy Event creation across concurrent waiters (slow path
+#: only: no fulfilled-future or single-threaded flow ever touches it)
+_LAZY_EVENT_LOCK = threading.Lock()
+
+
+class _LazyEvent:
+    """``threading.Event`` stand-in whose Condition machinery is built
+    only when a thread actually blocks.  Futures on the simulated hot
+    path are fulfilled and polled millions of times without ever
+    waiting — paying a full Event construction per invocation is pure
+    overhead there.  Concurrent waiters share ONE lazily-created Event
+    (creation serialized by a module lock), so every blocked thread is
+    woken, exactly like the real thing.  Safe under the GIL: waiters
+    publish the Event before re-checking the flag, the setter raises
+    the flag before reading the Event slot, so every interleaving
+    either sees the flag or signals the Event."""
+
+    __slots__ = ("_flag", "_ev")
+
+    def __init__(self):
+        self._flag = False
+        self._ev = None
+
+    def is_set(self) -> bool:
+        return self._flag
+
+    def set(self):
+        self._flag = True
+        ev = self._ev
+        if ev is not None:
+            ev.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        if self._flag:
+            return True
+        ev = self._ev
+        if ev is None:
+            with _LAZY_EVENT_LOCK:    # all waiters share one Event
+                ev = self._ev
+                if ev is None:
+                    ev = self._ev = threading.Event()
+        if self._flag:                # set() may have missed the Event
+            return True
+        return ev.wait(timeout)
+
+
 class RFuture:
     """std::future analogue (paper §5.1): blocking get(), non-blocking
     poll(); carries the timeline for latency accounting.
@@ -81,9 +134,11 @@ class RFuture:
     block on the real event instead — their timeout is wall-clock
     seconds, bounded regardless of whether the driver keeps advancing."""
 
+    __slots__ = ("invocation", "_event", "_result", "_error", "_clock")
+
     def __init__(self, invocation: "Invocation"):
         self.invocation = invocation
-        self._event = threading.Event()
+        self._event = _LazyEvent()
         self._result: Any = None
         self._error: Optional[BaseException] = None
         self._clock = None            # set on submit when virtual
@@ -123,7 +178,7 @@ class RFuture:
         return self.invocation.timeline
 
 
-@dataclass
+@dataclass(**SLOTS)
 class Invocation:
     header: InvocationHeader
     fn_name: str

@@ -80,6 +80,8 @@ class Invoker:
                  library: FunctionLibrary, *, seed: int = 0,
                  max_retries: int = 3, backoff_base: float = 0.005,
                  backoff_cap: float = 0.5, allocation_rounds: int = 6,
+                 fault_memory_s: float = 1.0,
+                 allocation_window: Optional[int] = None,
                  clock: Clock = REAL_CLOCK,
                  fabric: Optional[Fabric] = None):
         self.client_id = client_id
@@ -90,6 +92,12 @@ class Invoker:
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
         self.allocation_rounds = allocation_rounds
+        # fabric-aware placement: servers that faulted on this client
+        # within fault_memory_s are tried LAST; allocation_window bounds
+        # how many candidate servers one round considers on huge
+        # clusters (cached-channel servers are always kept)
+        self.fault_memory_s = fault_memory_s
+        self.allocation_window = allocation_window
         # one fabric per cluster: default to the resource manager's so a
         # single partition() severs control and data plane together
         self.fabric = fabric if fabric is not None else rm.fabric
@@ -99,6 +107,10 @@ class Invoker:
         self._conns: List[Connection] = []
         self._ctrl: Dict[str, Channel] = {}      # server_id -> control ch
         self._data: Dict[str, Channel] = {}      # worker name -> data ch
+        # last validated (worker, connection) snapshot; None = dirty
+        self._pairs_cache: Optional[List[Tuple[ExecutorWorker,
+                                               Connection]]] = None
+        self._fault_at: Dict[str, float] = {}    # server -> last fault t
         # counters of channels already closed, so transport_stats()
         # stays monotonic across failover/deallocate
         self._retired_wire = {key: 0 for key in WIRE_COUNTERS}
@@ -149,6 +161,7 @@ class Invoker:
                 self._data[w.name] = self.fabric.connect(
                     self.endpoint, conn.manager.server_id)
             self._conns.append(conn)
+            self._pairs_cache = None
 
     def _close_conn_locked(self, conn: Connection, faulted: bool = False):
         """Drop a connection's data channels (folding their counters
@@ -160,6 +173,58 @@ class Invoker:
             if ch is not None:
                 ch.fold_into(self._retired_wire)
                 ch.close(faulted=faulted)
+
+    def _note_fault(self, server_id: str):
+        """Remember that this server's route just failed us — placement
+        deprioritizes it for ``fault_memory_s`` (no point negotiating
+        with a node the fabric keeps eating messages to)."""
+        self._fault_at[server_id] = self.clock.now()
+
+    def _placement_order(self, servers: List[ExecutorManager]) \
+            -> List[ExecutorManager]:
+        """Fabric-aware placement (DESIGN.md §12): random permutation
+        (decentralized contention-spreading, §3.2), then a stable sort
+        so servers whose control channel is already cached — a warm
+        negotiation, no handshake — come first and recently-faulted
+        ones last.  Within each group the permutation's order stands,
+        so two clients never converge on the same target."""
+        order = self._rng.sample(servers, len(servers))
+        if len(order) <= 1:
+            return order
+        now = self.clock.now()
+        ctrl, fault_at, memory = self._ctrl, self._fault_at, \
+            self.fault_memory_s
+
+        def group(mgr: ExecutorManager) -> int:
+            sid = mgr.server_id
+            t = fault_at.get(sid)
+            if t is not None and now - t < memory:
+                return 2                  # the fabric just failed us here
+            ch = ctrl.get(sid)
+            return 0 if ch is not None and not ch.closed else 1
+
+        order.sort(key=group)
+        return order
+
+    def _candidate_servers(self) -> List[ExecutorManager]:
+        """Allocation candidates: the replica's availability list minus
+        tombstones, bounded by ``allocation_window`` on huge clusters —
+        every cached-channel server is kept (warm reuse beats a random
+        stranger), the remainder is a seeded sample."""
+        removed = self._removed_servers
+        servers = [s for s in self._replica.server_list()
+                   if s.server_id not in removed]
+        k = self.allocation_window
+        if k is None or len(servers) <= k:
+            return servers
+        ctrl = self._ctrl
+        cached, rest = [], []
+        for s in servers:
+            (cached if s.server_id in ctrl else rest).append(s)
+        take = max(0, k - len(cached))
+        if take:
+            cached.extend(self._rng.sample(rest, min(take, len(rest))))
+        return cached
 
     def transport_stats(self) -> dict:
         """Cumulative wire counters over this client's channels, open
@@ -186,12 +251,11 @@ class Invoker:
             if remaining <= 0:
                 break
             self.stats.allocation_rounds += 1
-            servers = [s for s in self._replica.server_list()
-                       if s.server_id not in self._removed_servers]
+            servers = self._candidate_servers()
             if not servers:
                 self.clock.sleep(next(delays))
                 continue
-            order = self._rng.sample(servers, len(servers))  # permutation
+            order = self._placement_order(servers)
             for mgr in order:
                 if remaining <= 0:
                     break
@@ -208,6 +272,7 @@ class Invoker:
                     ctrl.rpc(CONTROL_MSG_BYTES)   # lease negotiation
                 except ChannelError:
                     self.stats.negotiation_faults += 1
+                    self._note_fault(mgr.server_id)
                     continue     # lost/blocked rpc -> walk on, back off
                 try:
                     proc = mgr.grant(req, self.library, channel=ctrl)
@@ -250,6 +315,7 @@ class Invoker:
     def deallocate(self):
         with self._lock:
             conns, self._conns = self._conns, []
+            self._pairs_cache = None
             for c in conns:
                 self._close_conn_locked(c)
         for c in conns:
@@ -271,17 +337,32 @@ class Invoker:
             self._ctrl.clear()
 
     # ------------------------------------------------------------- workers
-    def _worker_pairs(self) -> List[Tuple[ExecutorWorker, Connection]]:
+    def _worker_pairs(self, cached: bool = False) \
+            -> List[Tuple[ExecutorWorker, Connection, Channel]]:
+        """Live (worker, connection, data-channel) triples.
+        ``cached=True`` returns the last validated snapshot when nothing
+        has changed — the dispatch fast path.  Staleness is safe: a dead
+        worker or broken route in the snapshot surfaces as
+        ``ExecutorCrash``/``ChannelError`` on use, which invalidates the
+        cache and retries on fresh pairs."""
+        if cached:
+            pairs = self._pairs_cache
+            if pairs is not None:
+                return pairs
         with self._lock:
             dead = [c for c in self._conns if not c.alive()]
             for c in dead:               # disrupted connection -> drop (§3.5)
                 self._conns.remove(c)
                 self._close_conn_locked(c, faulted=True)
-            return [(w, c) for c in self._conns
-                    for w in c.process.alive_workers()]
+            data = self._data
+            pairs = [(w, c, data[w.name]) for c in self._conns
+                     for w in c.process.alive_workers()
+                     if w.name in data]
+            self._pairs_cache = pairs
+            return pairs
 
     def _alive_workers(self) -> List[ExecutorWorker]:
-        return [w for w, _ in self._worker_pairs()]
+        return [w for w, _, _ in self._worker_pairs()]
 
     def _drop_connection(self, conn: Connection):
         """A broken route is indistinguishable from a dead executor on
@@ -289,6 +370,7 @@ class Invoker:
         with self._lock:
             if conn in self._conns:
                 self._conns.remove(conn)
+            self._pairs_cache = None
             self._close_conn_locked(conn, faulted=True)
 
     @property
@@ -335,9 +417,14 @@ class Invoker:
         where every failure was a transient loss (``ChannelDropped``)
         is retried with backoff — the reliable-channel contract — up to
         ``max_retries`` passes."""
-        delays = self._backoffs()
+        delays = None                     # built only if a retry happens
         for sweep in range(self.max_retries + 1):
-            pairs = self._worker_pairs()
+            # first sweep rides the validated snapshot (dispatch fast
+            # path); any failure below invalidates it, so retry sweeps
+            # revalidate against live leases/workers
+            pairs = self._worker_pairs(cached=sweep == 0)
+            if not pairs:
+                pairs = self._worker_pairs()        # snapshot was stale
             if not pairs:
                 raise AllocationFailed(
                     f"{self.client_id}: no live executor workers")
@@ -346,20 +433,20 @@ class Invoker:
             last_err: Optional[BaseException] = None
             saw_drop = False
             for k in range(len(pairs)):
-                worker, conn = pairs[(start + k) % len(pairs)]
-                with self._lock:
-                    ch = self._data.get(worker.name)
-                if ch is None or ch.closed:   # connection already dropped
+                worker, conn, ch = pairs[(start + k) % len(pairs)]
+                if ch.closed:                 # connection already dropped
                     continue
                 try:
                     t_in = ch.send(inv.bytes_in + InvocationHeader.SIZE)
                 except ChannelPartitioned as e:
                     self.stats.dispatch_faults += 1
+                    self._note_fault(conn.manager.server_id)
                     self._drop_connection(conn)  # broken route == dead
                     last_err = e
                     continue
                 except ChannelDropped as e:
                     self.stats.dispatch_faults += 1
+                    self._note_fault(conn.manager.server_id)
                     last_err = e              # transient loss: keep conn
                     saw_drop = True
                     continue
@@ -369,12 +456,15 @@ class Invoker:
                     worker.submit(inv)
                     return
                 except ExecutorCrash as e:
+                    self._pairs_cache = None  # dead worker in snapshot
                     last_err = e
                     continue
             # any transient loss this pass is worth a resend — dead
             # workers/routes were pruned and won't be revisited
             if not (saw_drop and sweep < self.max_retries):
                 break
+            if delays is None:
+                delays = self._backoffs()
             self.clock.sleep(next(delays))    # transient loss: resend
         raise AllocationFailed(
             f"{self.client_id}: no reachable executor workers"
@@ -392,6 +482,8 @@ class Invoker:
 
 class RetryingFuture:
     """RFuture facade with client-library retry semantics (§3.5)."""
+
+    __slots__ = ("_invoker", "_cur", "_fn_name", "_payload", "_attempt")
 
     def __init__(self, invoker: Invoker, inv: Invocation, fn_name: str,
                  payload: Any):

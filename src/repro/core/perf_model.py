@@ -59,7 +59,7 @@ def write_time(nbytes: int, p: NetParams = DEFAULT_NET) -> float:
     t = p.latency + nbytes / p.bandwidth
     if nbytes <= p.inline_limit:
         t -= p.inline_save
-    return max(t, 0.0)
+    return t if t > 0.0 else 0.0
 
 
 def tier_overhead(tier: Tier, sandbox: Sandbox,

@@ -2,8 +2,9 @@
 
 The manager never sits on the invocation path: it only (a) accepts node
 registrations from the batch system via a REST-analogue call, (b) keeps a
-heartbeat-verified ranked list of executor servers, and (c) multicasts
-availability *deltas* to subscribed clients.  All of it rides the
+heartbeat-verified availability registry of executor servers (ordering
+policy lives with the clients — see Invoker's fabric-aware placement),
+and (c) multicasts availability *deltas* to subscribed clients.  All of it rides the
 transport fabric (DESIGN.md §12): registrations and heartbeat probes go
 over reliable control channels — a partitioned node misses its
 heartbeats and is evicted — while the multicast fans out over
@@ -36,9 +37,6 @@ class ServerEntry:
     available: bool = True
     #: this replica's control channel to the server (heartbeat probes)
     channel: Optional[Channel] = field(default=None, repr=False)
-
-    def rank_key(self):
-        return (-self.manager.free_workers, self.manager.server_id)
 
 
 class AvailabilityBus:
@@ -130,6 +128,12 @@ class ResourceManagerReplica:
         self._peers: List["ResourceManagerReplica"] = []
         self._peer_channels: Dict[int, Channel] = {}
         self._epoch = 0
+        # availability-list cache, versioned by registry mutations:
+        # thousand-node clusters must not pay an O(n) rebuild per
+        # allocation round when nothing changed
+        self._list_version = 0
+        self._list_cache: List[ExecutorManager] = []
+        self._list_cache_version = -1
 
     # ------------------------------------------------------- REST analogue
     def _server_channel(self, server_id: str) -> Channel:
@@ -140,6 +144,7 @@ class ResourceManagerReplica:
         registration message rides this replica's control channel."""
         with self._lock:
             self._epoch += 1
+            self._list_version += 1
             old = self._servers.get(manager.server_id)
             entry = ServerEntry(manager, epoch=self._epoch,
                                 channel=self._server_channel(
@@ -164,6 +169,7 @@ class ResourceManagerReplica:
         """Single-step removal for batch-job priority (§5.3)."""
         with self._lock:
             entry = self._servers.pop(server_id, None)
+            self._list_version += 1
         if entry is not None:
             if entry.channel is not None:
                 entry.channel.close()
@@ -180,19 +186,28 @@ class ResourceManagerReplica:
 
     # -------------------------------------------------------------- client
     def server_list(self) -> List[ExecutorManager]:
-        """Ranked list of available executor servers (clients permute it
-        randomly; see Invoker)."""
+        """Available executor servers.  The replica keeps an
+        availability REGISTRY, not a ranking: every in-repo consumer
+        permutes the list (decentralized contention-spreading, §3.2)
+        and applies its own fabric-aware placement (Invoker), so
+        ordering policy lives with the client.  The list is cached and
+        rebuilt only when the registry mutates — a liveness filter is
+        the only per-call work."""
         with self._lock:
-            entries = [e for e in self._servers.values()
-                       if e.available and e.manager.heartbeat()]
-            entries.sort(key=ServerEntry.rank_key)
-            return [e.manager for e in entries]
+            if self._list_cache_version != self._list_version:
+                self._list_cache = [e.manager
+                                    for e in self._servers.values()
+                                    if e.available]
+                self._list_cache_version = self._list_version
+            cache = self._list_cache
+        return [m for m in cache if m.heartbeat()]
 
     # ---------------------------------------------------------- saturation
     def _on_saturated(self, server_id: str):
         with self._lock:
             if server_id in self._servers:
                 self._servers[server_id].available = False
+                self._list_version += 1
         self._gossip({"op": "saturated", "server_id": server_id})
         self.bus.publish({"op": "saturated", "server_id": server_id})
 
@@ -200,6 +215,7 @@ class ResourceManagerReplica:
         with self._lock:
             if server_id in self._servers:
                 self._servers[server_id].available = True
+                self._list_version += 1
         self._gossip({"op": "available", "server_id": server_id})
         self.bus.publish({"op": "add", "server_id": server_id})
 
@@ -227,6 +243,7 @@ class ResourceManagerReplica:
     def _apply(self, delta: dict):
         with self._lock:
             op = delta["op"]
+            self._list_version += 1
             if op == "register":
                 m = delta["server"]
                 old = self._servers.get(m.server_id)
@@ -275,6 +292,7 @@ class ResourceManagerReplica:
                 # must not be collateral damage
                 if self._servers.get(sid) is e:
                     del self._servers[sid]
+                    self._list_version += 1
                     dead.append(sid)
                     if e.channel is not None:
                         e.channel.close()

@@ -194,15 +194,22 @@ class SimulatedCluster:
         self.bs.retrieve_node(node_id, grace_s)
 
     # ----------------------------------------------------------- partitions
-    def partition(self, group_a: Sequence[str], group_b: Sequence[str]):
+    def partition(self, group_a: Sequence[str], group_b: Sequence[str],
+                  *, one_way: bool = False):
         """Sever fabric connectivity between two endpoint groups (node
-        ids, ``client:<id>``, ``rm:<i>``, ``rm:bus``)."""
-        self.fabric.partition(group_a, group_b)
+        ids, ``client:<id>``, ``rm:<i>``, ``rm:bus``); ``one_way=True``
+        cuts only the a→b direction."""
+        self.fabric.partition(group_a, group_b, one_way=one_way)
 
-    def isolate_nodes(self, node_ids: Sequence[str]):
+    def isolate_nodes(self, node_ids: Sequence[str], *,
+                      one_way: bool = False):
         """Cut the given nodes off from everything else: clients lose
         their data channels, replicas lose heartbeats, allocations to
-        the island fail — the full §3.5 fault surface at once."""
+        the island fail — the full §3.5 fault surface at once.  With
+        ``one_way=True`` only the island→mainland direction is severed:
+        dispatches and heartbeat probes still REACH the island, but
+        results and heartbeat replies never come home — the asymmetric
+        failure mode the return-route checks exist for."""
         island = set(node_ids)
         mainland = self.fabric.endpoints() - island
         # endpoints that may not have carried traffic yet
@@ -210,7 +217,7 @@ class SimulatedCluster:
         mainland |= {r.endpoint for r in self.rm.replicas}
         mainland |= {self.rm.bus.ENDPOINT}
         mainland |= {nid for nid in self.bs.nodes if nid not in island}
-        self.fabric.partition(island, mainland)
+        self.fabric.partition(island, mainland, one_way=one_way)
 
     def heal(self, reregister: bool = True):
         """Remove all partitions; optionally re-register evicted nodes
@@ -371,6 +378,7 @@ class SimulatedCluster:
                            n_invocations: int = 400,
                            workers_per_client: int = 2,
                            isolate: Optional[Sequence[str]] = None,
+                           one_way: bool = False,
                            t_partition: float = 0.02,
                            t_heal: float = 0.06,
                            payload_elems: int = 64,
@@ -388,7 +396,10 @@ class SimulatedCluster:
         deterministic function of the seed.
 
         ``isolate`` defaults to the first node actually holding a
-        client lease, so the partition always hits live traffic."""
+        client lease, so the partition always hits live traffic.
+        ``one_way=True`` severs only island→mainland: dispatches still
+        reach the island but results and heartbeat replies are eaten —
+        the asymmetric fault surface (DESIGN.md §12)."""
         lib = FunctionLibrary("sim")
         lib.register("work", lambda x: x, service_time_s=service_time_s)
         rng = random.Random(self.seed * 6271 + 29)
@@ -413,7 +424,9 @@ class SimulatedCluster:
             replica.sweep_heartbeats = counting_sweep
         self.rm.start_heartbeats(heartbeat_interval_s)
 
-        self.at(t_partition, self.isolate_nodes, list(isolate))
+        def cut():
+            self.isolate_nodes(list(isolate), one_way=one_way)
+        self.at(t_partition, cut)
         self.at(t_heal, self.heal)
 
         payload = np.ones(payload_elems, np.float32)

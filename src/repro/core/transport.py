@@ -23,7 +23,11 @@ calls:
   partitions.  ``connect()`` returns a reliable channel (RC queue-pair
   analogue), ``datagram()`` an unreliable one (UD analogue, used by the
   availability multicast).  ``partition(a, b)`` severs connectivity
-  between two endpoint groups until ``heal()``.
+  between two endpoint groups until ``heal()``; ``one_way=True`` severs
+  only the a→b direction (asymmetric failure: a link that still
+  delivers requests but eats the replies — heartbeat rpcs and result
+  returns notice via the return-route check even though the forward
+  send succeeds).
 
 * ``Channel`` — one queue pair: ``send()`` models the wire time of a
   message through the shared clock's timeline and returns it, updating
@@ -88,6 +92,8 @@ class FabricParams:
 
     def message_time(self, nbytes: int) -> float:
         """Modeled one-way time of one message of ``nbytes`` payload."""
+        if self.encoding == 1.0:         # hot path: no wire expansion
+            return write_time(nbytes, self.net)
         return write_time(int(round(nbytes * self.encoding)), self.net)
 
 
@@ -162,7 +168,7 @@ class Channel:
     __slots__ = ("fabric", "src", "dst", "reliable", "drop_rate",
                  "extra_delay", "connected_at", "messages", "bytes",
                  "drops", "blocked", "closed", "faulted", "_rng",
-                 "_setup_pending", "_lock")
+                 "_setup_pending", "_lock", "_mt_memo")
 
     def __init__(self, fabric: "Fabric", src: str, dst: str, *,
                  reliable: bool, drop_rate: float, extra_delay: float,
@@ -185,6 +191,9 @@ class Channel:
         # per-channel lock: counters never contend across channels (the
         # per-message path must not serialize the whole cluster)
         self._lock = threading.Lock()
+        # size -> params.message_time(size): workloads send the same
+        # few sizes millions of times and the params are frozen
+        self._mt_memo: Dict[int, float] = {}
 
     # ------------------------------------------------------------ model
     @property
@@ -206,14 +215,32 @@ class Channel:
         return self.fabric.params.message_time(nbytes) + self.extra_delay
 
     # ------------------------------------------------------------- wire
-    def send(self, nbytes: int) -> Optional[float]:
+    def send(self, nbytes: int, reverse: bool = False) -> Optional[float]:
         """Model one message crossing the channel.
 
         Returns the modeled one-way time, or ``None`` when an unreliable
         channel lost the message.  Reliable channels raise
         ``ChannelPartitioned`` (no route / closed) or ``ChannelDropped``
-        (injected loss) instead of silently failing."""
-        if self.closed or self.fabric.partitioned(self.src, self.dst):
+        (injected loss) instead of silently failing.  ``reverse`` sends
+        against the channel's orientation (dst→src: the result-return
+        leg riding the client's queue pair), which matters under
+        one-way partitions where only one direction is severed."""
+        fabric = self.fabric
+        if not (self.closed or self.drop_rate or fabric._partitions):
+            # fast path — healthy channel, no faults armed anywhere:
+            # identical arithmetic and counters to the slow path below,
+            # minus the fault bookkeeping (this is the 100k-invocation
+            # replay's innermost loop)
+            t = self._mt_memo.get(nbytes)
+            if t is None:
+                t = self._mt_memo[nbytes] = \
+                    fabric.params.message_time(nbytes)
+            with self._lock:
+                self.messages += 1
+                self.bytes += nbytes
+            return t + self.extra_delay
+        a, b = (self.dst, self.src) if reverse else (self.src, self.dst)
+        if self.closed or fabric.partitioned(a, b):
             with self._lock:
                 self.blocked += 1        # keeps ch.stats() honest
             if self.closed:
@@ -224,8 +251,7 @@ class Channel:
                 with self.fabric._lock:
                     self.fabric._retired["blocked"] += 1
             if self.reliable:
-                raise ChannelPartitioned(
-                    f"{self.src} -/-> {self.dst}: no route")
+                raise ChannelPartitioned(f"{a} -/-> {b}: no route")
             return None
         if self.drop_rate and self._rng.random() < self.drop_rate:
             with self._lock:
@@ -236,7 +262,8 @@ class Channel:
             return None
         return self.transfer(nbytes)
 
-    def send_retransmitting(self, nbytes: int, attempts: int = 3) -> float:
+    def send_retransmitting(self, nbytes: int, attempts: int = 3,
+                            reverse: bool = False) -> float:
         """``send`` with the RC retransmission behaviour made explicit:
         injected losses are resent (each lost attempt still costs the
         modeled wire time).  A loss burst outlasting ``attempts``
@@ -248,7 +275,7 @@ class Channel:
         t = 0.0
         for i in range(attempts):
             try:
-                return t + (self.send(nbytes) or 0.0)
+                return t + (self.send(nbytes, reverse=reverse) or 0.0)
             except ChannelDropped:
                 t += self.message_time(nbytes)   # lost attempt's wire time
                 if i == attempts - 1:
@@ -260,11 +287,26 @@ class Channel:
         GRACEFULLY closed channel (client teardown while the executor
         drains) still delivers — modeled time, no fault check, no
         counters; a faulted or partitioned one behaves like
-        ``send_retransmitting`` and surfaces the broken route."""
+        ``send_retransmitting`` and surfaces the broken route.  The
+        result travels dst→src (the executor writing back over the
+        client's queue pair), so the route check runs in REVERSE —
+        under a one-way partition severing only the executor's side,
+        dispatch still arrives but the result cannot come home."""
+        fabric = self.fabric
+        if not (self.closed or self.drop_rate or fabric._partitions):
+            # healthy-route fast path, identical to send()'s
+            t = self._mt_memo.get(nbytes)
+            if t is None:
+                t = self._mt_memo[nbytes] = \
+                    fabric.params.message_time(nbytes)
+            with self._lock:
+                self.messages += 1
+                self.bytes += nbytes
+            return t + self.extra_delay
         if (self.closed and not self.faulted
-                and not self.fabric.partitioned(self.src, self.dst)):
+                and not fabric.partitioned(self.dst, self.src)):
             return self.message_time(nbytes)
-        return self.send_retransmitting(nbytes)
+        return self.send_retransmitting(nbytes, reverse=True)
 
     def transfer(self, nbytes: int) -> float:
         """A counted leg WITHOUT a fault check: used for the pieces of
@@ -280,11 +322,21 @@ class Channel:
 
     def rpc(self, bytes_request: int,
             bytes_response: int = CONTROL_MSG_BYTES) -> float:
-        """A request/response round trip with a single fault check —
-        the unit of control-plane negotiation (lease requests,
-        heartbeats).  Both legs hit the counters."""
+        """A request/response round trip with one fault check per
+        direction — the unit of control-plane negotiation (lease
+        requests, heartbeats).  Both legs hit the counters.  The
+        response leg verifies the RETURN route separately: under a
+        one-way partition the request may arrive while the reply
+        cannot, and the caller must see that as a fault."""
         t = self.send(bytes_request)
         if t is None:                # unreliable rpc: loss = no reply
+            return 0.0
+        if self.fabric.partitioned(self.dst, self.src):
+            with self._lock:
+                self.blocked += 1
+            if self.reliable:
+                raise ChannelPartitioned(
+                    f"{self.dst} -/-> {self.src}: no return route")
             return 0.0
         return t + self.transfer(bytes_response)
 
@@ -339,9 +391,11 @@ class Fabric:
         self._retired = {key: 0 for key in WIRE_COUNTERS}
         self._endpoints: Set[str] = set()
         # immutable snapshot, swapped atomically: the per-message
-        # partitioned() check reads it without taking the fabric lock
+        # partitioned() check reads it without taking the fabric lock;
+        # each entry is (group_a, group_b, one_way) — a one-way entry
+        # only severs a→b
         self._partitions: Tuple[
-            Tuple[FrozenSet[str], FrozenSet[str]], ...] = ()
+            Tuple[FrozenSet[str], FrozenSet[str], bool], ...] = ()
 
     # ------------------------------------------------------- connections
     def _mk_channel(self, src: str, dst: str, *, reliable: bool,
@@ -404,25 +458,31 @@ class Fabric:
                     if extra_delay is not None:
                         ch.extra_delay = extra_delay
 
-    def partition(self, group_a, group_b):
-        """Sever connectivity between two endpoint groups (both
-        directions) until ``heal()``.  Traffic within a group — e.g. a
-        worker's result write to a client on the same side — still
-        flows."""
+    def partition(self, group_a, group_b, *, one_way: bool = False):
+        """Sever connectivity between two endpoint groups until
+        ``heal()``.  Symmetric by default; with ``one_way=True`` only
+        the a→b direction is cut (asymmetric failure: group_a's
+        messages vanish while group_b's still arrive).  Traffic within
+        a group — e.g. a worker's result write to a client on the same
+        side — still flows."""
         a, b = frozenset(group_a), frozenset(group_b)
         if a & b:
             raise ValueError(f"partition groups overlap: {sorted(a & b)}")
         with self._lock:
-            self._partitions = self._partitions + ((a, b),)
+            self._partitions = self._partitions + ((a, b, one_way),)
 
     def heal(self):
-        """Remove every active partition."""
+        """Remove every active partition (one-way ones included)."""
         with self._lock:
             self._partitions = ()
 
     def partitioned(self, x: str, y: str) -> bool:
-        for a, b in self._partitions:    # atomic snapshot read, lock-free
-            if (x in a and y in b) or (x in b and y in a):
+        """Is the DIRECTED route x→y severed?  (Symmetric partitions
+        block both directions; one-way ones only a→b.)"""
+        for a, b, one_way in self._partitions:   # atomic snapshot read
+            if x in a and y in b:
+                return True
+            if not one_way and x in b and y in a:
                 return True
         return False
 

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
+
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -379,7 +381,7 @@ def decode_attention_sp(q, k_cache, v_cache, length, dist, *, window=0,
 
     from jax.sharding import PartitionSpec as P
     kv = dist.kv_axes()
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, None, None, None), P(dp, kv, None, None),
                   P(dp, kv, None, None), P()),
@@ -434,7 +436,7 @@ def mla_decode_sp(x, p, cfg, c_kv_cache, k_rope_cache, length, positions,
 
     from jax.sharding import PartitionSpec as P
     kv = dist.kv_axes()
-    o_lat = jax.shard_map(
+    o_lat = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, None, None, None), P(dp, None, None, None),
                   P(dp, kv, None), P(dp, kv, None), P()),

@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models import attention as A
@@ -178,7 +180,7 @@ class DecoderLM:
                         y, di * xl.shape[0], xl.shape[0], 0)
                 return y, jax.lax.pmean(aux, all_axes)
 
-            return jax.shard_map(
+            return shard_map(
                 local_fn, mesh=dist.mesh,
                 in_specs=(P(dp, None, None), self.moe_param_specs(False)),
                 out_specs=(P(dp, None, None), P()),
@@ -192,7 +194,7 @@ class DecoderLM:
                                  ep_axis=ep, tp_axis=tp)
             return y, jax.lax.pmean(aux, all_axes)
 
-        return jax.shard_map(
+        return shard_map(
             local_fn, mesh=dist.mesh,
             in_specs=(P(dp, None, None), self.moe_param_specs(False)),
             out_specs=(P(dp, None, None), P()),

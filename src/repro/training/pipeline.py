@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -59,7 +61,7 @@ def gpipe_forward(stage_fn, stage_params, microbatches, *, mesh,
         return outs
 
     pspecs = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(pspecs, P()), out_specs=P(),
         check_vma=False)(stage_params, microbatches)

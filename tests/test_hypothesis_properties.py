@@ -1,0 +1,206 @@
+"""Hypothesis property tests: the Lease state machine and the transport
+Channel's wire counters (paper §3.2 lease lifecycle, DESIGN.md §12
+counter contracts).
+
+Guarded import (requirements-test.txt pattern): where hypothesis is
+missing the module skips itself, and the seeded-random fallback tests
+at the bottom keep the SAME invariant-checking helpers exercised — the
+helpers are shared, so the two paths cannot drift.
+
+Invariants:
+
+* Lease — terminal states (EXPIRED/RELEASED/RETRIEVED/FAILED) are
+  sinks: no operation sequence transitions out of them, ``t_ended``
+  freezes, the GB-second meter is monotone while alive and frozen
+  after, and an ended lease never re-expires.
+* Channel — per-channel wire counters are monotone non-decreasing
+  under arbitrary send/fault/close sequences; ``close()`` retires the
+  counters into the fabric's totals EXACTLY once (the fabric aggregate
+  is invariant across a close, monotone across everything else, and a
+  double close changes nothing).
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core import (Fabric, Lease, LeaseRequest, LeaseState,
+                        TERMINAL_STATES, VirtualClock)
+from repro.core.transport import WIRE_COUNTERS
+
+END_STATES = (LeaseState.EXPIRED, LeaseState.RELEASED,
+              LeaseState.RETRIEVED, LeaseState.FAILED)
+
+
+# ------------------------------------------------------- shared helpers
+def check_lease_ops(ops, timeout_s: float):
+    """Run (op, arg) steps against one lease, asserting the state
+    machine's invariants after every step."""
+    clock = VirtualClock()
+    lease = Lease(LeaseRequest("c", 1, 1 << 30, timeout_s), "s0",
+                  clock=clock)
+    lease.activate()
+    terminal = None
+    t_ended = None
+    prev_gbs = 0.0
+    for op, arg in ops:
+        if op == "advance":
+            clock.advance(arg)
+        elif op == "end":
+            lease.end(arg)
+        else:
+            lease.activate()
+        if terminal is None and lease.state in TERMINAL_STATES:
+            terminal = lease.state
+            t_ended = lease.t_ended
+        if terminal is not None:
+            # sinks: RETRIEVED/EXPIRED/RELEASED/FAILED never change
+            assert lease.state == terminal
+            assert lease.t_ended == t_ended
+            assert not lease.alive
+        gbs = lease.gb_seconds()
+        assert gbs >= prev_gbs, "gb_seconds must never decrease"
+        prev_gbs = gbs
+    if terminal is not None:
+        frozen = lease.gb_seconds()
+        clock.advance(1e6)
+        assert lease.gb_seconds() == frozen   # meter froze at end
+        assert not lease.expired()            # ended leases never expire
+
+
+def check_channel_ops(seed: int, ops):
+    """Run (channel-idx, op, nbytes) steps against three datagram
+    channels on one fabric, asserting counter monotonicity per channel,
+    aggregate monotonicity, and retire-exactly-once at close."""
+    fab = Fabric("rdma", seed=seed)
+    chans = [fab.datagram("a", f"e{i}") for i in range(3)]
+    prev_per = [{k: 0 for k in WIRE_COUNTERS} for _ in chans]
+    prev_total = {k: 0 for k in WIRE_COUNTERS}
+
+    def totals():
+        s = fab.stats()
+        return {k: s[k] for k in WIRE_COUNTERS}
+
+    for idx, op, n in ops:
+        ch = chans[idx]
+        before = totals()
+        if op == "send":
+            ch.send(n)                   # datagram: losses are silent
+        elif op == "drop_on":
+            ch.drop_rate = 1.0
+        elif op == "drop_off":
+            ch.drop_rate = 0.0
+        elif op == "partition":
+            fab.heal()
+            fab.partition(["a"], [ch.dst])
+        elif op == "heal":
+            fab.heal()
+        elif op == "close":
+            ch.close()
+            # retire-exactly-once: folding live counters into the
+            # retired totals must leave the AGGREGATE untouched —
+            # whether this was the first close or a repeat
+            assert totals() == before
+        after = totals()
+        for k in WIRE_COUNTERS:          # aggregate is monotone
+            assert after[k] >= prev_total[k], k
+        prev_total = after
+        for ch_i, prev in zip(chans, prev_per):
+            for k in WIRE_COUNTERS:      # per-channel monotone
+                v = getattr(ch_i, k)
+                assert v >= prev[k], k
+                prev[k] = v
+    # every send outcome landed in exactly one counter bucket
+    sends = sum(1 for _, op, _ in ops if op == "send")
+    assert sum(prev_total[k] for k in ("messages", "drops", "blocked")) \
+        == sends
+
+
+# ------------------------------------------------------ hypothesis path
+# guarded import (requirements-test.txt pattern): unlike a module-level
+# importorskip, only the @given tests vanish without hypothesis — the
+# seeded fallbacks below keep running everywhere
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI has it
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    LEASE_OP = st.one_of(
+        st.tuples(st.just("advance"),
+                  st.floats(0.0, 10.0, allow_nan=False,
+                            allow_infinity=False)),
+        st.tuples(st.just("end"), st.sampled_from(END_STATES)),
+        st.tuples(st.just("activate"), st.none()),
+    )
+
+    CHANNEL_OP = st.tuples(
+        st.integers(0, 2),
+        st.sampled_from(["send", "send", "send", "drop_on", "drop_off",
+                         "partition", "heal", "close"]),
+        st.integers(0, 1 << 16),
+    )
+
+    @settings(max_examples=80, deadline=None)
+    @given(ops=st.lists(LEASE_OP, max_size=30),
+           timeout_s=st.floats(0.05, 50.0, allow_nan=False,
+                               allow_infinity=False))
+    def test_lease_state_machine_properties(ops, timeout_s):
+        check_lease_ops(ops, timeout_s)
+
+    @settings(max_examples=60, deadline=None)
+    @given(first=st.sampled_from(END_STATES),
+           second=st.sampled_from(END_STATES),
+           dt=st.floats(0.0, 100.0, allow_nan=False,
+                        allow_infinity=False))
+    def test_no_transition_out_of_terminal(first, second, dt):
+        """RETRIEVED and EXPIRED (and every other terminal) are sinks
+        for every (terminal, attempted-next) pair hypothesis draws."""
+        clock = VirtualClock()
+        lease = Lease(LeaseRequest("c", 1, 1 << 30, 60.0), "s0",
+                      clock=clock)
+        lease.activate()
+        clock.advance(dt)
+        lease.end(first)
+        lease.end(second)
+        lease.activate()
+        assert lease.state == first
+        clock.advance(1000.0)
+        assert not lease.expired()
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 1 << 16),
+           ops=st.lists(CHANNEL_OP, max_size=40))
+    def test_channel_counter_properties(seed, ops):
+        check_channel_ops(seed, ops)
+
+
+# --------------------------------------- seeded fallback (always runs)
+@pytest.mark.parametrize("trial_seed", [101, 202, 303])
+def test_lease_ops_seeded_fallback(trial_seed):
+    rng = random.Random(trial_seed)
+    for _ in range(30):
+        ops = []
+        for _ in range(rng.randrange(0, 25)):
+            kind = rng.randrange(3)
+            if kind == 0:
+                ops.append(("advance", rng.uniform(0.0, 10.0)))
+            elif kind == 1:
+                ops.append(("end", rng.choice(END_STATES)))
+            else:
+                ops.append(("activate", None))
+        check_lease_ops(ops, rng.uniform(0.05, 50.0))
+
+
+@pytest.mark.parametrize("trial_seed", [11, 22, 33])
+def test_channel_ops_seeded_fallback(trial_seed):
+    rng = random.Random(trial_seed)
+    kinds = ["send", "send", "send", "drop_on", "drop_off",
+             "partition", "heal", "close"]
+    for _ in range(20):
+        ops = [(rng.randrange(3), rng.choice(kinds),
+                rng.randrange(1 << 16))
+               for _ in range(rng.randrange(0, 35))]
+        check_channel_ops(rng.randrange(1 << 16), ops)

@@ -1,0 +1,267 @@
+"""Churn-replay engine: trace generation/loading, batch preemption
+overlapping transport faults, and deterministic ElasticityStats
+(paper §2 Piz Daint trace, §5.3 retrieval, §6 cost model).
+
+The whole file runs on VirtualClocks — no sleeps; the fast tier stays
+seconds-scale while still replaying a seeded 1000-node cluster.  The
+full 1000-node / 100k-invocation acceptance replay lives in
+tests/test_trace_acceptance.py (slow tier) so this file fits the
+fast-tier 5-second budget.
+"""
+from __future__ import annotations
+
+import io
+import time
+
+import pytest
+
+from repro.core import (ChurnTrace, ElasticityStats, LeaseState,
+                        SimulatedCluster, TraceEvent, TraceReplayer,
+                        replay_trace)
+from repro.core.trace import EVENT_KINDS
+
+
+# --------------------------------------------------------------- traces
+def test_synthetic_trace_deterministic_and_seed_sensitive():
+    a = ChurnTrace.synthetic_piz_daint(20, 1.0, 0.5, seed=3)
+    b = ChurnTrace.synthetic_piz_daint(20, 1.0, 0.5, seed=3)
+    c = ChurnTrace.synthetic_piz_daint(20, 1.0, 0.5, seed=4)
+    assert a.events == b.events
+    assert a.events != c.events
+    counts = a.counts()
+    assert counts.get("node_down", 0) > 0     # churn actually happens
+    assert counts.get("node_up", 0) > 0
+    assert all(e.kind in EVENT_KINDS for e in a)
+    # events are time-sorted — the replayer relies on it
+    times = [e.t for e in a]
+    assert times == sorted(times)
+
+
+def test_synthetic_trace_tracks_utilization_level():
+    """Higher utilization ⇒ more of the trace spent batch-busy: count
+    initial preemptions (t=0 node_down = nodes starting busy)."""
+    def initially_busy(util, seed=9):
+        tr = ChurnTrace.synthetic_piz_daint(200, 1.0, util, seed=seed)
+        return sum(1 for e in tr if e.kind == "node_down" and e.t == 0.0)
+
+    lo, hi = initially_busy(0.2), initially_busy(0.8)
+    assert lo < hi
+    assert 10 <= lo <= 90          # ~40 expected of 200
+    assert 120 <= hi <= 200        # ~160 expected of 200
+
+
+def test_trace_fault_weaving():
+    tr = ChurnTrace.synthetic_piz_daint(
+        10, 1.0, 0.3, seed=1, fault_drop_rate=0.1, drop_window_s=0.2,
+        n_partitions=2, partition_width=2, one_way_partitions=True)
+    counts = tr.counts()
+    assert counts["drop_rate"] == 2           # phase on + phase off
+    assert counts["partition"] == 2 and counts["heal"] == 2
+    parts = [e for e in tr if e.kind == "partition"]
+    assert all(e.one_way for e in parts)
+    assert all(len(e.group_a) == 2 for e in parts)
+
+
+def test_trace_json_roundtrip():
+    tr = ChurnTrace.synthetic_piz_daint(
+        6, 0.5, 0.4, seed=5, n_partitions=1, one_way_partitions=True)
+    doc = tr.to_json()
+    back = ChurnTrace.from_json(doc)
+    assert back.n_nodes == tr.n_nodes
+    assert back.events == tr.events
+    assert back.meta == tr.meta
+    # file-object path too
+    buf = io.StringIO()
+    tr.to_json(buf)
+    buf.seek(0)
+    assert ChurnTrace.from_json(buf).events == tr.events
+
+
+def test_trace_validation_rejects_garbage():
+    with pytest.raises(ValueError):
+        ChurnTrace(4, [TraceEvent(0.0, "frobnicate")])
+    with pytest.raises(ValueError):
+        ChurnTrace(4, [TraceEvent(0.0, "node_down", node_id="node999")])
+    with pytest.raises(ValueError):
+        ChurnTrace(4, [TraceEvent(0.0, "batch_job", n_nodes=9)])
+    with pytest.raises(ValueError):
+        ChurnTrace.synthetic_piz_daint(4, 1.0, 1.0, seed=0)  # util == 1
+
+
+# -------------------------------------------------- batch-system driving
+def test_batch_job_queue_preempts_and_returns():
+    """submit_job claims idle first then preempts FaaS; completion
+    returns nodes and starts queued successors — all on the clock."""
+    sim = SimulatedCluster(n_nodes=4, workers_per_node=2, seed=2)
+    bs = sim.bs
+    assert bs.state_counts() == {"idle": 0, "faas": 4, "batch": 0}
+    job = bs.submit_job(3, duration_s=0.05)
+    assert job.state == "running"
+    assert bs.preemptions == 3                # all claims were FaaS
+    wide = bs.submit_job(4, duration_s=0.05)  # must wait for the first
+    assert wide.state == "queued"
+    sim.run_for(0.06)                         # first job completes
+    assert job.state == "done"
+    assert wide.state == "running"            # successor started
+    sim.run_for(0.06)
+    assert wide.state == "done"
+    assert bs.state_counts()["faas"] == 4     # everything came back
+    assert bs.node_returns >= 7
+
+
+def test_queued_job_keeps_its_own_grace():
+    """A job that waits in the queue preempts with the grace window IT
+    was submitted with, not whatever grace a later scheduling trigger
+    happened to carry."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=4)
+    bs = sim.bs
+    first = bs.submit_job(2, duration_s=0.05, grace_s=0.0)
+    waiting = bs.submit_job(2, duration_s=0.05, grace_s=0.25)
+    assert waiting.state == "queued" and waiting.grace_s == 0.25
+    sim.run_for(0.06)                         # first done -> waiting runs
+    assert first.state == "done" and waiting.state == "running"
+    # started from _complete_job's reschedule, grace preserved
+    assert waiting.grace_s == 0.25
+
+
+def test_trace_node_down_does_not_steal_running_jobs_node():
+    """A bare node_down on a node a RUNNING batch job holds must not
+    clobber the job binding — completion still returns the node."""
+    from repro.core import TraceEvent as TE
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=4)
+    bs = sim.bs
+    job = bs.submit_job(1, duration_s=0.05)
+    nid = job.nodes[0]
+    bs.apply_trace_event(TE(0.0, "node_down", node_id=nid))
+    assert bs.nodes[nid].job_id == job.job_id  # binding survived
+    sim.run_for(0.06)
+    assert job.state == "done"
+    assert bs.nodes[nid].state == "faas"       # returned, not leaked
+
+
+def test_occupancy_integrates_mid_interval_job_completions():
+    """Node-seconds are integrated at every transition — a job ending
+    between trace events credits batch time, not faas time."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=4)
+    bs = sim.bs
+    bs.submit_job(2, duration_s=0.1)          # whole cluster to batch
+    sim.run_for(0.3)                          # completes at t=0.1
+    occ = bs.occupancy()
+    assert occ["batch"] == pytest.approx(2 * 0.1)
+    assert occ["faas"] == pytest.approx(2 * 0.2)
+
+
+def test_batch_priority_orders_queue():
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=2)
+    bs = sim.bs
+    running = bs.submit_job(2, duration_s=0.05)
+    low = bs.submit_job(2, duration_s=0.01, priority=5)
+    high = bs.submit_job(2, duration_s=0.01, priority=1)
+    assert [j.job_id for j in bs.queued_jobs()] == [high.job_id,
+                                                    low.job_id]
+    sim.run_for(0.2)
+    assert running.state == low.state == high.state == "done"
+    assert high.t_start < low.t_start         # priority won the tie
+
+
+def test_preemption_ends_leases_retrieved_mid_invocation():
+    """The §5.3 core: a trace preemption lands while invocations are in
+    flight — leases end RETRIEVED, clients fail over, work completes."""
+    trace = ChurnTrace(2, [TraceEvent(0.01, "node_down",
+                                      node_id="node000")])
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=6)
+    rep = TraceReplayer(sim, trace)
+    stats = rep.replay(n_clients=1, n_invocations=200,
+                       workers_per_client=4,      # both nodes leased
+                       service_time_s=500e-6,     # long enough to span
+                       mean_interarrival_s=100e-6)
+    assert stats.preemptions == 1
+    assert stats.lease_states.get("retrieved", 0) >= 1
+    assert stats.completed + stats.failed == 200
+    assert stats.completed >= 190             # failover absorbed it
+    assert stats.t_end_s > 0.01               # preemption was mid-run
+
+
+# ------------------------------------------------------------ determinism
+REPLAY_KW = dict(n_clients=4, n_invocations=2000, workers_per_client=2)
+_memo = {}
+
+
+def _medium_stats(seed: int, fresh: bool = False) -> ElasticityStats:
+    """Medium replay, memoized per seed: determinism is proven by ONE
+    deliberate re-run (``fresh=True``); every other test reuses the
+    cached stats so the file stays inside the fast-tier budget."""
+    if not fresh and seed in _memo:
+        return _memo[seed]
+    tr = ChurnTrace.synthetic_piz_daint(
+        50, 0.5, 0.5, seed=seed, fault_drop_rate=0.05, drop_window_s=0.1,
+        n_partitions=2, partition_width=8, partition_s=0.1)
+    stats = replay_trace(tr, seed=seed, heartbeat_interval_s=0.04,
+                         **REPLAY_KW)
+    _memo.setdefault(seed, stats)
+    return stats
+
+
+def test_replay_bit_identical_per_seed():
+    s1 = _medium_stats(7)
+    s2 = _medium_stats(7, fresh=True)
+    s3 = _medium_stats(8)
+    assert s1 == s2                           # bit-identical, not approx
+    assert s1 != s3                           # the seed actually matters
+    assert s1.completed + s1.failed == 2000
+    assert s1.preemptions > 0 and s1.node_returns > 0
+
+
+def test_replay_overlaps_faults_and_preemption():
+    """Transport faults and batch churn demonstrably BOTH happened in
+    one run — the scenario class the ROADMAP names."""
+    s = _medium_stats(7)
+    assert s.preemptions > 0                  # batch took nodes back
+    assert s.fabric_drops > 0                 # the drop phase really bit
+    assert s.fabric_blocked > 0               # partition traffic blocked
+    assert s.trace_events > 20                # the trace really drove it
+    assert s.completed >= 0.95 * s.invocations_requested
+    # the faults/churn visibly hit the CLIENTS, not just the registry
+    assert (s.reallocations + s.retries + s.dispatch_faults
+            + s.negotiation_faults) > 0
+
+
+def test_replay_cost_model_lease_beats_static_at_low_util():
+    tr = ChurnTrace.synthetic_piz_daint(50, 0.5, 0.4, seed=3)
+    s = replay_trace(tr, seed=3, **REPLAY_KW)
+    assert s.cost_lease_usd < s.cost_static_usd
+    assert s.gb_seconds > 0 and s.compute_seconds > 0
+    assert s.utilization_mean < 0.6
+
+
+def test_thousand_node_replay_fast_tier():
+    """A seeded 1000-node Piz-Daint replay with concurrent transport
+    faults and batch preemptions — scaled to the fast tier's budget,
+    bit-identical across runs, well under the wall ceiling."""
+    def run():
+        tr = ChurnTrace.synthetic_piz_daint(
+            1000, 0.3, 0.5, seed=13, fault_drop_rate=0.02,
+            drop_window_s=0.05, n_partitions=2, partition_width=3)
+        return replay_trace(tr, seed=13, n_clients=8,
+                            n_invocations=2000, workers_per_client=2)
+
+    t0 = time.perf_counter()
+    s1 = run()
+    wall = time.perf_counter() - t0
+    s2 = run()
+    assert s1 == s2
+    assert s1.preemptions > 100               # churn at cluster scale
+    assert s1.completed >= 0.95 * 2000
+    assert wall < 5.0
+
+
+# ----------------------------------------------------- leases stay sane
+def test_replay_all_leases_terminal_after_teardown():
+    tr = ChurnTrace.synthetic_piz_daint(20, 0.3, 0.5, seed=5)
+    sim = SimulatedCluster(n_nodes=20, workers_per_node=2, seed=5)
+    TraceReplayer(sim, tr).replay(n_clients=2, n_invocations=500,
+                                  workers_per_client=2)
+    assert sim.leases                         # we tracked some
+    for lease in sim.leases:
+        assert lease.state in (LeaseState.RELEASED, LeaseState.RETRIEVED,
+                               LeaseState.EXPIRED, LeaseState.FAILED)

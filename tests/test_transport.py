@@ -322,6 +322,125 @@ def test_partition_heal_restores_allocatability():
     c2.deallocate()
 
 
+def test_one_way_partition_direction_semantics():
+    """Asymmetric partitions sever exactly one direction: a→b sends
+    vanish, b→a sends flow, and an rpc in EITHER direction fails —
+    the request or the reply is always the severed leg."""
+    fab = Fabric("rdma")
+    ab = fab.connect("a", "b")
+    ba = fab.connect("b", "a")
+    fab.partition(["a"], ["b"], one_way=True)
+    with pytest.raises(ChannelPartitioned):
+        ab.send(10)                       # forward leg severed
+    assert ba.send(10) > 0                # reverse direction still flows
+    with pytest.raises(ChannelPartitioned):
+        ba.rpc(10)                        # …but its REPLY cannot return
+    assert ba.blocked == 1
+    # the result-return leg rides dst→src: severed for ab's results
+    with pytest.raises(ChannelPartitioned):
+        ba.deliver_result(10)
+    fab.heal()
+    assert ab.send(10) > 0 and ba.rpc(10) > 0
+
+
+def test_one_way_isolation_eats_results_not_dispatch():
+    """One-way island→mainland cut: dispatch still REACHES the island
+    but results never come home — the client sees the crash-equivalent
+    and fails over to the survivor (§3.5 asymmetric fault surface)."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=5)
+    lib = FunctionLibrary("t").register("echo", lambda x: x,
+                                        service_time_s=10e-3)
+    c = sim.client("c0", lib)
+    assert c.allocate(4) == 4
+    x = np.ones(8, np.float32)
+    futs = [c.submit("echo", x) for _ in range(8)]
+    sim.at(5e-3, lambda: sim.isolate_nodes(["node000"], one_way=True))
+    sim.run_until_idle()
+    results = [f.get(10.0) for f in futs]
+    assert len(results) == 8
+    assert all((r == 1.0).all() for r in results)
+    assert c.stats.retries > 0            # mid-flight results were eaten
+    # dispatches to the island kept LANDING (one-way = requests arrive)
+    assert sim.fabric.stats()["blocked"] > 0
+    c.deallocate()
+
+
+def test_heartbeat_evicts_one_way_partitioned_node():
+    """A node whose replies are eaten (but which still receives probes)
+    is as dead as a fully partitioned one: the rpc return-route check
+    turns the missing ack into an eviction."""
+    clock = VirtualClock()
+    _, rm, _, _, _ = make_stack(clock, n_nodes=2, workers=2)
+    rm.fabric.partition(["node000"], ["rm:0", "rm:1", "client:c"],
+                        one_way=True)
+    dead = rm.primary().sweep_heartbeats()
+    assert dead == ["node000"]
+    rm.fabric.heal()
+
+
+def test_run_partition_heal_one_way_deterministic():
+    """The flagship scenario under an ASYMMETRIC partition: still
+    bit-identical per seed, still recovers, and the one-way fault
+    demonstrably behaved differently from the symmetric one."""
+    s1 = SimulatedCluster(seed=7).run_partition_heal(one_way=True)
+    s2 = SimulatedCluster(seed=7).run_partition_heal(one_way=True)
+    sym = SimulatedCluster(seed=7).run_partition_heal()
+    assert s1 == s2                       # bit-identical, not approx
+    assert s1 != sym                      # direction matters
+    assert s1.completed + s1.failed == s1.invocations_requested
+    assert s1.completed >= 0.95 * s1.invocations_requested
+    assert s1.evicted_servers >= 1        # return-route check evicted it
+    assert s1.fabric_blocked > 0
+
+
+def test_placement_prefers_cached_control_channels():
+    """Fabric-aware placement (DESIGN.md §12): a re-allocating client
+    goes back to servers it already holds warm control channels to —
+    zero new handshakes — and deprioritizes recently-faulted ones."""
+    clock = VirtualClock()
+    _, rm, _, lib, inv = make_stack(clock, n_nodes=8, workers=2)
+    assert inv.allocate(2) > 0
+    first = {c.manager.server_id for c in inv.connections()}
+    opened = inv.stats.connections_opened
+    inv.deallocate()
+    for _ in range(5):                    # placement is deterministic,
+        assert inv.allocate(2) > 0        # not a lucky permutation
+        again = {c.manager.server_id for c in inv.connections()}
+        assert again == first             # went straight back
+        inv.deallocate()
+    assert inv.stats.connections_opened == opened   # all warm
+    assert inv.stats.connections_reused >= 5
+
+
+def test_placement_avoids_recently_faulted_servers():
+    """A server whose route just failed drops to the back of the
+    allocation order until fault_memory_s elapses."""
+    clock = VirtualClock()
+    _, rm, _, lib, inv = make_stack(clock, n_nodes=2, workers=2)
+    servers = rm.primary().server_list()
+    inv._note_fault(servers[0].server_id)
+    order = inv._placement_order(servers)
+    assert order[-1].server_id == servers[0].server_id
+    clock.advance(inv.fault_memory_s + 0.1)   # memory expires
+    order2 = inv._placement_order(servers)
+    assert {m.server_id for m in order2} == \
+        {m.server_id for m in servers}    # back in normal rotation
+
+
+def test_allocation_window_bounds_candidates_keeps_cached():
+    """On large clusters the candidate set is a bounded sample, but
+    cached-channel servers always stay in it (warm beats random)."""
+    clock = VirtualClock()
+    _, rm, _, lib, inv = make_stack(clock, n_nodes=40, workers=2)
+    assert inv.allocate(2) > 0
+    cached = set(inv._ctrl)
+    inv.deallocate()
+    inv.allocation_window = 5
+    cands = inv._candidate_servers()
+    assert len(cands) == 5
+    assert cached <= {m.server_id for m in cands}
+
+
 def test_nightcore_fabric_reproduces_fig1_speedup():
     """Fig. 1 through one code path: rFaaS-over-RDMA vs the nightcore
     fabric config lands in the paper's 17-28x range (warm tier)."""
