@@ -1,0 +1,144 @@
+"""Paper §4 payload scaling under contention: concurrent-payload fan-in
+through the shared-link topology (DESIGN.md §14).
+
+§4's analytical model and §6's parallel applications both assume many
+concurrent transfers sharing NICs and links.  This benchmark measures
+the congestion layer directly:
+
+* **fan-in sweep** — K equal bulk payloads from K distinct clients into
+  ONE server: every transfer crosses the server's rx NIC, so fair
+  sharing must hand each ~1/K of the link and stretch each transfer to
+  ~K× the solo time while the AGGREGATE stays at line rate (the
+  bandwidth-share curve).
+
+* **oversubscription sweep** — K transfers between K DISJOINT node
+  pairs through an oversubscribed switch core: no NIC is shared, yet
+  the core (``n_ports/ratio`` NIC equivalents) caps the aggregate —
+  the fat-tree tier effect.
+
+Everything runs on a ``VirtualClock`` — durations are exact fair-share
+integrals, bit-identical per configuration.  ``run(smoke=True)`` is the
+CI determinism gate: the sweep runs twice and the rows must match
+exactly (the workflow also diffs the stdout of two separate processes).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import Fabric, Topology, VirtualClock
+
+FAN_IN = (1, 2, 4, 8, 16)
+OVERSUB_RATIOS = (1.0, 2.0, 4.0, 8.0)
+PAYLOAD = 8 << 20                 # 8 MiB — §4's bulk regime
+SMOKE_PAYLOAD = 1 << 20
+
+
+def _fan_in(k: int, payload: int) -> dict:
+    """K clients fan ``payload`` bytes each into one server."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock,
+                 topology=Topology.single_switch())
+    transfers = [fab.start_transfer(f"client:{i}", "server", payload)
+                 for i in range(k)]
+    clock.run_until_idle()
+    solo = fab.net.latency + payload / fab.net.bandwidth
+    durs = [t.duration for t in transfers]
+    # share/slowdown on the serialization phase alone (latency is
+    # propagation, not capacity — it never contends)
+    serial_solo = payload / fab.net.bandwidth
+    serial_cont = max(durs) - fab.net.latency
+    return {"solo_s": solo, "mean_s": sum(durs) / k,
+            "max_s": max(durs), "slowdown": serial_cont / serial_solo,
+            "share": serial_solo / serial_cont,
+            "agg_frac": k * payload / serial_cont
+            / fab.net.bandwidth}
+
+
+def _oversub(ratio: float, k: int, payload: int) -> dict:
+    """K transfers between disjoint pairs through a ``ratio``:1 core."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock,
+                 topology=Topology.oversubscribed(ratio, n_ports=k))
+    transfers = [fab.start_transfer(f"src:{i}", f"dst:{i}", payload)
+                 for i in range(k)]
+    clock.run_until_idle()
+    solo = fab.net.latency + payload / fab.net.bandwidth
+    worst = max(t.duration for t in transfers)
+    return {"solo_s": solo, "max_s": worst,
+            "slowdown": (worst - fab.net.latency)
+            / (payload / fab.net.bandwidth)}
+
+
+def _sweep(payload: int):
+    fan_rows = []
+    for k in FAN_IN:
+        r = _fan_in(k, payload)
+        fan_rows.append([k, payload, r["solo_s"] * 1e6,
+                         r["max_s"] * 1e6, r["slowdown"], r["share"],
+                         r["agg_frac"]])
+    over_rows = []
+    for ratio in OVERSUB_RATIOS:
+        r = _oversub(ratio, 8, payload)
+        over_rows.append([ratio, 8, payload, r["solo_s"] * 1e6,
+                          r["max_s"] * 1e6, r["slowdown"]])
+    return fan_rows, over_rows
+
+
+def run(quick: bool = False, smoke: bool = False):
+    payload = SMOKE_PAYLOAD if (quick or smoke) else PAYLOAD
+
+    if smoke:
+        # CI gate: the same sweep twice must be bit-identical (and a
+        # second PROCESS must print the same bytes — the workflow
+        # diffs two runs of this script)
+        a = _sweep(payload)
+        b = _sweep(payload)
+        if a != b:
+            raise SystemExit("nondeterministic congestion sweep: "
+                             f"{a} != {b}")
+        fan_rows, over_rows = a
+        for k, _, _, _, slowdown, share, agg in fan_rows:
+            # the actual fair-share curve: K transfers each get ~1/K of
+            # the link and the aggregate stays at line rate
+            if abs(share * k - 1.0) > 0.02 or agg < 0.98:
+                raise SystemExit(
+                    f"fan-in {k}: broken fair share (share {share:.4f}, "
+                    f"aggregate {agg:.4f})")
+        print("# smoke ok: " + "; ".join(
+            f"K={int(k)} slowdown={s:.4f} share={sh:.4f}"
+            for k, _, _, _, s, sh, _ in fan_rows))
+        print("# oversub ok: " + "; ".join(
+            f"{r:g}:1 slowdown={s:.4f}"
+            for r, _, _, _, _, s in over_rows))
+        return []
+
+    fan_rows, over_rows = _sweep(payload)
+    emit("congestion_fan_in", fan_rows,
+         ["k_transfers", "bytes", "solo_us", "contended_us",
+          "slowdown_x", "per_transfer_share", "aggregate_frac"])
+    emit("congestion_oversubscription", over_rows,
+         ["ratio", "k_pairs", "bytes", "solo_us", "contended_us",
+          "slowdown_x"])
+
+    # headline checks mirroring §4: fair share hands each of K
+    # transfers ~1/K of the contended link, aggregate stays ~line rate
+    for k, _, _, _, slowdown, share, agg in fan_rows:
+        assert abs(share * k - 1.0) < 0.02, (k, share)
+        assert agg > 0.98, (k, agg)
+    print(f"# fan-in fair share: K transfers each get ~1/K of the rx "
+          f"NIC (worst |K*share-1| = "
+          f"{max(abs(r[5] * r[0] - 1.0) for r in fan_rows):.4f}); "
+          f"aggregate stays at line rate")
+    worst = over_rows[-1]
+    print(f"# oversubscription: disjoint pairs through a "
+          f"{worst[0]:g}:1 core slow {worst[5]:.1f}x "
+          f"(non-blocking 1:1 stays {over_rows[0][5]:.2f}x)")
+    return fan_rows + over_rows
+
+
+def main():
+    import sys
+    run(quick="--quick" in sys.argv, smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

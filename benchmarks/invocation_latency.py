@@ -10,6 +10,12 @@ Part 2 (Fig. 1): the SAME stack re-run over the ``nightcore`` and
 ``tcp`` fabrics — the baselines differ only in transport parameters, not
 code path (DESIGN.md §12).  Warm-tier rFaaS-over-RDMA vs nightcore must
 land in the paper's reported 17–28x speedup range.
+
+Part 3 (contended variant, DESIGN.md §14): the same warm invocation
+measured solo and while K bulk transfers fan into the server's NIC —
+under load both fabrics pay fair-share serialization, and because TCP's
+link is ~10x slower the absolute rdma-vs-tcp gap WIDENS with every
+concurrent transfer (the congested regime where RDMA matters most).
 """
 from __future__ import annotations
 
@@ -18,11 +24,15 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, make_stack, median, p99
-from repro.core import Fabric, FunctionLibrary, Tier, VirtualClock
+from repro.core import Fabric, FunctionLibrary, Tier, Topology, \
+    VirtualClock
 
 SIZES = [1, 16, 64, 128, 256, 512, 1024, 2048, 4096]
 FIG1_SIZES = [1, 128, 1024, 16384, 262144, 1 << 20, 5 << 20]
 FIG1_FABRICS = ("rdma", "tcp", "nightcore")
+CONTENDED_SIZES = [1024, 16384, 262144, 1 << 20]
+CONTENDED_LOAD = 8                # background transfers into the server
+CONTENDED_BG_BYTES = 64 << 20     # each — outlasts any probe comfortably
 REPS = 200
 
 
@@ -79,7 +89,8 @@ def run(quick: bool = False):
     print(f"# mean hot overhead over raw RDMA (excl. function exec): "
           f"{over:.0f} ns (paper: ~326 ns)")
     fabric_rows = run_fabric_comparison(quick)
-    return rows, fabric_rows
+    contended_rows = run_contended(quick)
+    return rows, fabric_rows, contended_rows
 
 
 def run_fabric_comparison(quick: bool = False):
@@ -120,6 +131,62 @@ def run_fabric_comparison(quick: bool = False):
     nc = [rtts["nightcore"][s] / rtts["rdma"][s] for s in sizes]
     print(f"# rFaaS(rdma) vs nightcore fabric, warm tier: "
           f"{min(nc):.1f}-{max(nc):.1f}x (paper Fig. 1: 17-28x)")
+    return rows
+
+
+def run_contended(quick: bool = False):
+    """The contended variant (DESIGN.md §14): warm no-op RTT per fabric
+    with and without ``CONTENDED_LOAD`` bulk transfers fanning into the
+    server's rx NIC.  Every number is the congestion-aware transport
+    model on a VirtualClock — deterministic, exec time exactly zero.
+    The headline: the absolute rdma-vs-tcp gap widens under load (both
+    pay ~(K+1)x serialization, and TCP serializes off a ~10x slower
+    link)."""
+    sizes = CONTENDED_SIZES[:3] if quick else CONTENDED_SIZES
+    rtts = {}                     # (fabric, loaded) -> {size: warm rtt}
+    for fname in ("rdma", "tcp"):
+        for loaded in (False, True):
+            clock = VirtualClock()
+            fab = Fabric(fname, clock=clock,
+                         topology=Topology.single_switch())
+            lib = FunctionLibrary("noop")
+            lib.register("noop", lambda x: x)       # service_time 0
+            _, _, _, inv = make_stack(lib, n_nodes=1, workers=1,
+                                      hot_period=1e-9, fabric=fab,
+                                      clock=clock)
+            inv.allocate(1)
+            cur = rtts[(fname, loaded)] = {}
+            for size in sizes:
+                clock.run_until_idle()    # drain the previous storm
+                clock.advance(1.0)        # decay past hot -> WARM
+                if loaded:
+                    for i in range(CONTENDED_LOAD):
+                        fab.start_transfer(f"bg:{i}", "node000",
+                                           CONTENDED_BG_BYTES)
+                f = inv.submit("noop", np.zeros(size, np.uint8),
+                               worker_hint=0)
+                f.get(120.0)
+                assert f.invocation.tier == Tier.WARM
+                cur[size] = f.timeline.rtt_modeled
+            inv.deallocate()
+    rows = []
+    for size in sizes:
+        r0, r1 = rtts[("rdma", False)][size], rtts[("rdma", True)][size]
+        t0, t1 = rtts[("tcp", False)][size], rtts[("tcp", True)][size]
+        rows.append([size, CONTENDED_LOAD, r0 * 1e6, r1 * 1e6,
+                     t0 * 1e6, t1 * 1e6,
+                     (t0 - r0) * 1e6, (t1 - r1) * 1e6,
+                     (t1 - r1) / (t0 - r0)])
+    emit("invocation_latency_contended", rows,
+         ["bytes", "bg_transfers", "rdma_idle_us", "rdma_loaded_us",
+          "tcp_idle_us", "tcp_loaded_us", "gap_idle_us",
+          "gap_loaded_us", "gap_widening_x"])
+    assert all(r[7] > r[6] for r in rows), \
+        "the rdma-vs-tcp gap must widen under congestion"
+    widen = [r[8] for r in rows]
+    print(f"# rdma-vs-tcp gap under {CONTENDED_LOAD} concurrent bulk "
+          f"transfers: {min(widen):.1f}-{max(widen):.1f}x wider than "
+          f"uncontended (fair share makes the slow link pay K+1x)")
     return rows
 
 

@@ -13,6 +13,7 @@
 | Fig. 13c Black-Scholes    | benchmarks.usecase_blackscholes|
 | §Roofline table           | benchmarks.roofline            |
 | §2/§6 elasticity + cost   | benchmarks.elasticity          |
+| §4 congestion fan-in      | benchmarks.congestion          |
 """
 from __future__ import annotations
 
@@ -27,8 +28,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (cold_start, elasticity, invocation_latency,
-                            parallel_workers, payload_scaling, roofline,
+    from benchmarks import (cold_start, congestion, elasticity,
+                            invocation_latency, parallel_workers,
+                            payload_scaling, roofline,
                             usecase_blackscholes, usecase_jacobi,
                             usecase_matmul)
     mods = {
@@ -41,6 +43,7 @@ def main() -> None:
         "usecase_blackscholes": usecase_blackscholes,
         "roofline": roofline,
         "elasticity": elasticity,
+        "congestion": congestion,
     }
     failures = 0
     for name, mod in mods.items():

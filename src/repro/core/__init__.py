@@ -31,8 +31,9 @@ from repro.core.trace import (ChurnTrace, ElasticityStats, EVENT_KINDS,
                               TraceEvent, TraceReplayer, replay_trace)
 from repro.core.transport import (Channel, ChannelDropped, ChannelError,
                                   ChannelPartitioned, CONTROL_MSG_BYTES,
-                                  FABRICS, Fabric, FabricParams,
-                                  HEARTBEAT_MSG_BYTES)
+                                  CongestionEngine, FABRICS, Fabric,
+                                  FabricParams, HEARTBEAT_MSG_BYTES, Link,
+                                  Topology, Transfer)
 
 __all__ = [
     "ClientBill", "Ledger", "Price", "BatchJob", "BatchSystem", "Node",
@@ -49,6 +50,7 @@ __all__ = [
     "plan_split", "tier_overhead", "write_time", "AvailabilityBus",
     "ResourceManager", "ResourceManagerReplica", "PartitionStats",
     "ScenarioStats", "SimulatedCluster", "Channel", "ChannelDropped",
-    "ChannelError", "ChannelPartitioned", "CONTROL_MSG_BYTES", "FABRICS",
-    "Fabric", "FabricParams", "HEARTBEAT_MSG_BYTES",
+    "ChannelError", "ChannelPartitioned", "CONTROL_MSG_BYTES",
+    "CongestionEngine", "FABRICS", "Fabric", "FabricParams",
+    "HEARTBEAT_MSG_BYTES", "Link", "Topology", "Transfer",
 ]

@@ -48,7 +48,11 @@ class Node:
 @dataclass
 class BatchJob:
     """One batch submission (§5.3).  Lower ``priority`` is more urgent;
-    ties break by submission order, so scheduling is deterministic."""
+    ties break by submission order, so scheduling is deterministic.
+    ``affinity`` (when non-empty) restricts the job's claim — idle OR
+    reclaim-from-FaaS — to exactly those node ids (SLURM's nodelist
+    constraint); a job whose pinned nodes are busy is SKIPPED by the
+    scheduler instead of blocking the queue head."""
     job_id: int
     n_nodes: int
     duration_s: float
@@ -59,6 +63,7 @@ class BatchJob:
     t_end: Optional[float] = None
     state: str = "queued"             # queued | running | done
     nodes: List[str] = field(default_factory=list)
+    affinity: tuple = ()              # () = any node
 
     def sort_key(self):
         return (self.priority, self.t_submit, self.job_id)
@@ -161,44 +166,67 @@ class BatchSystem:
 
     # -------------------------------------------------------- job queue
     def submit_job(self, n_nodes: int, duration_s: float, *,
-                   priority: int = 0, grace_s: float = 0.0) -> BatchJob:
+                   priority: int = 0, grace_s: float = 0.0,
+                   affinity=()) -> BatchJob:
         """SLURM-analogue submission: the job enters the priority queue
         and starts as soon as ``n_nodes`` can be claimed — idle nodes
         first, then FaaS nodes preempted in deterministic id order
-        (batch always outranks serverless, §5.3).  Completion is a
-        scheduled clock event that returns every node to the FaaS pool
-        and starts queued successors."""
+        (batch always outranks serverless, §5.3).  ``affinity`` pins
+        the claim to the named node ids (data locality / licensed
+        hardware): only those nodes are reclaimed, and while they are
+        held by another batch job the scheduler SKIPS this job
+        deterministically instead of head-blocking the queue.
+        Completion is a scheduled clock event that returns every node
+        to the FaaS pool and starts queued successors."""
+        affinity = tuple(sorted(affinity))
+        unknown = set(affinity) - set(self.nodes)
+        if unknown:
+            raise ValueError(f"affinity names unknown nodes "
+                             f"{sorted(unknown)}")
+        if affinity and n_nodes > len(affinity):
+            raise ValueError(
+                f"job wants {n_nodes} nodes but its affinity only "
+                f"names {len(affinity)}")
         job = BatchJob(next(self._job_ids), n_nodes, duration_s,
                        priority=priority, grace_s=grace_s,
-                       t_submit=self.clock.now())
+                       t_submit=self.clock.now(), affinity=affinity)
         self.jobs[job.job_id] = job
         heapq.heappush(self._queue, (job.sort_key(), job))
         self._schedule()
         return job
 
-    def _claimable(self) -> List[str]:
+    def _claimable(self, affinity: tuple = ()) -> List[str]:
         """Node ids a job may take, in claim order: idle first, then
-        FaaS (preemption), both by node id — deterministic."""
-        idle = [nid for nid, n in sorted(self.nodes.items())
-                if n.state == "idle"]
-        faas = [nid for nid, n in sorted(self.nodes.items())
-                if n.state == "faas"]
+        FaaS (preemption), both by node id — deterministic.  A non-empty
+        ``affinity`` restricts the pool to those node ids."""
+        nodes = sorted(self.nodes.items()) if not affinity else \
+            [(nid, self.nodes[nid]) for nid in affinity]
+        idle = [nid for nid, n in nodes if n.state == "idle"]
+        faas = [nid for nid, n in nodes if n.state == "faas"]
         return idle + faas
 
     def _schedule(self):
-        """Start queued jobs while capacity (claimable nodes) lasts.
-        Strict priority order: a wide high-priority job at the head
-        blocks narrower lower-priority ones (no backfill — conservative
-        SLURM semantics, and deterministic).  Each job preempts with
-        ITS OWN grace window, whenever it ends up starting."""
+        """Start queued jobs while capacity (claimable nodes) lasts, in
+        strict priority order.  An unconstrained job at the head blocks
+        narrower lower-priority ones (no backfill — conservative SLURM
+        semantics, and deterministic); an AFFINITY job whose pinned
+        nodes are not claimable is skipped — it stays queued while jobs
+        behind it start, because no amount of other capacity can
+        satisfy it (§5.3 + per-job node affinity).  Each job preempts
+        with ITS OWN grace window, whenever it ends up starting."""
+        deferred: List[tuple] = []
         while self._queue:
-            _, job = self._queue[0]
+            key, job = self._queue[0]
             if job.state != "queued":          # cancelled/defensive
                 heapq.heappop(self._queue)
                 continue
-            avail = self._claimable()
+            avail = self._claimable(job.affinity)
             if len(avail) < job.n_nodes:
-                return                         # head job must wait
+                if not job.affinity:
+                    break                      # head job must wait
+                heapq.heappop(self._queue)     # pinned + busy: skip it,
+                deferred.append((key, job))    # the queue moves on
+                continue
             heapq.heappop(self._queue)
             take = avail[:job.n_nodes]
             for nid in take:
@@ -209,6 +237,8 @@ class BatchSystem:
             job.t_end = job.t_start + job.duration_s
             self.clock.call_later(job.duration_s, self._complete_job,
                                   job.job_id)
+        for item in deferred:                  # skipped jobs keep their
+            heapq.heappush(self._queue, item)  # place for the next pass
 
     def _complete_job(self, job_id: int):
         job = self.jobs.get(job_id)
@@ -244,7 +274,8 @@ class BatchSystem:
             return True
         if kind == "batch_job":
             self.submit_job(ev.n_nodes, ev.duration_s,
-                            priority=ev.priority, grace_s=ev.grace_s)
+                            priority=ev.priority, grace_s=ev.grace_s,
+                            affinity=ev.group_a)
             return True
         return False
 

@@ -104,6 +104,21 @@ class Clock:
                  *, repeating: bool = False) -> ScheduledCall:
         raise NotImplementedError
 
+    def reschedule(self, call: ScheduledCall,
+                   when: float) -> ScheduledCall:
+        """Move a pending one-shot callback to ``when`` and return the
+        live handle.  The congestion layer re-integrates transfer
+        completion times whenever a transfer starts or ends — the next
+        completion event moves constantly, and this is the one
+        primitive it needs: cancel-and-rearm as a single call, with a
+        no-op fast path when the instant is unchanged.  A call that
+        already fired (or was cancelled) is simply re-armed fresh."""
+        if not call.cancelled and not call.fired and call.when == when:
+            return call               # already armed at that instant
+        call.cancel()
+        return self._call_at(when, call.fn, call.args,
+                             repeating=call.repeating)
+
     def call_repeating(self, interval: float, fn: Callable,
                        *args: Any) -> ScheduledCall:
         """Run ``fn`` every ``interval`` seconds until the returned

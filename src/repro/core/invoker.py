@@ -182,28 +182,38 @@ class Invoker:
 
     def _placement_order(self, servers: List[ExecutorManager]) \
             -> List[ExecutorManager]:
-        """Fabric-aware placement (DESIGN.md §12): random permutation
-        (decentralized contention-spreading, §3.2), then a stable sort
-        so servers whose control channel is already cached — a warm
-        negotiation, no handshake — come first and recently-faulted
-        ones last.  Within each group the permutation's order stands,
-        so two clients never converge on the same target."""
+        """Congestion- and fabric-aware placement (DESIGN.md §12/§14):
+        random permutation (decentralized contention-spreading, §3.2),
+        then a stable sort on ``(group, observed NIC load)`` — servers
+        whose control channel is already cached (warm negotiation, no
+        handshake) come first and recently-faulted ones last, and
+        WITHIN each group the registry's per-node NIC utilization
+        snapshot breaks ties: a server whose ports are busy with bulk
+        transfers is asked after an idle one, so leases steer around
+        congested links, not just around faults.  With no topology
+        armed every load is 0 and the ordering reduces exactly to the
+        fault-memory-only ranking.  Within equal keys the permutation's
+        order stands, so two clients never converge on one target."""
         order = self._rng.sample(servers, len(servers))
         if len(order) <= 1:
             return order
         now = self.clock.now()
         ctrl, fault_at, memory = self._ctrl, self._fault_at, \
             self.fault_memory_s
+        loads = self._replica.nic_loads()
+        get_load = loads.get
 
-        def group(mgr: ExecutorManager) -> int:
+        def rank(mgr: ExecutorManager) -> Tuple[int, int]:
             sid = mgr.server_id
             t = fault_at.get(sid)
             if t is not None and now - t < memory:
-                return 2                  # the fabric just failed us here
-            ch = ctrl.get(sid)
-            return 0 if ch is not None and not ch.closed else 1
+                group = 2                 # the fabric just failed us here
+            else:
+                ch = ctrl.get(sid)
+                group = 0 if ch is not None and not ch.closed else 1
+            return group, get_load(sid, 0)
 
-        order.sort(key=group)
+        order.sort(key=rank)
         return order
 
     def _candidate_servers(self) -> List[ExecutorManager]:

@@ -37,6 +37,11 @@ class ServerEntry:
     available: bool = True
     #: this replica's control channel to the server (heartbeat probes)
     channel: Optional[Channel] = field(default=None, repr=False)
+    #: NIC utilization snapshot (in-flight transfers crossing the
+    #: server's ports), refreshed by the heartbeat sweep — the
+    #: congestion-aware placement signal (DESIGN.md §14).  Stale by up
+    #: to one sweep interval, exactly like liveness itself.
+    nic_load: int = 0
 
 
 class AvailabilityBus:
@@ -134,6 +139,11 @@ class ResourceManagerReplica:
         self._list_version = 0
         self._list_cache: List[ExecutorManager] = []
         self._list_cache_version = -1
+        # per-server NIC load snapshots, swapped atomically by the
+        # heartbeat sweep; clients read the dict without a lock (the
+        # reference swap is GIL-atomic and the dict is never mutated
+        # after publication)
+        self._nic_loads: Dict[str, int] = {}
 
     # ------------------------------------------------------- REST analogue
     def _server_channel(self, server_id: str) -> Channel:
@@ -201,6 +211,14 @@ class ResourceManagerReplica:
                 self._list_cache_version = self._list_version
             cache = self._list_cache
         return [m for m in cache if m.heartbeat()]
+
+    def nic_loads(self) -> Dict[str, int]:
+        """Latest NIC-utilization snapshot (server_id → in-flight
+        transfers on its ports), refreshed by the heartbeat sweep.
+        Read-only view — the sweep publishes a fresh dict each time.
+        Empty until a sweep runs or when no topology is armed, which
+        degrades placement to the fault-memory-only ordering."""
+        return self._nic_loads
 
     # ---------------------------------------------------------- saturation
     def _on_saturated(self, server_id: str):
@@ -272,6 +290,8 @@ class ResourceManagerReplica:
         suspects = []
         with self._lock:
             entries = list(self._servers.items())
+        fabric = self.fabric
+        loads: Dict[str, int] = {}
         for sid, e in entries:
             alive = e.manager.heartbeat()
             if alive and e.channel is not None:
@@ -284,6 +304,11 @@ class ResourceManagerReplica:
                     continue                   # missed beat: retry next sweep
             if not alive:
                 suspects.append((sid, e))
+            else:
+                # the probe that proved the node reachable also samples
+                # its NIC occupancy — the registry's congestion signal
+                e.nic_load = loads[sid] = fabric.nic_load(sid)
+        self._nic_loads = loads                # atomic snapshot swap
         dead = []
         with self._lock:
             for sid, e in suspects:

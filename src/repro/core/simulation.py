@@ -57,7 +57,8 @@ from repro.core.invoker import AllocationFailed, ExecutorCrash, Invoker
 from repro.core.lease import Lease
 from repro.core.perf_model import DEFAULT_NET, NetParams
 from repro.core.resource_manager import ResourceManager
-from repro.core.transport import Fabric, FabricParams, fabric_params_for_net
+from repro.core.transport import (Fabric, FabricParams, Topology,
+                                  fabric_params_for_net)
 
 
 @dataclass
@@ -109,6 +110,10 @@ class PartitionStats:
     fabric_bytes: int = 0
     fabric_drops: int = 0
     fabric_blocked: int = 0
+    # congestion surface (zero unless a topology is armed, DESIGN.md §14)
+    fabric_transfers: int = 0        # bulk transfers scheduled on links
+    congested_sends: int = 0         # sends that shared a link
+    congestion_delay_s: float = 0.0  # extra seconds paid to contention
     rtt_p50_s: float = 0.0
     rtt_mean_s: float = 0.0
     t_end_s: float = 0.0
@@ -126,13 +131,16 @@ class SimulatedCluster:
                  sandbox: str = "bare", net: NetParams = DEFAULT_NET,
                  seed: int = 0, start_time: float = 0.0,
                  fabric: Union[str, FabricParams, None] = None,
-                 drop_rate: float = 0.0):
+                 drop_rate: float = 0.0,
+                 topology: Optional[Topology] = None):
         self.clock = VirtualClock(start_time)
         self.ledger = Ledger()
         self.seed = seed
         # one shared fabric: "rdma" by default, or any FABRICS preset /
         # custom FabricParams so a whole scenario reruns over a baseline
-        # transport through the same code path (Fig. 1)
+        # transport through the same code path (Fig. 1); an optional
+        # Topology arms shared-link congestion (DESIGN.md §14) — without
+        # one, single-transfer timing is the pre-congestion closed form
         if fabric is None:
             params = fabric_params_for_net(net)
         elif isinstance(fabric, str):
@@ -140,7 +148,8 @@ class SimulatedCluster:
         else:
             params = fabric
         self.fabric = Fabric(fabric if params is None else params,
-                             clock=self.clock, seed=seed)
+                             clock=self.clock, seed=seed,
+                             topology=topology)
         self.net = self.fabric.net
         self.rm = ResourceManager(n_replicas=n_replicas,
                                   clock=self.clock, fabric=self.fabric,
@@ -489,6 +498,9 @@ class SimulatedCluster:
             fabric_bytes=wire["bytes"],
             fabric_drops=wire["drops"],
             fabric_blocked=wire["blocked"],
+            fabric_transfers=wire.get("transfers", 0),
+            congested_sends=wire.get("congested", 0),
+            congestion_delay_s=wire.get("congestion_delay_s", 0.0),
             rtt_p50_s=float(np.percentile(arr, 50)),
             rtt_mean_s=float(arr.mean()),
             t_end_s=self.clock.now(),

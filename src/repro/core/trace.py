@@ -10,13 +10,18 @@ This module makes that claim testable:
 * ``TraceEvent`` / ``ChurnTrace`` — a time-ordered availability event
   stream: node_down (batch preempts), node_up (batch returns),
   batch_job (a queued SLURM-analogue submission that claims whatever it
-  can), plus transport-fault events (drop_rate phases, [one-way]
-  partitions, heal) so network faults and preemption overlap exactly as
+  can, optionally pinned to specific nodes via ``group_a`` affinity),
+  plus transport-fault events (drop_rate phases, [one-way] partitions,
+  heal) and ``bandwidth_storm`` (N concurrent bulk transfers fanning
+  into target nodes' NICs — the congestion layer of DESIGN.md §14) so
+  network faults, link contention and preemption overlap exactly as
   they do on a congested cluster.  Traces load from JSON
-  (``from_json``/``to_json``) or generate synthetically
-  (``synthetic_piz_daint``): per-node alternating busy/idle renewal
-  processes whose busy fraction tracks a target utilization level,
-  seeded and bit-reproducible.
+  (``from_json``/``to_json``), convert from CSV utilization logs
+  (``from_csv`` + the ``python -m repro.core.trace convert`` CLI, so
+  real Piz-Daint-style recordings can drive the replayer) or generate
+  synthetically (``synthetic_piz_daint``): per-node alternating
+  busy/idle renewal processes whose busy fraction tracks a target
+  utilization level, seeded and bit-reproducible.
 
 * ``TraceReplayer`` — drives a ``SimulatedCluster`` on its
   ``VirtualClock``: trace events schedule batch preemptions (leases end
@@ -35,6 +40,7 @@ fabric (PR 2) were built exactly so this scenario class is cheap.
 from __future__ import annotations
 
 import gc
+import io
 import json
 import random
 from dataclasses import dataclass, field, fields as dc_fields
@@ -48,10 +54,12 @@ from repro.core.clock import VirtualClock
 from repro.core.functions import FunctionLibrary
 from repro.core.invoker import AllocationFailed, ExecutorCrash, Invoker
 from repro.core.simulation import SimulatedCluster
+from repro.core.transport import ChannelPartitioned, Topology
 
-#: Recognized trace event kinds: batch-system churn + transport faults.
+#: Recognized trace event kinds: batch-system churn + transport faults
+#: + shared-link congestion storms.
 EVENT_KINDS = ("node_down", "node_up", "batch_job",
-               "drop_rate", "partition", "heal")
+               "drop_rate", "partition", "heal", "bandwidth_storm")
 
 
 @dataclass(frozen=True)
@@ -68,9 +76,12 @@ class TraceEvent:
     duration_s: float = 0.0            # batch_job runtime
     priority: int = 0                  # batch_job priority (lower wins)
     rate: float = 0.0                  # drop_rate phases
-    group_a: Tuple[str, ...] = ()      # partition victims
+    group_a: Tuple[str, ...] = ()      # partition victims / batch_job
+    #                                    affinity / bandwidth_storm targets
     group_b: Tuple[str, ...] = ()      # () = everything else (isolate)
     one_way: bool = False              # asymmetric partition (a→b only)
+    n_transfers: int = 0               # bandwidth_storm fan-in width
+    nbytes: int = 0                    # bandwidth_storm per-transfer bytes
 
     def to_dict(self) -> dict:
         out = {}
@@ -124,10 +135,27 @@ class ChurnTrace:
                 if ev.node_id not in node_ids:
                     raise ValueError(
                         f"{ev.kind} names unknown node {ev.node_id!r}")
-            if ev.kind == "batch_job" and not (
-                    0 < ev.n_nodes <= self.n_nodes):
-                raise ValueError(
-                    f"batch_job width {ev.n_nodes} out of range")
+            if ev.kind == "batch_job":
+                if not 0 < ev.n_nodes <= self.n_nodes:
+                    raise ValueError(
+                        f"batch_job width {ev.n_nodes} out of range")
+                bad = set(ev.group_a) - node_ids
+                if bad:
+                    raise ValueError(
+                        f"batch_job affinity names unknown nodes {bad}")
+                if ev.group_a and ev.n_nodes > len(ev.group_a):
+                    raise ValueError(
+                        f"batch_job wants {ev.n_nodes} nodes but its "
+                        f"affinity only names {len(ev.group_a)}")
+            if ev.kind == "bandwidth_storm":
+                if ev.n_transfers <= 0 or ev.nbytes <= 0:
+                    raise ValueError(
+                        "bandwidth_storm needs n_transfers > 0 and "
+                        "nbytes > 0")
+                bad = set(ev.group_a) - node_ids
+                if bad:
+                    raise ValueError(
+                        f"bandwidth_storm targets unknown nodes {bad}")
 
     def counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -164,6 +192,126 @@ class ChurnTrace:
                    [TraceEvent.from_dict(d) for d in doc["events"]],
                    meta=doc.get("meta"))
 
+    # -------------------------------------------------------------- CSV
+    #: node-state spellings real utilization logs use (Piz-Daint-style
+    #: per-node allocation records): anything busy-ish is a preemption
+    _CSV_BUSY = frozenset(("busy", "allocated", "alloc", "batch", "down",
+                           "claimed", "1"))
+    _CSV_IDLE = frozenset(("idle", "free", "up", "available", "0"))
+
+    @classmethod
+    def from_csv(cls, src: Union[str, IO], *,
+                 n_nodes: Optional[int] = None,
+                 normalize_time: bool = True) -> "ChurnTrace":
+        """Convert a recorded CSV utilization log into a replayable
+        trace (ROADMAP: "replay REAL recorded utilization traces").
+
+        Two shapes are auto-detected by header:
+
+        * **node-state log** — ``t,node_id,state`` rows (the shape of a
+          per-node allocation recording): ``state`` in {busy, allocated,
+          down, 1, …} becomes ``node_down``, {idle, free, up, 0, …}
+          becomes ``node_up``.  Source node ids are arbitrary strings;
+          they are mapped onto ``node000…`` in sorted order and the
+          mapping is kept in ``meta["node_map"]``.
+        * **event CSV** — a ``kind`` column plus any subset of the
+          ``TraceEvent`` fields (``group_a``/``group_b`` as
+          ``;``-joined lists, ``one_way`` as 0/1/true) — the generic
+          escape hatch for hand-authored scenarios.
+
+        Timestamps are shifted to start at 0 when ``normalize_time``
+        (recorded logs carry epoch seconds); ``n_nodes`` may widen the
+        cluster beyond the ids seen in the log."""
+        import csv as _csv
+
+        if isinstance(src, str) and "\n" not in src:
+            with open(src, newline="") as f:
+                return cls.from_csv(f, n_nodes=n_nodes,
+                                    normalize_time=normalize_time)
+        if isinstance(src, str):
+            src = io.StringIO(src)
+        reader = _csv.DictReader(src)
+        if reader.fieldnames is None:
+            raise ValueError("empty CSV: no header row")
+        header = [h.strip().lower() for h in reader.fieldnames]
+        rows = [{k.strip().lower(): (v or "").strip()
+                 for k, v in row.items() if k is not None}
+                for row in reader]
+        if "kind" in header:
+            events, node_map = cls._events_from_event_csv(rows)
+        elif {"node_id", "state"} <= set(header) or \
+                {"node", "state"} <= set(header):
+            events, node_map = cls._events_from_state_log(rows)
+        else:
+            raise ValueError(
+                f"unrecognized CSV header {header}: need either a "
+                f"'kind' column (event CSV) or 't,node_id,state' "
+                f"columns (utilization log)")
+        if normalize_time and events:
+            t0 = min(e.t for e in events)
+            if t0 > 0.0:
+                events = [TraceEvent.from_dict(
+                    {**e.to_dict(), "t": e.t - t0}) for e in events]
+
+        def idx(nid: Optional[str]) -> int:
+            return (int(nid[4:]) if nid and nid.startswith("node")
+                    and nid[4:].isdigit() else -1)
+        width = len(node_map) if node_map else 1 + max(
+            [idx(e.node_id) for e in events]
+            + [idx(n) for e in events for n in e.group_a + e.group_b],
+            default=-1)
+        if n_nodes is not None:
+            if n_nodes < width:
+                raise ValueError(
+                    f"n_nodes={n_nodes} but the log names {width} nodes")
+            width = n_nodes
+        meta = {"source": "csv"}
+        if node_map:
+            meta["node_map"] = node_map
+        return cls(max(width, 1), events, meta=meta)
+
+    @staticmethod
+    def _events_from_state_log(rows) -> Tuple[List[TraceEvent], dict]:
+        tkey = "t" if rows and "t" in rows[0] else "timestamp"
+        nkey = "node_id" if rows and "node_id" in rows[0] else "node"
+        source_ids = sorted({r[nkey] for r in rows})
+        node_map = {sid: f"node{i:03d}"
+                    for i, sid in enumerate(source_ids)}
+        events = []
+        for r in rows:
+            state = r["state"].lower()
+            if state in ChurnTrace._CSV_BUSY:
+                kind = "node_down"
+            elif state in ChurnTrace._CSV_IDLE:
+                kind = "node_up"
+            else:
+                raise ValueError(f"unknown node state {r['state']!r}")
+            events.append(TraceEvent(float(r[tkey]), kind,
+                                     node_id=node_map[r[nkey]],
+                                     grace_s=float(r.get("grace_s")
+                                                   or 0.0)))
+        return events, node_map
+
+    @staticmethod
+    def _events_from_event_csv(rows) -> Tuple[List[TraceEvent], dict]:
+        def conv(field, raw):
+            if field in ("group_a", "group_b"):
+                return tuple(x for x in raw.split(";") if x)
+            if field == "one_way":
+                return raw.lower() in ("1", "true", "yes")
+            if field in ("n_nodes", "priority", "n_transfers", "nbytes"):
+                return int(float(raw))
+            if field in ("t", "grace_s", "duration_s", "rate"):
+                return float(raw)
+            return raw               # kind, node_id
+        fields = {f.name for f in dc_fields(TraceEvent)}
+        events = []
+        for r in rows:
+            kw = {k: conv(k, v) for k, v in r.items()
+                  if k in fields and v != ""}
+            events.append(TraceEvent(**kw))
+        return events, {}
+
     # ------------------------------------------------------- generators
     @classmethod
     def synthetic_piz_daint(cls, n_nodes: int, duration_s: float,
@@ -175,7 +323,11 @@ class ChurnTrace:
                             partition_width: int = 1,
                             partition_s: float = 0.02,
                             one_way_partitions: bool = False,
-                            grace_s: float = 0.0) -> "ChurnTrace":
+                            grace_s: float = 0.0,
+                            n_storms: int = 0,
+                            storm_transfers: int = 8,
+                            storm_bytes: int = 4 << 20,
+                            storm_targets: int = 2) -> "ChurnTrace":
         """Per-node alternating renewal churn in the Piz Daint pattern
         (paper Fig. 2): each node flips between batch-busy and
         FaaS-available with exponential residence times whose busy
@@ -189,7 +341,12 @@ class ChurnTrace:
         middle of the trace, and ``n_partitions`` isolation windows of
         ``partition_s`` hitting ``partition_width`` random nodes each
         (``one_way_partitions`` severs only island→mainland — requests
-        arrive, replies vanish)."""
+        arrive, replies vanish).  ``n_storms`` weaves in
+        bandwidth_storm events: ``storm_transfers`` concurrent bulk
+        transfers of ``storm_bytes`` each fanning into
+        ``storm_targets`` seeded-random nodes' NICs, so churn replays
+        exercise the congestion layer (DESIGN.md §14) while leases are
+        being preempted and re-negotiated."""
         if not 0.0 <= utilization < 1.0:
             raise ValueError("utilization must be in [0, 1)")
         rng = random.Random(seed * 0x9E3779B1 + 0x243F6A88)
@@ -241,6 +398,16 @@ class ChurnTrace:
             events.append(TraceEvent(t0, "partition", group_a=victims,
                                      one_way=one_way_partitions))
             events.append(TraceEvent(prev_end, "heal"))
+        for t0 in sorted(rng.uniform(0.0, duration_s)
+                         for _ in range(n_storms)):
+            targets = tuple(sorted(
+                f"node{i:03d}"
+                for i in rng.sample(range(n_nodes),
+                                    min(storm_targets, n_nodes))))
+            events.append(TraceEvent(t0, "bandwidth_storm",
+                                     group_a=targets,
+                                     n_transfers=storm_transfers,
+                                     nbytes=storm_bytes))
         meta = {"generator": "synthetic_piz_daint", "seed": seed,
                 "utilization": utilization, "duration_s": duration_s,
                 "mean_idle_s": mean_idle_s}
@@ -276,6 +443,12 @@ class ElasticityStats:
     fabric_bytes: int = 0
     fabric_drops: int = 0
     fabric_blocked: int = 0
+    # congestion surface (DESIGN.md §14; zero without storms/topology)
+    storm_transfers: int = 0          # bulk transfers storms launched
+    storm_blocked: int = 0            # storm transfers refused (partition)
+    fabric_transfers: int = 0         # transfers scheduled on links
+    congested_sends: int = 0          # sends that shared a link
+    congestion_delay_s: float = 0.0   # extra seconds paid to contention
     # latency (modeled, completed invocations)
     rtt_p50_s: float = 0.0
     rtt_p99_s: float = 0.0
@@ -331,6 +504,8 @@ class TraceReplayer:
         self.price = price
         self.hpc_discount = hpc_discount
         self.events_applied = 0
+        self.storm_transfers = 0
+        self.storm_blocked = 0
 
     # ------------------------------------------------------ trace events
     def _apply(self, ev: TraceEvent):
@@ -348,6 +523,22 @@ class TraceReplayer:
                 sim.isolate_nodes(ev.group_a, one_way=ev.one_way)
         elif ev.kind == "heal":
             sim.heal()
+        elif ev.kind == "bandwidth_storm":
+            # N concurrent bulk transfers fanning into the target nodes'
+            # NICs (DESIGN.md §14): the invocations riding those links
+            # are charged their fair share while the storm drains, and
+            # placement steers new leases toward quieter nodes.  Faults
+            # compose: a storm source aimed at a partitioned node is
+            # refused, exactly like any other traffic.
+            targets = ev.group_a or tuple(sorted(sim.bs.nodes))
+            for i in range(ev.n_transfers):
+                dst = targets[i % len(targets)]
+                try:
+                    sim.fabric.start_transfer(f"storm:{i}", dst,
+                                              ev.nbytes)
+                    self.storm_transfers += 1
+                except ChannelPartitioned:
+                    self.storm_blocked += 1
         else:
             sim.bs.apply_trace_event(ev)
 
@@ -522,6 +713,11 @@ class TraceReplayer:
             fabric_bytes=wire["bytes"],
             fabric_drops=wire["drops"],
             fabric_blocked=wire["blocked"],
+            storm_transfers=self.storm_transfers,
+            storm_blocked=self.storm_blocked,
+            fabric_transfers=wire.get("transfers", 0),
+            congested_sends=wire.get("congested", 0),
+            congestion_delay_s=wire.get("congestion_delay_s", 0.0),
             rtt_p50_s=float(np.percentile(arr, 50)),
             rtt_p99_s=float(np.percentile(arr, 99)),
             rtt_mean_s=float(arr.mean()),
@@ -542,14 +738,57 @@ class TraceReplayer:
 def replay_trace(trace: ChurnTrace, *, seed: int = 0,
                  workers_per_node: int = 2, n_replicas: int = 2,
                  fabric: Optional[str] = None,
+                 topology: Optional[Topology] = None,
                  heartbeat_interval_s: float = 0.2,
                  **replay_kw) -> ElasticityStats:
     """One-call convenience: build a matching ``SimulatedCluster`` and
-    replay ``trace`` on it (benchmarks and CI smoke use this)."""
+    replay ``trace`` on it (benchmarks and CI smoke use this).  A trace
+    carrying bandwidth_storm events arms the default single-switch
+    topology automatically unless one is given."""
+    if topology is None and any(e.kind == "bandwidth_storm"
+                                for e in trace.events):
+        topology = Topology.single_switch()
     sim = SimulatedCluster(n_nodes=trace.n_nodes,
                            workers_per_node=workers_per_node,
                            n_replicas=n_replicas, seed=seed,
+                           topology=topology,
                            **({"fabric": fabric} if fabric else {}))
     return TraceReplayer(
         sim, trace,
         heartbeat_interval_s=heartbeat_interval_s).replay(**replay_kw)
+
+
+# --------------------------------------------------------------- CLI
+def _cli(argv: Optional[List[str]] = None) -> int:
+    """``python -m repro.core.trace convert in.csv out.json`` — turn a
+    recorded CSV utilization log into the replayer's JSON format."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.trace",
+        description="Churn-trace tools (DESIGN.md §13/§14)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    conv = sub.add_parser(
+        "convert", help="CSV utilization log -> replayable JSON trace")
+    conv.add_argument("csv_in", help="input CSV (node-state log with "
+                      "t,node_id,state columns, or event CSV with a "
+                      "kind column)")
+    conv.add_argument("json_out", help="output JSON trace path")
+    conv.add_argument("--n-nodes", type=int, default=None,
+                      help="widen the cluster beyond the ids in the log")
+    conv.add_argument("--keep-time", action="store_true",
+                      help="keep raw timestamps (default: shift to t=0)")
+    args = ap.parse_args(argv)
+    trace = ChurnTrace.from_csv(args.csv_in, n_nodes=args.n_nodes,
+                                normalize_time=not args.keep_time)
+    trace.to_json(args.json_out)
+    counts = ", ".join(f"{k}={v}" for k, v in sorted(trace.counts()
+                                                     .items()))
+    print(f"wrote {args.json_out}: {trace.n_nodes} nodes, "
+          f"{len(trace)} events ({counts}), "
+          f"duration {trace.duration_s:.3f}s")
+    return 0
+
+
+if __name__ == "__main__":                   # pragma: no cover - CLI
+    raise SystemExit(_cli())

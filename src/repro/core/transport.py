@@ -39,6 +39,25 @@ calls:
   channel via ``take_setup()`` — the explicit form of the paper's
   warm/hot connection reuse.
 
+* ``Topology`` / ``Link`` / ``Transfer`` / ``CongestionEngine`` — the
+  shared-link contention layer (DESIGN.md §14).  A ``Topology`` maps
+  endpoints onto per-endpoint NIC ports (full duplex: separate tx/rx
+  links) plus an optional switch-core link (``oversubscribed`` preset);
+  every in-flight ``Transfer`` occupies all links it crosses and
+  concurrent transfers FAIR-SHARE each link's capacity: a transfer's
+  rate is ``min(link bandwidth / transfers on link)`` over its path.
+  Completion is progress-based on the VirtualClock — when any transfer
+  starts or ends, every remaining transfer's finish time is
+  re-integrated and the single completion event is rescheduled
+  (deterministic, no wall-clock).  Channel sends consult the engine:
+  with no transfer in flight they short-circuit to the closed-form
+  ``latency + nbytes/bandwidth`` (bit-identical to the pre-congestion
+  model); under load they are charged the fair-share rate observed at
+  send time, and bulk sends register as load themselves.  Two 10 MB
+  payloads fanning into one server no longer "overlap for free" — they
+  share its NIC and each takes ~2x the solo time (paper §4 payload
+  scaling, §6 parallel applications).
+
 Delivery itself stays an in-process handoff (as in ``invocation.py``):
 the *modeled* time is what flows into timelines and scenario stats, so
 the same code path expresses rFaaS-over-RDMA and its TCP baselines by
@@ -46,10 +65,12 @@ swapping fabric parameters only.
 """
 from __future__ import annotations
 
+import math
 import random
 import threading
 from dataclasses import dataclass, replace
-from typing import Dict, FrozenSet, List, Optional, Set, Tuple, Union
+from typing import (Callable, Dict, FrozenSet, List, Optional, Set,
+                    Tuple, Union)
 
 from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.perf_model import NetParams, write_time
@@ -157,6 +178,350 @@ def fabric_params_for_net(net: NetParams,
                    connect_cost=2 * net.latency)
 
 
+# ---------------------------------------------------------------------------
+# Topology + congestion layer (DESIGN.md §14)
+
+class Link:
+    """One shared capacity: a NIC port direction or the switch core.
+    ``active`` counts the transfers currently crossing it — fair-share
+    rates divide ``bandwidth`` by this count."""
+
+    __slots__ = ("name", "bandwidth", "active", "bytes_total",
+                 "peak_active")
+
+    def __init__(self, name: str, bandwidth: float):
+        self.name = name
+        self.bandwidth = bandwidth          # bytes/s, math.inf = unconstrained
+        self.active = 0
+        self.bytes_total = 0
+        self.peak_active = 0
+
+    def fair_share(self, extra: int = 0) -> float:
+        """Per-transfer rate if ``active + extra`` transfers share it."""
+        n = self.active + extra
+        return self.bandwidth / n if n else self.bandwidth
+
+
+class Topology:
+    """Endpoint → NIC-port → shared-link map.
+
+    Default shape: every endpoint owns a full-duplex NIC (separate tx
+    and rx links, RDMA-style), all joined by a single non-blocking
+    switch — the only contention points are the NICs themselves (the
+    §4 fan-in regime: many clients writing into one server share its
+    rx port).  ``oversubscribed`` adds a finite switch-core link whose
+    capacity is ``nic_bandwidth * n_ports / ratio`` — the classic
+    fat-tree tier where disjoint node pairs still contend.
+
+    NIC links are minted lazily per endpoint, so the topology needs no
+    advance knowledge of the cluster's endpoints (clients and replicas
+    appear dynamically).  ``nic_bandwidth=None`` resolves to the owning
+    fabric's calibrated link bandwidth at arm time, which is what makes
+    the uncontended fast path bit-identical to the closed form."""
+
+    def __init__(self, *, nic_bandwidth: Optional[float] = None,
+                 core_bandwidth: Optional[float] = None,
+                 min_track_bytes: int = 64 * 1024,
+                 name: str = "single-switch"):
+        self.name = name
+        self.nic_bandwidth = nic_bandwidth
+        self.core_bandwidth = core_bandwidth
+        #: sends at or above this size register as link load themselves;
+        #: smaller control messages are charged the fair share they see
+        #: but add negligible load (they would distort counts at 64 B)
+        self.min_track_bytes = min_track_bytes
+        self._links: Dict[str, Link] = {}
+        self.core: Optional[Link] = None
+        self._oversub: Optional[Tuple[float, int]] = None  # (ratio, ports)
+
+    @classmethod
+    def single_switch(cls, nic_bandwidth: Optional[float] = None,
+                      **kw) -> "Topology":
+        """Per-node NIC + non-blocking switch (the default fabric)."""
+        return cls(nic_bandwidth=nic_bandwidth, **kw)
+
+    @classmethod
+    def oversubscribed(cls, ratio: float, n_ports: int,
+                       nic_bandwidth: Optional[float] = None,
+                       **kw) -> "Topology":
+        """Switch core provisioned at ``n_ports / ratio`` NIC equivalents
+        (ratio 1 = non-blocking, 4 = the common 4:1 uplink tier)."""
+        if ratio <= 0 or n_ports <= 0:
+            raise ValueError("oversubscription needs ratio > 0, ports > 0")
+        topo = cls(nic_bandwidth=nic_bandwidth,
+                   name=f"oversubscribed-{ratio:g}to1", **kw)
+        topo._oversub = (ratio, n_ports)
+        return topo
+
+    def resolve(self, params: FabricParams):
+        """Bind deferred capacities to the owning fabric's parameters."""
+        if self.nic_bandwidth is None:
+            self.nic_bandwidth = params.net.bandwidth
+        if self._oversub is not None and self.core_bandwidth is None:
+            ratio, ports = self._oversub
+            self.core_bandwidth = self.nic_bandwidth * ports / ratio
+        if self.core_bandwidth is not None and self.core is None:
+            self.core = Link("core", self.core_bandwidth)
+
+    # ------------------------------------------------------------ links
+    def _nic(self, endpoint: str, direction: str) -> Link:
+        key = f"{endpoint}/{direction}"
+        link = self._links.get(key)
+        if link is None:
+            link = self._links[key] = Link(key, self.nic_bandwidth)
+        return link
+
+    def path(self, src: str, dst: str) -> Tuple[Link, ...]:
+        """Links a src→dst transfer crosses: tx NIC, [core], rx NIC."""
+        tx, rx = self._nic(src, "tx"), self._nic(dst, "rx")
+        if self.core is not None:
+            return (tx, self.core, rx)
+        return (tx, rx)
+
+    def links(self) -> List[Link]:
+        out = list(self._links.values())
+        if self.core is not None:
+            out.append(self.core)
+        return out
+
+    def nic_load(self, endpoint: str) -> int:
+        """Transfers currently crossing this endpoint's NIC (tx + rx) —
+        the utilization snapshot the placement layer ranks by."""
+        load = 0
+        for direction in ("tx", "rx"):
+            link = self._links.get(f"{endpoint}/{direction}")
+            if link is not None:
+                load += link.active
+        return load
+
+
+class Transfer:
+    """One in-flight bulk transfer occupying every link on its path.
+
+    ``remaining`` drains at the fair-share ``rate`` recomputed by the
+    engine at every membership change; ``t_finish`` is the currently
+    scheduled completion instant (it moves when contention changes).
+    After completion ``duration`` holds the total modeled time
+    (one-way latency + contended serialization)."""
+
+    __slots__ = ("src", "dst", "nbytes", "path", "remaining", "rate",
+                 "t_start", "t_finish", "done", "duration", "charged",
+                 "on_done")
+
+    def __init__(self, src: str, dst: str, nbytes: int,
+                 path: Tuple[Link, ...], t_start: float,
+                 on_done: Optional[Callable[["Transfer"], None]] = None):
+        self.src = src
+        self.dst = dst
+        self.nbytes = nbytes
+        self.path = path
+        self.remaining = float(nbytes)
+        self.rate = 0.0
+        self.t_start = t_start
+        self.t_finish = math.inf
+        self.done = False
+        self.duration: Optional[float] = None
+        self.charged = False         # sync channel send: delay already
+        self.on_done = on_done       # accounted at charge time
+
+
+class CongestionEngine:
+    """Progress-based fair sharing of topology links on the clock.
+
+    The engine keeps the set of in-flight transfers; at every membership
+    change (a transfer starts or the completion event fires) it
+    integrates each transfer's progress since the last change at its
+    previous rate, recomputes every rate as
+    ``min(link.bandwidth / link.active)`` over the transfer's path, and
+    reschedules ONE completion event at the earliest new finish time.
+    Everything is a deterministic function of the start sequence — no
+    wall clock, no RNG — so replays stay bit-identical per seed.
+
+    Synchronous channel sends are *charged* the fair-share rate they
+    observe at send time (integrated rates cannot be returned
+    synchronously: a later arrival would retroactively slow them);
+    sends at or above ``min_track_bytes`` also register as load so the
+    contention they cause is felt by everyone else."""
+
+    def __init__(self, topology: Topology, clock: Clock,
+                 fabric: Optional["Fabric"] = None):
+        self.topology = topology
+        self.clock = clock
+        self.fabric = fabric
+        # one-way wire latency added to every completed transfer's
+        # reported duration (the serialization phase alone occupies
+        # links — latency is propagation, not capacity)
+        self.latency = fabric.params.net.latency if fabric else 0.0
+        self._active: List[Transfer] = []
+        self._t_last = clock.now()
+        self._event = None           # single next-completion event
+        self._lock = threading.Lock()
+        # whether solo transfers already deviate from the closed form
+        # (custom NIC caps below the fabric's calibrated bandwidth)
+        self.always_on = False
+        # telemetry (folded into Fabric.stats when armed)
+        self.transfers_started = 0
+        self.transfers_done = 0
+        self.congested_sends = 0     # charges/transfers that shared a link
+        self.congestion_delay_s = 0.0   # extra seconds vs solo closed form
+        self.peak_link_active = 0
+
+    @property
+    def active(self) -> bool:
+        return bool(self._active)
+
+    def active_transfers(self) -> List[Transfer]:
+        with self._lock:
+            return list(self._active)
+
+    def solo_rate(self, path: Tuple[Link, ...]) -> float:
+        return min(link.bandwidth for link in path)
+
+    # ------------------------------------------------------ integration
+    def _advance_to_now(self) -> float:
+        """Integrate every active transfer's progress to now at the
+        rates set by the previous membership change."""
+        now = self.clock.now()
+        dt = now - self._t_last
+        if dt > 0.0:
+            for tr in self._active:
+                tr.remaining -= tr.rate * dt
+                if tr.remaining < 0.0:
+                    tr.remaining = 0.0
+            self._t_last = now
+        return now
+
+    def _refresh_rates(self, now: float):
+        """Recompute fair-share rates + finish times, reschedule the
+        completion event at the earliest finish.  Caller holds the lock
+        and has integrated progress to ``now``."""
+        nxt = math.inf
+        for tr in self._active:
+            tr.rate = min(link.fair_share() for link in tr.path)
+            if tr.rate <= 0.0 or math.isinf(tr.rate):
+                tr.t_finish = now if math.isinf(tr.rate) else math.inf
+            else:
+                tr.t_finish = now + tr.remaining / tr.rate
+            if tr.t_finish < nxt:
+                nxt = tr.t_finish
+        if math.isinf(nxt):
+            if self._event is not None:
+                self._event.cancel()
+                self._event = None
+        elif self._event is None:
+            self._event = self.clock.call_at(nxt, self._fire)
+        else:
+            self._event = self.clock.reschedule(self._event, nxt)
+        if self.fabric is not None:
+            self.fabric._cong_active = bool(self._active) or self.always_on
+
+    def _fire(self):
+        """Completion event: retire every transfer that has drained,
+        then re-integrate the survivors."""
+        finished: List[Transfer] = []
+        with self._lock:
+            now = self._advance_to_now()
+            self._event = None
+            keep: List[Transfer] = []
+            for tr in self._active:
+                # float-exact completions: the event was scheduled at
+                # remaining/rate, so drained transfers sit at 0.0 (or a
+                # hair above after an unrelated earlier event — treat
+                # sub-byte residue at/past the finish instant as done)
+                if tr.remaining <= 0.0 or (tr.t_finish <= now
+                                           and tr.remaining < 1.0):
+                    tr.remaining = 0.0
+                    tr.done = True
+                    tr.duration = self.latency + (now - tr.t_start)
+                    for link in tr.path:
+                        link.active -= 1
+                    self.transfers_done += 1
+                    if not tr.charged:
+                        solo = self.latency + (
+                            tr.nbytes / self.solo_rate(tr.path)
+                            if tr.nbytes else 0.0)
+                        extra = tr.duration - solo
+                        if extra > 1e-12:
+                            self.congested_sends += 1
+                            self.congestion_delay_s += extra
+                    finished.append(tr)
+                else:
+                    keep.append(tr)
+            self._active = keep
+            self._refresh_rates(now)
+        for tr in finished:
+            if tr.on_done is not None:
+                tr.on_done(tr)
+
+    # ------------------------------------------------------------ starts
+    def start(self, src: str, dst: str, nbytes: int, *,
+              on_done: Optional[Callable[["Transfer"], None]] = None,
+              charged: bool = False) -> Transfer:
+        """Register one transfer and re-integrate the fleet.  The
+        transfer completes via the engine's clock event; ``on_done``
+        fires at that instant with the final ``duration`` set."""
+        with self._lock:
+            now = self._advance_to_now()
+            path = self.topology.path(src, dst)
+            tr = Transfer(src, dst, nbytes, path, now, on_done)
+            tr.charged = charged
+            for link in path:
+                link.active += 1
+                link.bytes_total += nbytes
+                if link.active > link.peak_active:
+                    link.peak_active = link.active
+                if link.active > self.peak_link_active:
+                    self.peak_link_active = link.active
+            self._active.append(tr)
+            self.transfers_started += 1
+            self._refresh_rates(now)
+        return tr
+
+    # ----------------------------------------------------------- charges
+    def charged_time(self, src: str, dst: str, nbytes: int,
+                     params: FabricParams) -> float:
+        """Congestion-aware modeled one-way time of a channel send:
+        latency + serialization at the fair-share rate the transfer
+        observes at send time (inline saving and wire encoding exactly
+        as in the closed form — an uncontended charge reproduces
+        ``FabricParams.message_time`` bit-identically).  Sends at or
+        above ``min_track_bytes`` register as link load and drain via
+        the engine; the charge itself stays synchronous because the
+        invocation timeline needs the number at dispatch time."""
+        wire = nbytes if params.encoding == 1.0 \
+            else int(round(nbytes * params.encoding))
+        with self._lock:
+            self._advance_to_now()
+            path = self.topology.path(src, dst)
+            rate = min(link.fair_share(extra=1) for link in path)
+            solo = self.solo_rate(path)
+        serial = wire / rate if wire else 0.0
+        if rate < solo:
+            with self._lock:
+                self.congested_sends += 1
+                self.congestion_delay_s += serial - wire / solo
+        if wire >= self.topology.min_track_bytes:
+            self.start(src, dst, wire, charged=True)
+        t = params.net.latency + serial
+        if wire <= params.net.inline_limit:
+            t -= params.net.inline_save
+        return t if t > 0.0 else 0.0
+
+    # ------------------------------------------------------------- stats
+    def nic_load(self, endpoint: str) -> int:
+        with self._lock:
+            return self.topology.nic_load(endpoint)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"topology": self.topology.name,
+                    "transfers": self.transfers_started,
+                    "transfers_done": self.transfers_done,
+                    "congested": self.congested_sends,
+                    "congestion_delay_s": self.congestion_delay_s,
+                    "peak_link_active": self.peak_link_active}
+
+
 class Channel:
     """Queue-pair analogue between two named endpoints.
 
@@ -211,8 +576,23 @@ class Channel:
 
     def message_time(self, nbytes: int) -> float:
         """Modeled one-way time for ``nbytes``, including any injected
-        delay (fault surface for straggler scenarios)."""
+        delay (fault surface for straggler scenarios).  Closed form —
+        congestion-blind by design (estimates, lost-attempt costs)."""
         return self.fabric.params.message_time(nbytes) + self.extra_delay
+
+    def _wire_time(self, nbytes: int, reverse: bool = False) -> float:
+        """The authoritative modeled wire time of one delivered message:
+        the closed form when no transfer is in flight anywhere, the
+        congestion engine's fair-share charge when the fabric is loaded
+        OR the message is bulk enough to register as load itself
+        (the link path is direction-aware — a result return rides
+        dst→src and contends with the CLIENT-side rx port)."""
+        fabric = self.fabric
+        if fabric._cong_active or nbytes >= fabric._cong_track_min:
+            a, b = (self.dst, self.src) if reverse else (self.src, self.dst)
+            return fabric.congestion.charged_time(
+                a, b, nbytes, fabric.params) + self.extra_delay
+        return fabric.params.message_time(nbytes) + self.extra_delay
 
     # ------------------------------------------------------------- wire
     def send(self, nbytes: int, reverse: bool = False) -> Optional[float]:
@@ -226,11 +606,13 @@ class Channel:
         leg riding the client's queue pair), which matters under
         one-way partitions where only one direction is severed."""
         fabric = self.fabric
-        if not (self.closed or self.drop_rate or fabric._partitions):
-            # fast path — healthy channel, no faults armed anywhere:
-            # identical arithmetic and counters to the slow path below,
-            # minus the fault bookkeeping (this is the 100k-invocation
-            # replay's innermost loop)
+        if not (self.closed or self.drop_rate or fabric._partitions
+                or fabric._cong_active
+                or nbytes >= fabric._cong_track_min):
+            # fast path — healthy channel, no faults armed anywhere and
+            # no congestion in flight: identical arithmetic and counters
+            # to the slow path below, minus the fault bookkeeping (this
+            # is the 100k-invocation replay's innermost loop)
             t = self._mt_memo.get(nbytes)
             if t is None:
                 t = self._mt_memo[nbytes] = \
@@ -260,7 +642,7 @@ class Channel:
                 raise ChannelDropped(
                     f"{self.src} -> {self.dst}: message lost")
             return None
-        return self.transfer(nbytes)
+        return self.transfer(nbytes, reverse=reverse)
 
     def send_retransmitting(self, nbytes: int, attempts: int = 3,
                             reverse: bool = False) -> float:
@@ -293,7 +675,9 @@ class Channel:
         under a one-way partition severing only the executor's side,
         dispatch still arrives but the result cannot come home."""
         fabric = self.fabric
-        if not (self.closed or self.drop_rate or fabric._partitions):
+        if not (self.closed or self.drop_rate or fabric._partitions
+                or fabric._cong_active
+                or nbytes >= fabric._cong_track_min):
             # healthy-route fast path, identical to send()'s
             t = self._mt_memo.get(nbytes)
             if t is None:
@@ -308,13 +692,13 @@ class Channel:
             return self.message_time(nbytes)
         return self.send_retransmitting(nbytes, reverse=True)
 
-    def transfer(self, nbytes: int) -> float:
+    def transfer(self, nbytes: int, reverse: bool = False) -> float:
         """A counted leg WITHOUT a fault check: used for the pieces of
         an exchange whose fate the caller already settled with ``send``
         — rpc responses, and the code push riding a negotiation that
         just succeeded.  Keeps counters equal to what actually crossed
-        the wire."""
-        t = self.message_time(nbytes)
+        the wire; congestion-aware like every delivered message."""
+        t = self._wire_time(nbytes, reverse=reverse)
         with self._lock:
             self.messages += 1
             self.bytes += nbytes
@@ -338,7 +722,7 @@ class Channel:
                 raise ChannelPartitioned(
                     f"{self.dst} -/-> {self.src}: no return route")
             return 0.0
-        return t + self.transfer(bytes_response)
+        return t + self.transfer(bytes_response, reverse=True)
 
     def close(self, faulted: bool = False):
         """Mark closed and hand the counters back to the fabric's
@@ -375,7 +759,8 @@ class Fabric:
 
     def __init__(self, params: Union[str, FabricParams] = "rdma", *,
                  clock: Clock = REAL_CLOCK, seed: int = 0,
-                 drop_rate: float = 0.0, extra_delay: float = 0.0):
+                 drop_rate: float = 0.0, extra_delay: float = 0.0,
+                 topology: Optional[Topology] = None):
         if isinstance(params, str):
             params = FABRICS[params]
         self.params = params
@@ -384,6 +769,21 @@ class Fabric:
         self.seed = seed
         self.drop_rate = drop_rate
         self.extra_delay = extra_delay
+        # congestion layer: disarmed by default (per-message closed
+        # form, the pre-topology model); armed fabrics keep the closed
+        # form bit-identical whenever no transfer is in flight.
+        # _cong_active is the hot-path flag the per-send check reads —
+        # it flips True only while transfers occupy links (or a custom
+        # topology constrains even solo transfers)
+        self.congestion: Optional[CongestionEngine] = None
+        self._cong_active = False
+        # bulk-send threshold of the armed topology (inf when disarmed):
+        # a send this large must engage the engine EVEN FROM IDLE so it
+        # registers as link load — otherwise channel-only bulk traffic
+        # would still overlap for free
+        self._cong_track_min = math.inf
+        if topology is not None:
+            self.arm_topology(topology)
         self._lock = threading.Lock()
         self._rng = random.Random(seed)
         self._nchannels = 0
@@ -436,6 +836,45 @@ class Fabric:
 
     def message_time(self, nbytes: int) -> float:
         return self.params.message_time(nbytes) + self.extra_delay
+
+    # ------------------------------------------------------- congestion
+    def arm_topology(self, topology: Topology) -> CongestionEngine:
+        """Attach a shared-link topology: from here on, concurrent
+        transfers fair-share NIC/core capacity and bulk channel sends
+        are charged their contended rates.  Solo traffic on the default
+        topology stays bit-identical to the closed form."""
+        topology.resolve(self.params)
+        self.congestion = CongestionEngine(topology, self.clock, self)
+        self._cong_track_min = topology.min_track_bytes
+        nic = topology.nic_bandwidth
+        core = topology.core.bandwidth if topology.core else math.inf
+        # a solo transfer's rate is min(nic, core): if that differs from
+        # the calibrated link bandwidth, the engine must see EVERY send
+        self.congestion.always_on = (
+            min(nic, core) != self.params.net.bandwidth)
+        self._cong_active = self.congestion.always_on
+        return self.congestion
+
+    def start_transfer(self, src: str, dst: str, nbytes: int, *,
+                       on_done=None) -> Transfer:
+        """Launch one bulk transfer on the topology (arming the default
+        single-switch topology on first use).  The transfer fair-shares
+        every link it crosses and completes via a clock event; faults
+        compose — a partitioned route refuses the transfer outright."""
+        if self.congestion is None:
+            self.arm_topology(Topology.single_switch())
+        if self.partitioned(src, dst):
+            raise ChannelPartitioned(f"{src} -/-> {dst}: no route")
+        wire = nbytes if self.params.encoding == 1.0 \
+            else int(round(nbytes * self.params.encoding))
+        return self.congestion.start(src, dst, wire, on_done=on_done)
+
+    def nic_load(self, endpoint: str) -> int:
+        """Transfers currently crossing this endpoint's NIC — 0 when no
+        topology is armed (the placement signal degrades gracefully)."""
+        if self.congestion is None:
+            return 0
+        return self.congestion.nic_load(endpoint)
 
     def endpoints(self) -> Set[str]:
         with self._lock:
@@ -500,11 +939,15 @@ class Fabric:
 
     def stats(self) -> dict:
         """Cumulative wire counters: every live channel plus everything
-        already retired — monotonic across churn."""
+        already retired — monotonic across churn.  An armed topology
+        adds its congestion telemetry (transfer counts, extra seconds
+        paid to contention, peak link sharing)."""
         with self._lock:
             chans = list(self._channels)
             out = {"fabric": self.params.name, "channels": len(chans),
                    **self._retired}
         for ch in chans:
             ch.fold_into(out)
+        if self.congestion is not None:
+            out.update(self.congestion.stats())
         return out

@@ -1,10 +1,12 @@
-"""Batch-system elasticity + data-pipeline coverage."""
+"""Batch-system elasticity + per-job node affinity + data-pipeline
+coverage."""
 from __future__ import annotations
 
 import numpy as np
+import pytest
 
 from repro.core import (BatchSystem, FunctionLibrary, Invoker, Ledger,
-                        ResourceManager)
+                        ResourceManager, SimulatedCluster)
 from repro.data import Prefetcher, SyntheticLMDataset
 
 
@@ -45,6 +47,68 @@ def test_client_survives_full_churn_cycle():
         ok += 1
     assert ok >= 5
     inv.deallocate()
+
+
+# ------------------------------------------------- per-job node affinity
+def test_affinity_job_claims_only_tagged_nodes():
+    """A pinned job reclaims exactly its affinity nodes — even though
+    lower-id FaaS nodes would otherwise be claimed first."""
+    sim = SimulatedCluster(n_nodes=4, workers_per_node=2, seed=2)
+    job = sim.bs.submit_job(2, duration_s=0.05,
+                            affinity=("node002", "node003"))
+    assert job.state == "running"
+    assert job.nodes == ["node002", "node003"]
+    assert sim.bs.nodes["node000"].state == "faas"   # untouched
+    sim.run_for(0.06)
+    assert job.state == "done"
+    assert sim.bs.state_counts()["faas"] == 4        # all returned
+
+
+def test_affinity_blocked_job_is_skipped_not_head_blocking():
+    """A pinned job whose nodes are busy stays queued while jobs behind
+    it start (deterministic skip); it runs as soon as its nodes free
+    up.  An UNCONSTRAINED blocked head still blocks (legacy
+    conservative semantics)."""
+    sim = SimulatedCluster(n_nodes=3, workers_per_node=2, seed=4)
+    bs = sim.bs
+    holder = bs.submit_job(1, duration_s=0.10, affinity=("node000",))
+    pinned = bs.submit_job(1, duration_s=0.05, affinity=("node000",))
+    behind = bs.submit_job(2, duration_s=0.05)       # other nodes free
+    assert holder.state == "running"
+    assert pinned.state == "queued"                  # its node is busy
+    assert behind.state == "running"                 # NOT head-blocked
+    # unconstrained wide job at the head DOES block smaller successors
+    wide = bs.submit_job(3, duration_s=0.05)
+    late = bs.submit_job(1, duration_s=0.05)
+    assert wide.state == "queued" and late.state == "queued"
+    sim.run_for(0.5)
+    assert {j.state for j in (holder, pinned, behind, wide, late)} \
+        == {"done"}
+    assert pinned.nodes == ["node000"]               # got ITS node
+
+
+def test_affinity_skip_is_deterministic():
+    """Same submissions, same seed -> same start order and node
+    assignment, twice."""
+    def run():
+        sim = SimulatedCluster(n_nodes=4, workers_per_node=2, seed=6)
+        bs = sim.bs
+        jobs = [bs.submit_job(2, 0.05, affinity=("node000", "node001")),
+                bs.submit_job(2, 0.05, affinity=("node000", "node001")),
+                bs.submit_job(2, 0.05),
+                bs.submit_job(1, 0.03, affinity=("node003",))]
+        sim.run_for(0.5)
+        return [(j.t_start, tuple(j.nodes)) for j in jobs]
+
+    assert run() == run()
+
+
+def test_affinity_validation():
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=1)
+    with pytest.raises(ValueError):
+        sim.bs.submit_job(1, 0.05, affinity=("node999",))
+    with pytest.raises(ValueError):      # wants more nodes than pinned
+        sim.bs.submit_job(2, 0.05, affinity=("node000",))
 
 
 def test_prefetcher_orders_and_stops():

@@ -18,6 +18,12 @@ Invariants:
   counters into the fabric's totals EXACTLY once (the fabric aggregate
   is invariant across a close, monotone across everything else, and a
   double close changes nothing).
+* Congestion (DESIGN.md §14) — under arbitrary interleavings of bulk
+  transfer starts and clock advances, link fair-sharing CONSERVES
+  capacity: the sum of concurrent transfer rates on any link never
+  exceeds the link's bandwidth; every transfer eventually completes
+  with its bytes fully accounted; and the completion order is
+  bit-identical when the same operation sequence replays.
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ import random
 import pytest
 
 from repro.core import (Fabric, Lease, LeaseRequest, LeaseState,
-                        TERMINAL_STATES, VirtualClock)
+                        TERMINAL_STATES, Topology, VirtualClock)
 from repro.core.transport import WIRE_COUNTERS
 
 END_STATES = (LeaseState.EXPIRED, LeaseState.RELEASED,
@@ -117,6 +123,60 @@ def check_channel_ops(seed: int, ops):
         == sends
 
 
+#: endpoints the fair-share ops draw from: three sources fanning into
+#: two sinks guarantees genuinely shared rx links
+_FS_SRC = ("c0", "c1", "c2")
+_FS_DST = ("s0", "s1")
+
+
+def check_fairshare_ops(ops):
+    """Run (op, a, b) steps — start a transfer or advance the clock —
+    against one congestion-armed fabric, asserting capacity
+    conservation on every link after every step, full byte accounting
+    at completion, and a bit-identical completion order on replay.
+
+    Returns the completion order so the caller can replay and
+    compare."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    engine = fab.congestion
+    completed = []
+    launched = 0
+    for op, a, b in ops:
+        if op == "start":
+            nbytes = 1 + (a * 7919 + b * 104729) % (64 << 20)
+            src = _FS_SRC[a % len(_FS_SRC)]
+            dst = _FS_DST[b % len(_FS_DST)]
+            fab.start_transfer(
+                src, dst, nbytes,
+                on_done=lambda tr: completed.append(
+                    (tr.src, tr.dst, tr.nbytes, round(tr.duration, 15))))
+            launched += 1
+        else:                            # advance
+            clock.advance(a * 1e-5 + b * 1e-7)
+        # THE invariant: concurrent fair-share rates never oversubscribe
+        # any link's capacity
+        active = engine.active_transfers()
+        per_link = {}
+        for tr in active:
+            for link in tr.path:
+                per_link.setdefault(link, 0.0)
+                per_link[link] += tr.rate
+        for link, rate_sum in per_link.items():
+            assert rate_sum <= link.bandwidth * (1 + 1e-9), link.name
+        # a transfer never drains more than it carries
+        for tr in active:
+            assert -1e-6 <= tr.remaining <= tr.nbytes + 1e-6
+    clock.run_until_idle()
+    assert not engine.active_transfers()     # everything drained
+    assert len(completed) == launched        # every start completed
+    for src, dst, nbytes, dur in completed:
+        # duration is never better than the solo closed form
+        assert dur >= fab.net.latency + nbytes / fab.net.bandwidth \
+            - 1e-12
+    return completed
+
+
 # ------------------------------------------------------ hypothesis path
 # guarded import (requirements-test.txt pattern): unlike a module-level
 # importorskip, only the @given tests vanish without hypothesis — the
@@ -176,6 +236,19 @@ if HAVE_HYPOTHESIS:
     def test_channel_counter_properties(seed, ops):
         check_channel_ops(seed, ops)
 
+    FAIRSHARE_OP = st.tuples(
+        st.sampled_from(["start", "start", "advance"]),
+        st.integers(0, 40),
+        st.integers(0, 40),
+    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=st.lists(FAIRSHARE_OP, max_size=30))
+    def test_fairshare_conserves_capacity(ops):
+        """Fair sharing never oversubscribes a link, and the completion
+        order is a pure function of the op sequence (replay ==)."""
+        assert check_fairshare_ops(ops) == check_fairshare_ops(ops)
+
 
 # --------------------------------------- seeded fallback (always runs)
 @pytest.mark.parametrize("trial_seed", [101, 202, 303])
@@ -204,3 +277,13 @@ def test_channel_ops_seeded_fallback(trial_seed):
                 rng.randrange(1 << 16))
                for _ in range(rng.randrange(0, 35))]
         check_channel_ops(rng.randrange(1 << 16), ops)
+
+
+@pytest.mark.parametrize("trial_seed", [41, 52, 63])
+def test_fairshare_ops_seeded_fallback(trial_seed):
+    rng = random.Random(trial_seed)
+    kinds = ["start", "start", "advance"]
+    for _ in range(15):
+        ops = [(rng.choice(kinds), rng.randrange(41), rng.randrange(41))
+               for _ in range(rng.randrange(0, 25))]
+        assert check_fairshare_ops(ops) == check_fairshare_ops(ops)

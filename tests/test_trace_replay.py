@@ -84,6 +84,11 @@ def test_trace_validation_rejects_garbage():
         ChurnTrace(4, [TraceEvent(0.0, "node_down", node_id="node999")])
     with pytest.raises(ValueError):
         ChurnTrace(4, [TraceEvent(0.0, "batch_job", n_nodes=9)])
+    with pytest.raises(ValueError):      # wider than its own affinity
+        ChurnTrace(4, [TraceEvent(0.0, "batch_job", n_nodes=3,
+                                  group_a=("node000",))])
+    with pytest.raises(ValueError):      # storm without width/bytes
+        ChurnTrace(4, [TraceEvent(0.0, "bandwidth_storm")])
     with pytest.raises(ValueError):
         ChurnTrace.synthetic_piz_daint(4, 1.0, 1.0, seed=0)  # util == 1
 
@@ -253,6 +258,118 @@ def test_thousand_node_replay_fast_tier():
     assert s1.preemptions > 100               # churn at cluster scale
     assert s1.completed >= 0.95 * 2000
     assert wall < 5.0
+
+
+def test_thousand_node_storm_replay_deterministic():
+    """The acceptance shape: a 1000-node churn replay with a
+    bandwidth_storm event — congestion, preemption and transport
+    faults on the same fabric — stays inside the wall budget and is
+    bit-identical per seed."""
+    def run():
+        tr = ChurnTrace.synthetic_piz_daint(
+            1000, 0.3, 0.5, seed=17, fault_drop_rate=0.02,
+            drop_window_s=0.05, n_partitions=1, partition_width=3,
+            n_storms=3, storm_transfers=16, storm_bytes=8 << 20,
+            storm_targets=4)
+        return replay_trace(tr, seed=17, n_clients=8,
+                            n_invocations=2000, workers_per_client=2)
+
+    t0 = time.perf_counter()
+    s1 = run()
+    wall = time.perf_counter() - t0
+    s2 = run()
+    assert s1 == s2                           # bit-identical, not approx
+    assert s1.storm_transfers + s1.storm_blocked == 3 * 16
+    assert s1.fabric_transfers >= s1.storm_transfers
+    assert s1.preemptions > 100               # churn at cluster scale
+    assert s1.completed >= 0.95 * 2000
+    assert wall < 5.0
+
+
+def test_storm_congestion_charges_tenant_traffic():
+    """A storm aimed at leased nodes makes concurrent invocations pay
+    fair-share wire time: congestion telemetry lands in the stats and
+    the un-stormed twin of the run completes strictly cheaper."""
+    def run(n_storms):
+        tr = ChurnTrace.synthetic_piz_daint(
+            4, 0.5, 0.0, seed=9, n_storms=n_storms, storm_transfers=8,
+            storm_bytes=32 << 20, storm_targets=4)
+        return replay_trace(tr, seed=9, n_clients=2, n_invocations=400,
+                            workers_per_client=4,
+                            payload_elems=64 * 1024)   # 256 KiB payloads
+
+    stormy, calm = run(2), run(0)
+    assert stormy.congested_sends > 0
+    assert stormy.congestion_delay_s > 0
+    assert calm.congested_sends == 0 and calm.congestion_delay_s == 0.0
+    assert stormy.rtt_mean_s > calm.rtt_mean_s
+
+
+def test_batch_job_trace_event_carries_affinity():
+    """A batch_job trace event with group_a claims exactly the pinned
+    nodes (per-job node affinity through the replay path)."""
+    sim = SimulatedCluster(n_nodes=4, workers_per_node=2, seed=2)
+    ev = TraceEvent(0.0, "batch_job", n_nodes=2, duration_s=0.05,
+                    group_a=("node001", "node003"))
+    sim.bs.apply_trace_event(ev)
+    running = [j for j in sim.bs.jobs.values() if j.state == "running"]
+    assert len(running) == 1
+    assert running[0].nodes == ["node001", "node003"]
+
+
+# ------------------------------------------------------------ CSV import
+def test_csv_state_log_converts_to_trace(tmp_path):
+    """A Piz-Daint-style per-node state log (arbitrary node ids, epoch
+    timestamps) converts into a replayable trace: ids mapped onto
+    node###, time normalized to 0, states to node_down/node_up."""
+    p = tmp_path / "util.csv"
+    p.write_text("timestamp,node,state\n"
+                 "1620000010.0,nid00123,busy\n"
+                 "1620000011.5,nid00042,idle\n"
+                 "1620000012.0,nid00123,free\n")
+    tr = ChurnTrace.from_csv(str(p))
+    assert tr.n_nodes == 2
+    assert tr.meta["node_map"] == {"nid00042": "node000",
+                                   "nid00123": "node001"}
+    assert [(e.t, e.kind, e.node_id) for e in tr] == [
+        (0.0, "node_down", "node001"),
+        (1.5, "node_up", "node000"),
+        (2.0, "node_up", "node001")]
+    # and it actually replays
+    stats = replay_trace(tr, seed=1, n_clients=1, n_invocations=50,
+                         workers_per_client=1)
+    assert stats.completed + stats.failed == 50
+
+
+def test_csv_event_shape_and_cli_roundtrip(tmp_path):
+    """The generic event-CSV shape (kind column, ;-joined groups) and
+    the ``python -m repro.core.trace convert`` CLI both produce a trace
+    whose JSON round-trips losslessly."""
+    from repro.core.trace import _cli
+    p = tmp_path / "events.csv"
+    p.write_text("t,kind,node_id,rate,group_a,n_transfers,nbytes\n"
+                 "0.0,node_down,node001,,,,\n"
+                 "0.5,drop_rate,,0.25,,,\n"
+                 "1.0,bandwidth_storm,,,node000;node001,4,1048576\n"
+                 "1.5,heal,,,,,\n")
+    out = tmp_path / "events.json"
+    assert _cli(["convert", str(p), str(out), "--n-nodes", "4"]) == 0
+    tr = ChurnTrace.from_json(str(out))
+    assert tr.n_nodes == 4
+    storm = [e for e in tr if e.kind == "bandwidth_storm"][0]
+    assert storm.n_transfers == 4 and storm.nbytes == 1 << 20
+    assert storm.group_a == ("node000", "node001")
+    assert ChurnTrace.from_json(tr.to_json()).events == tr.events
+
+
+def test_csv_rejects_garbage(tmp_path):
+    with pytest.raises(ValueError):
+        ChurnTrace.from_csv("t,node_id,state\n0.0,n0,frobnicate\n")
+    with pytest.raises(ValueError):
+        ChurnTrace.from_csv("a,b\n1,2\n")   # unrecognized header
+    with pytest.raises(ValueError):         # log names 2 nodes
+        ChurnTrace.from_csv("t,node_id,state\n0,x,busy\n0,y,busy\n",
+                            n_nodes=1)
 
 
 # ----------------------------------------------------- leases stay sane

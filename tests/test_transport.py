@@ -15,7 +15,8 @@ import pytest
 from repro.core import (AvailabilityBus, BatchSystem, ChannelDropped,
                         ChannelPartitioned, FABRICS, Fabric,
                         FunctionLibrary, Invoker, Ledger, ResourceManager,
-                        SimulatedCluster, Tier, VirtualClock, write_time)
+                        SimulatedCluster, Tier, Topology, VirtualClock,
+                        write_time)
 
 
 def make_stack(clock, *, n_nodes=2, workers=2, fabric=None, seed=0, **kw):
@@ -439,6 +440,203 @@ def test_allocation_window_bounds_candidates_keeps_cached():
     cands = inv._candidate_servers()
     assert len(cands) == 5
     assert cached <= {m.server_id for m in cands}
+
+
+# --------------------------------------------- topology + congestion
+def test_uncontended_sends_bit_identical_with_topology():
+    """Arming the default topology must not move a single bit: solo
+    channel sends reproduce the closed-form write_time EXACTLY — small
+    sends via the fast path, bulk sends via an idle-engine charge that
+    computes the identical arithmetic (draining between bulk sends so
+    each is genuinely solo)."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    ch = fab.connect("a", "b")
+    for n in (0, 1, 64, 128, 129, 4096, 1 << 17, 1 << 20):
+        assert ch.send(n) == write_time(n)    # ==, not approx
+        clock.run_until_idle()                # bulk sends drain as load
+    assert fab.stats()["congested"] == 0
+
+
+def test_bulk_channel_sends_contend_with_each_other():
+    """Channel-only bulk traffic must not overlap for free: two 10 MB
+    sends from different clients into one server at the same instant
+    — the second is charged the shared rate because the first
+    registered as link load (no explicit start_transfer anywhere)."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    nbytes = 10 << 20
+    serial = nbytes / fab.net.bandwidth
+    first = fab.connect("c1", "srv").send(nbytes)
+    second = fab.connect("c2", "srv").send(nbytes)
+    assert first == write_time(nbytes)        # solo when it started
+    assert (second - first) == pytest.approx(serial, rel=1e-6)  # ~2x
+    wire = fab.stats()
+    assert wire["transfers"] == 2             # both registered as load
+    assert wire["congested"] >= 1
+    assert fab.nic_load("srv") > 0            # placement sees it too
+
+
+def test_two_concurrent_transfers_fair_share_2x():
+    """The acceptance shape: two equal-size transfers on one shared
+    link each take ~2x the solo time — neither finishes early, and the
+    completion event is re-integrated, not precomputed."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    nbytes = 10 << 20
+    solo_serial = nbytes / fab.net.bandwidth
+    a = fab.start_transfer("c1", "srv", nbytes)
+    b = fab.start_transfer("c2", "srv", nbytes)
+    clock.run_until_idle()
+    for tr in (a, b):
+        assert tr.done
+        assert (tr.duration - fab.net.latency) == pytest.approx(
+            2 * solo_serial, rel=1e-9)
+    wire = fab.stats()
+    assert wire["transfers"] == 2
+    assert wire["congested"] == 2
+    assert wire["peak_link_active"] == 2
+
+
+def test_staggered_transfer_reintegrates_finish_times():
+    """A transfer that runs solo for half its bytes and then shares the
+    link finishes at exactly 1.5x — progress-based completion, with the
+    late arrival slowing it RETROACTIVELY from the overlap instant."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    nbytes = 8 << 20
+    serial = nbytes / fab.net.bandwidth
+    a = fab.start_transfer("c1", "srv", nbytes)
+    clock.advance(serial / 2)              # half of A drained solo
+    b = fab.start_transfer("c2", "srv", nbytes)
+    clock.run_until_idle()
+    assert (a.duration - fab.net.latency) == pytest.approx(
+        1.5 * serial, rel=1e-9)
+    assert (b.duration - fab.net.latency) == pytest.approx(
+        1.5 * serial, rel=1e-9)            # shares, then finishes solo
+
+
+def test_disjoint_pairs_do_not_contend_on_single_switch():
+    """The default switch is non-blocking: transfers between disjoint
+    endpoint pairs run at full NIC rate simultaneously."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    nbytes = 8 << 20
+    a = fab.start_transfer("a", "b", nbytes)
+    c = fab.start_transfer("c", "d", nbytes)
+    clock.run_until_idle()
+    solo = fab.net.latency + nbytes / fab.net.bandwidth
+    assert a.duration == pytest.approx(solo, rel=1e-9)
+    assert c.duration == pytest.approx(solo, rel=1e-9)
+
+
+def test_oversubscribed_core_contends_disjoint_pairs():
+    """The oversubscribed preset adds the fat-tree core bottleneck:
+    4 disjoint pairs through a 4:1 core (4 ports) share ONE NIC's worth
+    of core capacity — each takes ~4x solo."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock,
+                 topology=Topology.oversubscribed(4.0, n_ports=4))
+    nbytes = 8 << 20
+    serial = nbytes / fab.net.bandwidth
+    trs = [fab.start_transfer(f"s{i}", f"d{i}", nbytes)
+           for i in range(4)]
+    clock.run_until_idle()
+    for tr in trs:
+        assert (tr.duration - fab.net.latency) == pytest.approx(
+            4 * serial, rel=1e-9)
+
+
+def test_transfer_respects_partition():
+    """Faults compose with congestion: a bulk transfer into a
+    partitioned endpoint is refused like any other traffic."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    fab.partition(["storm:0"], ["srv"])
+    with pytest.raises(ChannelPartitioned):
+        fab.start_transfer("storm:0", "srv", 1 << 20)
+    fab.heal()
+    assert fab.start_transfer("storm:0", "srv", 1 << 20) is not None
+
+
+def test_channel_send_charged_fair_share_under_load():
+    """A channel send issued while K transfers occupy the destination
+    NIC is charged its fair share — serialization stretches ~(K+1)x —
+    and the congestion telemetry records the extra time."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    ch = fab.connect("client", "srv")
+    nbytes = 1 << 20
+    base = ch.send(nbytes)                 # uncontended closed form
+    clock.run_until_idle()                 # let the probe's load drain
+    for i in range(3):
+        fab.start_transfer(f"bg:{i}", "srv", 256 << 20)
+    loaded = ch.send(nbytes)
+    serial = nbytes / fab.net.bandwidth
+    assert (loaded - base) == pytest.approx(3 * serial, rel=1e-6)
+    wire = fab.stats()
+    assert wire["congested"] >= 1
+    assert wire["congestion_delay_s"] > 0
+    clock.run_until_idle()                 # drain; engine disarms
+    assert ch.send(nbytes) == base         # back to the closed form
+
+
+def test_invocation_timeline_reflects_congestion():
+    """End to end: an invocation dispatched during a NIC storm carries
+    the contended wire time on its timeline, and the same invocation
+    after the storm drains is back to the closed form."""
+    sim = SimulatedCluster(n_nodes=1, workers_per_node=1, seed=3,
+                           topology=Topology.single_switch())
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    c = sim.client("c0", lib)
+    assert c.allocate(1) == 1
+    x = np.ones(1 << 18, np.float32)       # 1 MiB payload
+    f0 = c.submit("echo", x, worker_hint=0)
+    f0.get(5.0)
+    for i in range(4):
+        sim.fabric.start_transfer(f"bg:{i}", "node000", 256 << 20)
+    f1 = c.submit("echo", x, worker_hint=0)
+    f1.get(5.0)
+    assert f1.timeline.net_in > 4 * f0.timeline.net_in
+    sim.run_until_idle()
+    f2 = c.submit("echo", x, worker_hint=0)
+    f2.get(5.0)
+    assert f2.timeline.net_in == f0.timeline.net_in
+    c.deallocate()
+
+
+def test_placement_ranks_cached_candidates_by_nic_load():
+    """Congestion-aware placement: among equally-warm servers the
+    registry's NIC-load snapshot decides — a client re-leases on the
+    quiet node, not the stormed one."""
+    clock = VirtualClock()
+    _, rm, _, lib, inv = make_stack(clock, n_nodes=2, workers=2)
+    assert inv.allocate(4) == 4            # warm channels to BOTH nodes
+    inv.deallocate()
+    for i in range(4):                     # storm node000's NIC
+        rm.fabric.start_transfer(f"bg:{i}", "node000", 256 << 20)
+    for r in rm.replicas:
+        r.sweep_heartbeats()               # registry snapshots the load
+    assert rm.primary().nic_loads()["node000"] >= 4
+    assert rm.primary().nic_loads()["node001"] == 0
+    assert inv.allocate(2) == 2
+    placed = {c.manager.server_id for c in inv.connections()}
+    assert placed == {"node001"}           # steered around the storm
+    inv.deallocate()
+
+
+def test_placement_load_ranking_inert_without_topology():
+    """No topology armed -> every load is 0 -> the ordering reduces to
+    the fault-memory ranking (bit-identical legacy behaviour)."""
+    clock = VirtualClock()
+    _, rm, _, lib, inv = make_stack(clock, n_nodes=2, workers=2)
+    for r in rm.replicas:
+        r.sweep_heartbeats()
+    assert rm.primary().nic_loads() == {"node000": 0, "node001": 0}
+    servers = rm.primary().server_list()
+    inv._note_fault(servers[0].server_id)
+    order = inv._placement_order(servers)
+    assert order[-1].server_id == servers[0].server_id
 
 
 def test_nightcore_fabric_reproduces_fig1_speedup():
