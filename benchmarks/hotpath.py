@@ -1,0 +1,278 @@
+"""Million-invocation hot path: event-core + replay throughput
+(DESIGN.md §15 — the perf trajectory's first recorded baseline).
+
+Three measurements, one JSON artifact:
+
+* **calibration** — a fixed pure-Python loop, measured in Mops/s.  CI
+  boxes and laptops differ 3-5x in raw interpreter speed; recording
+  the calibration next to every throughput number makes regressions
+  comparable ACROSS machines (the smoke gate compares
+  calibration-normalized events/sec, not absolutes).
+* **event core** — chained one-shot events through ``VirtualClock``
+  with the calendar queue AND the binary-heap reference, in events/s.
+  This isolates the clock from the rFaaS stack.
+* **replay** — the standard 1000-node churn+storm elasticity replay
+  (the acceptance scenario) with a per-phase breakdown: trace
+  generation, cluster construction, the replay itself.  Reported as
+  invocations/s and clock events/s.
+
+``python benchmarks/hotpath.py`` runs the full suite and (re)writes
+``BENCH_hotpath.json`` at the repo root — the recorded baseline the CI
+smoke regresses against.  ``--smoke`` runs a small deterministic
+replay whose STDOUT is bit-identical across runs (the workflow diffs
+two runs), checks in-process determinism, and fails — reporting on
+stderr, so the diffable stdout stays stable — if calibration-
+normalized events/sec regressed more than 20% against the recorded
+baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import emit
+from repro.core import ChurnTrace, SimulatedCluster, TraceReplayer, \
+    VirtualClock
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "BENCH_hotpath.json")
+SEED = 7
+#: >20% normalized regression fails the smoke gate
+REGRESSION_TOLERANCE = 0.20
+
+# acceptance-shaped replay: 1000 nodes, churn + drop phase + partition
+# windows + bandwidth storms (the §2/§3.5/§14 layers all hot at once)
+TRACE_KW = dict(utilization=0.5, fault_drop_rate=0.02,
+                drop_window_s=0.3, n_partitions=2, partition_width=3,
+                n_storms=4, storm_transfers=8, storm_bytes=4 << 20)
+
+
+def calibrate(n: int = 2_000_000) -> float:
+    """Machine-speed proxy: Mops/s of a fixed pure-Python loop."""
+    t0 = time.perf_counter()
+    x = 0
+    for i in range(n):
+        x += i
+    dt = time.perf_counter() - t0
+    return n / dt / 1e6
+
+
+def bench_event_core(n: int = 300_000) -> dict:
+    """Two event-core workloads, calendar AND heap reference:
+
+    * ``chain`` — 64 interleaved one-shot chains through one long
+      ``run_until`` (the replay's shape: a few dozen in-flight
+      completions plus the arrival chain);
+    * ``resched`` — 1024 armed events constantly rescheduled (the
+      congestion engine's shape during a storm: completion times move
+      on every membership change).  This is the regime the calendar
+      queue's O(1) cancel-and-rearm exists for — the heap accumulates
+      a stale entry per rearm and pays O(log n) on a growing heap."""
+    out = {}
+    depth = 64
+    for impl in ("calendar", "heap"):
+        clk = VirtualClock(queue=impl)
+        count = [0]
+
+        def tick():
+            count[0] += 1
+            if count[0] < n:
+                clk.call_later_discard(depth * 1e-6, tick)
+        for i in range(depth):
+            clk.call_later((i + 1) * 1e-6, tick)
+        t0 = time.perf_counter()
+        clk.run_until(1e9)
+        dt = time.perf_counter() - t0
+        # the last armed chain events (< depth of them) still fire
+        # after the count crosses n
+        assert n <= count[0] < n + depth
+        out[f"{impl}_chain_events_per_s"] = count[0] / dt
+    k = 1024
+    for impl in ("calendar", "heap"):
+        clk = VirtualClock(queue=impl)
+        handles = [clk.call_at(1e30, _noop) for _ in range(k)]
+        t0 = time.perf_counter()
+        t = 0.0
+        for i in range(n):
+            j = i % k
+            t += 1e-7
+            handles[j] = clk.reschedule(handles[j], t + 1e-3)
+        dt = time.perf_counter() - t0
+        out[f"{impl}_resched_per_s"] = n / dt
+    return out
+
+
+def _noop():
+    pass
+
+
+def _make_trace(n_nodes: int, duration_s: float, seed: int) -> ChurnTrace:
+    return ChurnTrace.synthetic_piz_daint(n_nodes, duration_s,
+                                          TRACE_KW["utilization"],
+                                          seed=seed,
+                                          **{k: v for k, v in
+                                             TRACE_KW.items()
+                                             if k != "utilization"})
+
+
+def bench_replay(n_nodes: int = 1000, n_invocations: int = 200_000,
+                 duration_s: float = 2.0, n_clients: int = 16,
+                 workers_per_client: int = 2, seed: int = SEED) -> dict:
+    """The acceptance replay with a per-phase wall breakdown."""
+    t0 = time.perf_counter()
+    trace = _make_trace(n_nodes, duration_s, seed)
+    t_trace = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sim = SimulatedCluster(n_nodes=n_nodes, workers_per_node=2,
+                           n_replicas=2, seed=seed)
+    replayer = TraceReplayer(sim, trace)
+    t_setup = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    c0 = time.process_time()
+    stats = replayer.replay(n_clients=n_clients,
+                            n_invocations=n_invocations,
+                            workers_per_client=workers_per_client)
+    t_replay = time.perf_counter() - t0
+    cpu_replay = time.process_time() - c0
+    events = sim.clock.events_run
+    return {
+        "n_nodes": n_nodes,
+        "n_invocations": n_invocations,
+        "completed": stats.completed,
+        "trace_events": stats.trace_events,
+        "storm_transfers": stats.storm_transfers,
+        "clock_events": events,
+        "phases_s": {"trace_gen": t_trace, "cluster_setup": t_setup,
+                     "replay": t_replay},
+        "replay_cpu_s": cpu_replay,
+        "invocations_per_s": n_invocations / t_replay,
+        "events_per_s": events / t_replay,
+        "us_per_invocation": t_replay / n_invocations * 1e6,
+    }
+
+
+def _digest(stats) -> str:
+    """Deterministic one-line summary of a replay (everything in it is
+    a pure function of the seed — safe to diff across processes)."""
+    return (f"completed={stats.completed}/{stats.invocations_requested}"
+            f" failed={stats.failed} preempt={stats.preemptions}"
+            f" drops={stats.fabric_drops} storms={stats.storm_transfers}"
+            f" congested={stats.congested_sends}"
+            f" p50={stats.rtt_p50_s:.9g} p99={stats.rtt_p99_s:.9g}"
+            f" leases={stats.leases_granted}")
+
+
+def _smoke_measure():
+    """The smoke-shaped replay (100 nodes / 5k invocations), measured:
+    (stats, clock events, best-of-two wall).  Used by BOTH the full run
+    (to record the smoke-shaped baseline) and the CI gate (to compare
+    against it — same workload, same statistic)."""
+    n_nodes, n_inv = 100, 5_000
+    trace = _make_trace(n_nodes, 1.0, SEED)
+
+    def one():
+        sim = SimulatedCluster(n_nodes=n_nodes, workers_per_node=2,
+                               n_replicas=2, seed=SEED)
+        t0 = time.perf_counter()
+        s = TraceReplayer(sim, trace).replay(n_clients=8,
+                                             n_invocations=n_inv,
+                                             workers_per_client=2)
+        return s, sim.clock.events_run, time.perf_counter() - t0
+
+    s1, ev1, dt1 = one()
+    s2, ev2, dt2 = one()
+    return s1, s2, ev1, ev2, min(dt1, dt2)
+
+
+def run(quick: bool = False, smoke: bool = False,
+        write_baseline: bool = False):
+    """Full measurement.  The committed ``BENCH_hotpath.json`` CI
+    reference is rewritten ONLY when ``write_baseline`` is set (the
+    standalone ``python benchmarks/hotpath.py`` invocation) — the
+    all-benchmarks sweep (``benchmarks/run.py``) must never silently
+    move the regression gate, least of all with ``--quick`` numbers."""
+    if smoke:
+        return _run_smoke()
+    n_inv = 30_000 if quick else 200_000
+    calib = calibrate()
+    core = bench_event_core(100_000 if quick else 300_000)
+    rep = bench_replay(n_invocations=n_inv)
+    _, _, smoke_ev, _, smoke_dt = _smoke_measure()
+    doc = {
+        "benchmark": "hotpath",
+        "calibration_mops": calib,
+        "python": sys.version.split()[0],
+        "event_core": core,
+        "replay": rep,
+        # cross-machine comparable numbers; the smoke gate tracks the
+        # smoke-shaped one (same workload it measures itself)
+        "normalized_events_per_mop": rep["events_per_s"] / (calib * 1e6),
+        "normalized_smoke_events_per_mop":
+            (smoke_ev / smoke_dt) / (calib * 1e6),
+    }
+    if write_baseline and not quick:
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+    emit("hotpath", [
+        ["calibration_mops", calib],
+        ["calendar_chain_events_per_s",
+         core["calendar_chain_events_per_s"]],
+        ["heap_chain_events_per_s", core["heap_chain_events_per_s"]],
+        ["calendar_resched_per_s", core["calendar_resched_per_s"]],
+        ["heap_resched_per_s", core["heap_resched_per_s"]],
+        ["replay_invocations_per_s", rep["invocations_per_s"]],
+        ["replay_events_per_s", rep["events_per_s"]],
+        ["replay_us_per_invocation", rep["us_per_invocation"]],
+        ["normalized_events_per_mop", doc["normalized_events_per_mop"]],
+    ], ["metric", "value"])
+    if write_baseline and not quick:
+        print(f"# wrote {os.path.abspath(BASELINE_PATH)}")
+    return doc
+
+
+def _run_smoke():
+    """CI gate: deterministic stdout (diffed across two processes),
+    in-process bit-identity, and a calibration-normalized throughput
+    check against the recorded baseline (reported on stderr)."""
+    s1, s2, ev1, ev2, best_dt = _smoke_measure()
+    if s1 != s2 or ev1 != ev2:
+        diff = [k for k, v in s1.as_dict().items()
+                if v != getattr(s2, k)]
+        raise SystemExit(f"nondeterministic hotpath replay; fields "
+                         f"differ: {diff} (events {ev1} vs {ev2})")
+    # ---- deterministic stdout (the cross-process diff target)
+    print(f"# smoke ok: {_digest(s1)} events={ev1}")
+
+    # ---- throughput regression vs the recorded baseline (stderr only:
+    # timing numbers must not land in the diffable stdout)
+    calib = calibrate(500_000)
+    eps = ev1 / best_dt
+    normalized = eps / (calib * 1e6)
+    try:
+        with open(BASELINE_PATH) as f:
+            base = json.load(f)["normalized_smoke_events_per_mop"]
+    except (OSError, KeyError, ValueError):
+        print("hotpath-smoke: no recorded baseline "
+              "(BENCH_hotpath.json); skipping regression check",
+              file=sys.stderr)
+        return []
+    ratio = normalized / base
+    print(f"hotpath-smoke: {eps:,.0f} events/s at {calib:.1f} Mops "
+          f"calibration -> normalized {normalized:.3f} "
+          f"(baseline {base:.3f}, ratio {ratio:.2f})", file=sys.stderr)
+    if ratio < 1.0 - REGRESSION_TOLERANCE:
+        raise SystemExit(
+            f"hotpath regression: calibration-normalized events/sec "
+            f"fell to {ratio:.2f}x of the recorded baseline "
+            f"(tolerance {1.0 - REGRESSION_TOLERANCE:.2f}x)")
+    return []
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv, smoke="--smoke" in sys.argv,
+        write_baseline="--smoke" not in sys.argv)

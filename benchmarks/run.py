@@ -14,6 +14,7 @@
 | §Roofline table           | benchmarks.roofline            |
 | §2/§6 elasticity + cost   | benchmarks.elasticity          |
 | §4 congestion fan-in      | benchmarks.congestion          |
+| hot-path events/sec       | benchmarks.hotpath             |
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (cold_start, congestion, elasticity,
+    from benchmarks import (cold_start, congestion, elasticity, hotpath,
                             invocation_latency, parallel_workers,
                             payload_scaling, roofline,
                             usecase_blackscholes, usecase_jacobi,
@@ -44,6 +45,7 @@ def main() -> None:
         "roofline": roofline,
         "elasticity": elasticity,
         "congestion": congestion,
+        "hotpath": hotpath,
     }
     failures = 0
     for name, mod in mods.items():

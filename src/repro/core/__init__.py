@@ -7,8 +7,9 @@ and the LogP-derived offload model (Eq. 1).
 """
 from repro.core.accounting import ClientBill, Ledger, Price
 from repro.core.batch_system import BatchJob, BatchSystem, Node
-from repro.core.clock import (Clock, REAL_CLOCK, RealClock, ScheduledCall,
-                              VirtualClock)
+from repro.core.clock import (CalendarQueue, Clock, EVENT_QUEUES,
+                              HeapEventQueue, REAL_CLOCK, RealClock,
+                              ScheduledCall, VirtualClock)
 from repro.core.executor import (AllocationRejected, ExecutorCrash,
                                  ExecutorManager, ExecutorProcess,
                                  ExecutorWorker)
@@ -39,7 +40,8 @@ __all__ = [
     "ClientBill", "Ledger", "Price", "BatchJob", "BatchSystem", "Node",
     "ChurnTrace", "ElasticityStats", "EVENT_KINDS", "TraceEvent",
     "TraceReplayer", "replay_trace",
-    "Clock", "REAL_CLOCK", "RealClock", "ScheduledCall", "VirtualClock",
+    "CalendarQueue", "Clock", "EVENT_QUEUES", "HeapEventQueue",
+    "REAL_CLOCK", "RealClock", "ScheduledCall", "VirtualClock",
     "AllocationRejected", "ExecutorCrash", "ExecutorManager",
     "ExecutorProcess", "ExecutorWorker", "FunctionLibrary", "Invocation",
     "InvocationHeader", "RFuture", "Timeline", "payload_bytes",

@@ -13,54 +13,75 @@ warm wakeup, a one-hour lease — testable exactly and instantly, with no
 ``time.sleep`` anywhere in the suite (see ``simulation.SimulatedCluster``
 for the composed harness).
 
-Cross-thread rendezvous: a non-driver thread calling ``sleep()`` on a
-``VirtualClock`` blocks on a real event until the driver advances past
-its deadline; the driver wakes sleepers in deadline order and waits for
-each to acknowledge resumption before continuing, which keeps
-multi-threaded tests bounded and repeatable.
+Event storage (DESIGN.md §15, the million-invocation hot path): the
+clock owns an ``EventQueue``.  The default ``CalendarQueue`` is an
+array-backed calendar queue / bucket wheel — O(1) schedule, O(1)
+cancel (entry invalidation: a cancelled call is skipped when its bucket
+drains, never surgically removed) and O(1) amortized pop, with the
+bucket width adapting to the observed event cadence and far-future
+events parked in an overflow list until the wheel re-anchors onto
+them.  ``HeapEventQueue`` is the binary-heap reference implementation,
+kept selectable (``VirtualClock(queue="heap")``) because the property
+tests replay random schedule/reschedule/cancel sequences against BOTH
+and require bit-identical pop order.
+
+Threading: the driver thread owns the queue and steps it without any
+lock; other threads hand new events over through an append-only inbox
+(list.append is atomic under the GIL) that the driver folds in at each
+loop iteration, and block in ``sleep()`` on a real event until the
+driver advances past their deadline (deterministic rendezvous, bounded
+by ``rendezvous_timeout`` real seconds so a missing driver surfaces as
+an error instead of a hang).
 """
 from __future__ import annotations
 
 import heapq
-import itertools
 import threading
 import time
+from operator import attrgetter
+from threading import get_ident as _get_ident
 from typing import Any, Callable, List, Optional, Tuple
 
 
 class ScheduledCall:
     """Handle for a callback scheduled on a clock; ``cancel()``-able.
     ``repeating`` marks recurring maintenance events (heartbeats, lease
-    sweeps) which never count as pending work for idle detection."""
+    sweeps) which never count as pending work for idle detection.
+    ``seq`` is the clock-assigned FIFO tie-breaker within one instant."""
 
-    __slots__ = ("when", "fn", "args", "cancelled", "fired", "repeating",
-                 "timer", "vclock")
+    __slots__ = ("when", "seq", "fn", "args", "cancelled", "fired",
+                 "repeating", "timer", "pooled", "owner", "purged")
 
     def __init__(self, when: float, fn: Callable, args: Tuple[Any, ...],
                  repeating: bool = False):
         self.when = when
+        self.seq = 0
         self.fn = fn
         self.args = args
         self.cancelled = False
         self.fired = False
         self.repeating = repeating
         self.timer: Optional[threading.Timer] = None   # real clock only
-        self.vclock = None           # owning VirtualClock, if any
+        self.pooled = False          # recyclable fire-and-forget event
+        self.owner = None            # owning VirtualClock's cancel log
+        self.purged = False          # no longer counted as pending work
 
     def cancel(self):
+        # entry invalidation: the queue skips cancelled entries when
+        # their bucket (or heap head) drains — no structure surgery, no
+        # lock, O(1) from any thread.  The owning clock's cancel log
+        # (an atomic list append) lets the driver settle the
+        # pending-work counter EXACTLY, so idle detection returns at
+        # the current instant instead of advancing through armed
+        # repeating events toward a dead deadline.
+        if self.cancelled:
+            return
+        self.cancelled = True
         if self.timer is not None:
             self.timer.cancel()      # free the sleeping Timer thread now
-        vclock = self.vclock
-        if vclock is None:
-            self.cancelled = True
-            return
-        # virtual clock: keep the pending-work counter exact — a
-        # cancelled one-shot must stop counting as work exactly once
-        with vclock._lock:
-            if not self.cancelled:
-                self.cancelled = True
-                if not self.fired and not self.repeating:
-                    vclock._oneshot_pending -= 1
+        o = self.owner
+        if o is not None:
+            o.append(self)
 
 
 class _RepeatingHandle(ScheduledCall):
@@ -77,6 +98,311 @@ class _RepeatingHandle(ScheduledCall):
         super().cancel()
         if self.inner is not None:
             self.inner.cancel()
+
+
+#: descending (when, seq) — buckets are sorted once on entry and popped
+#: from the END, so the earliest event is always ``ready[-1]``
+_EVENT_KEY = attrgetter("when", "seq")
+
+
+class CalendarQueue:
+    """Array-backed calendar queue (bucket event wheel).
+
+    ``nbuckets`` buckets of ``width`` simulated seconds each cover the
+    wheel horizon ``[cur, end)`` in absolute bucket indices
+    (``int(when / width)``); events beyond the horizon wait in ``far``.
+    Scheduling appends to a bucket (O(1)); popping drains the current
+    bucket through ``ready`` — sorted descending by ``(when, seq)``
+    once, then consumed from the end — and scans forward to the next
+    non-empty bucket.  When the wheel empties, the queue RE-ANCHORS
+    directly onto the earliest far event instead of stepping through
+    empty buckets, so second-scale gaps cost O(far), not O(gap/width).
+
+    Events landing at or before the drain cursor (same-instant chains
+    scheduled from inside a callback, or late cross-thread arrivals)
+    are merge-inserted into ``ready`` — the insertion point is found by
+    walking from the minimum end, which is O(1) for the dominant
+    now-instant case — preserving the exact ``(when, seq)`` total
+    order the heap reference produces.
+
+    The bucket width self-tunes: every ``ADAPT_EVERY`` pops the queue
+    compares the observed mean event gap against the width and rebuilds
+    (O(live entries)) when they drift by more than 4x, so one clock
+    serves microsecond invocation storms and second-scale lease churn
+    in the same run.  Everything is a deterministic function of the
+    push sequence — adaptation reads only simulated time.
+
+    ``oneshots`` counts live non-repeating entries (cancelled entries
+    keep counting until their bucket drains and purges them — idle
+    detection re-checks through ``peek_when()``, which purges)."""
+
+    __slots__ = ("width", "inv_width", "nbuckets", "mask", "buckets",
+                 "far", "ready", "cur", "end", "wheel_count",
+                 "oneshots", "pops", "t_mark")
+
+    MIN_WIDTH = 1e-7
+    MAX_WIDTH = 1e-2
+    ADAPT_EVERY = 4096
+
+    def __init__(self, start: float = 0.0, *, width: float = 1e-6,
+                 nbuckets: int = 2048):
+        if nbuckets & (nbuckets - 1):
+            raise ValueError("nbuckets must be a power of two")
+        self.width = width
+        self.inv_width = 1.0 / width
+        self.nbuckets = nbuckets
+        self.mask = nbuckets - 1
+        self.buckets: List[List[ScheduledCall]] = \
+            [[] for _ in range(nbuckets)]
+        self.far: List[ScheduledCall] = []
+        self.ready: List[ScheduledCall] = []
+        self.cur = int(start * self.inv_width) - 1
+        self.end = self.cur + nbuckets
+        self.wheel_count = 0            # entries in buckets (not ready)
+        self.oneshots = 0               # non-repeating entries anywhere
+        self.pops = 0
+        self.t_mark = start
+
+    # ------------------------------------------------------------- write
+    def push(self, call: ScheduledCall):
+        idx = int(call.when * self.inv_width)
+        if idx > self.cur:
+            if idx < self.end:
+                self.buckets[idx & self.mask].append(call)
+                self.wheel_count += 1
+            else:
+                self.far.append(call)
+        else:
+            self._insert_ready(call)
+        if not call.repeating:
+            self.oneshots += 1
+
+    def _insert_ready(self, call: ScheduledCall):
+        """Merge into the sorted drain list.  ``ready`` is descending,
+        so the walk starts at the minimum end — a same-instant chain
+        event (the common case) breaks out immediately and lands as the
+        new minimum-after-current entries with the same instant."""
+        ready = self.ready
+        i = len(ready)
+        w, s = call.when, call.seq
+        while i:
+            c = ready[i - 1]
+            if c.when > w or (c.when == w and c.seq > s):
+                break
+            i -= 1
+        ready.insert(i, call)
+
+    # -------------------------------------------------------------- read
+    def _head(self) -> Optional[ScheduledCall]:
+        """Earliest live entry (purging cancelled ones on the way), or
+        None when the queue holds nothing live."""
+        while True:
+            ready = self.ready
+            while ready:
+                c = ready[-1]
+                if not c.cancelled:
+                    return c
+                ready.pop()
+                if not c.repeating and not c.purged:
+                    c.purged = True
+                    self.oneshots -= 1
+            if self.wheel_count:
+                cur = self.cur
+                buckets = self.buckets
+                mask = self.mask
+                while True:             # bounded by nbuckets: the wheel
+                    cur += 1            # is known non-empty
+                    b = buckets[cur & mask]
+                    if b:
+                        break
+                self.cur = cur
+                self.wheel_count -= len(b)
+                if len(b) > 1:
+                    b.sort(key=_EVENT_KEY, reverse=True)
+                # swap the drained ready list (empty here) back into
+                # the bucket slot: one list allocation per bucket
+                # transition saved on the innermost loop
+                buckets[cur & mask] = ready
+                self.ready = b
+                continue
+            if self.far:
+                self._reseed()
+                continue
+            return None
+
+    def _reseed(self):
+        """The wheel is empty: re-anchor it directly onto the earliest
+        far event (purging cancelled ones), skipping any number of
+        empty buckets in O(far)."""
+        keep: List[ScheduledCall] = []
+        min_when = None
+        for c in self.far:
+            if c.cancelled:
+                if not c.repeating and not c.purged:
+                    c.purged = True
+                    self.oneshots -= 1
+                continue
+            keep.append(c)
+            if min_when is None or c.when < min_when:
+                min_when = c.when
+        self.far = []
+        if not keep:
+            return
+        self.cur = int(min_when * self.inv_width) - 1
+        self.end = self.cur + self.nbuckets
+        buckets, mask, end = self.buckets, self.mask, self.end
+        far_again = self.far
+        for c in keep:
+            idx = int(c.when * self.inv_width)
+            if idx < end:
+                buckets[idx & mask].append(c)
+                self.wheel_count += 1
+            else:
+                far_again.append(c)
+
+    def pop_due(self, target: float) -> Optional[ScheduledCall]:
+        """Remove and return the earliest entry with ``when <= target``,
+        or None (leaving the head parked for the next call).  The head
+        search is inlined — this is the event loop's innermost call."""
+        while True:
+            ready = self.ready
+            while ready:
+                c = ready[-1]
+                if c.cancelled:
+                    ready.pop()
+                    if not c.repeating and not c.purged:
+                        c.purged = True
+                        self.oneshots -= 1
+                    continue
+                if c.when > target:
+                    return None
+                ready.pop()
+                if not c.repeating:
+                    self.oneshots -= 1
+                self.pops += 1
+                if self.pops >= self.ADAPT_EVERY:
+                    self._adapt(c.when)
+                return c
+            if self.wheel_count:
+                cur = self.cur
+                buckets = self.buckets
+                mask = self.mask
+                while True:             # bounded by nbuckets: the wheel
+                    cur += 1            # is known non-empty
+                    b = buckets[cur & mask]
+                    if b:
+                        break
+                self.cur = cur
+                self.wheel_count -= len(b)
+                if len(b) > 1:
+                    b.sort(key=_EVENT_KEY, reverse=True)
+                # swap the drained ready list (empty here) back into
+                # the bucket slot: one list allocation per bucket
+                # transition saved on the innermost loop
+                buckets[cur & mask] = ready
+                self.ready = b
+                continue
+            if self.far:
+                self._reseed()
+                continue
+            return None
+
+    def peek_when(self) -> Optional[float]:
+        c = self._head()
+        return c.when if c is not None else None
+
+    # -------------------------------------------------------- adaptation
+    def _adapt(self, now: float):
+        """Every ``ADAPT_EVERY`` pops: retune the bucket width to the
+        observed mean event gap (deterministic — reads simulated time
+        only) and rebuild when it drifted by more than 4x."""
+        self.pops = 0
+        span = now - self.t_mark
+        self.t_mark = now
+        if span <= 0.0:
+            return                      # same-instant burst: no signal
+        gap = span / self.ADAPT_EVERY
+        if gap < self.MIN_WIDTH:
+            gap = self.MIN_WIDTH
+        elif gap > self.MAX_WIDTH:
+            gap = self.MAX_WIDTH
+        w = self.width
+        if gap > 4.0 * w or 4.0 * gap < w:
+            self._rebuild(gap, now)
+
+    def _rebuild(self, width: float, now: float):
+        entries = []
+        for lst in (self.ready, *self.buckets, self.far):
+            for c in lst:
+                if c.cancelled:
+                    c.purged = True   # counter is re-derived below; a
+                    # pending cancel-log entry must not decrement later
+                else:
+                    entries.append(c)
+        for b in self.buckets:
+            if b:
+                b.clear()
+        self.far = []
+        self.ready = []
+        self.width = width
+        self.inv_width = 1.0 / width
+        self.cur = int(now * self.inv_width) - 1
+        self.end = self.cur + self.nbuckets
+        self.wheel_count = 0
+        self.oneshots = 0
+        for c in entries:
+            self.push(c)
+
+
+class HeapEventQueue:
+    """Binary-heap reference implementation of the event-queue
+    contract: identical ``(when, seq)`` pop order, used by the
+    calendar-queue equivalence property tests and selectable via
+    ``VirtualClock(queue="heap")``."""
+
+    __slots__ = ("heap", "oneshots")
+
+    def __init__(self, start: float = 0.0):
+        del start
+        self.heap: List[Tuple[float, int, ScheduledCall]] = []
+        self.oneshots = 0
+
+    def push(self, call: ScheduledCall):
+        heapq.heappush(self.heap, (call.when, call.seq, call))
+        if not call.repeating:
+            self.oneshots += 1
+
+    def _purge_head(self) -> bool:
+        heap = self.heap
+        while heap:
+            c = heap[0][2]
+            if not c.cancelled:
+                return True
+            heapq.heappop(heap)
+            if not c.repeating and not c.purged:
+                c.purged = True
+                self.oneshots -= 1
+        return False
+
+    def pop_due(self, target: float) -> Optional[ScheduledCall]:
+        if not self._purge_head():
+            return None
+        when, _, c = self.heap[0]
+        if when > target:
+            return None
+        heapq.heappop(self.heap)
+        if not c.repeating:
+            self.oneshots -= 1
+        return c
+
+    def peek_when(self) -> Optional[float]:
+        if not self._purge_head():
+            return None
+        return self.heap[0][0]
+
+
+#: queue implementations by name (VirtualClock(queue=...))
+EVENT_QUEUES = {"calendar": CalendarQueue, "heap": HeapEventQueue}
 
 
 class Clock:
@@ -110,14 +436,29 @@ class Clock:
         live handle.  The congestion layer re-integrates transfer
         completion times whenever a transfer starts or ends — the next
         completion event moves constantly, and this is the one
-        primitive it needs: cancel-and-rearm as a single call, with a
-        no-op fast path when the instant is unchanged.  A call that
-        already fired (or was cancelled) is simply re-armed fresh."""
+        primitive it needs: cancel-and-rearm as a single call (O(1) on
+        the calendar queue: flag + bucket append), with a no-op fast
+        path when the instant is unchanged.  A call that already fired
+        (or was cancelled) is simply re-armed fresh."""
         if not call.cancelled and not call.fired and call.when == when:
             return call               # already armed at that instant
         call.cancel()
         return self._call_at(when, call.fn, call.args,
                              repeating=call.repeating)
+
+    def call_later_discard(self, delay: float, fn: Callable,
+                           *args: Any) -> None:
+        """``call_later`` for fire-and-forget events: the caller gets
+        NO handle and promises never to cancel.  VirtualClock recycles
+        the event object through a free list — the two hottest events
+        of a replay (service completion, next arrival) each save an
+        allocation.  Default implementation just forwards."""
+        self._call_at(self.now() + max(0.0, delay), fn, args)
+
+    def call_at_discard(self, when: float, fn: Callable,
+                        *args: Any) -> None:
+        """``call_at`` variant of ``call_later_discard``."""
+        self._call_at(when, fn, args)
 
     def call_repeating(self, interval: float, fn: Callable,
                        *args: Any) -> ScheduledCall:
@@ -136,7 +477,6 @@ class Clock:
                 handle.inner = self._call_at(
                     self.now() + interval, tick, (), repeating=True)
                 handle.when = handle.inner.when   # next fire instant
-
         handle.inner = self._call_at(self.now() + interval, tick, (),
                                      repeating=True)
         return handle
@@ -194,22 +534,32 @@ class VirtualClock(Clock):
     block until the driver advances past their deadline (deterministic
     rendezvous, bounded by ``rendezvous_timeout`` real seconds so a
     missing driver surfaces as an error instead of a hang).
+
+    ``queue`` selects the event store: ``"calendar"`` (default — the
+    O(1) bucket wheel) or ``"heap"`` (the reference binary heap); both
+    produce bit-identical event order.  The driver steps the store with
+    NO lock — cross-thread scheduling goes through ``_inbox`` (atomic
+    appends, folded in by the driver each loop iteration), and the only
+    remaining lock guards the sleeper rendezvous list.
     """
 
     virtual = True
 
     def __init__(self, start: float = 0.0, *,
-                 rendezvous_timeout: float = 30.0):
+                 rendezvous_timeout: float = 30.0,
+                 queue: str = "calendar"):
         self._now = float(start)
-        self._heap: List[Tuple[float, int, ScheduledCall]] = []
-        # live one-shot events (scheduled, not yet fired or cancelled):
-        # idle detection is a counter read, and the event loop keeps a
-        # single heap — no mirror-heap traffic on the hot path
-        self._oneshot_pending = 0
-        self._seq = itertools.count()
-        # plain Lock, not RLock: nothing schedules while holding it
-        # (callbacks run after the event-loop critical section) and the
-        # uncontended acquire is measurably cheaper at 100k-event scale
+        self._queue = EVENT_QUEUES[queue](start)
+        self._inbox: List[ScheduledCall] = []
+        self._call_pool: List[ScheduledCall] = []   # recycled events
+        # handles cancelled from ANY thread land here (atomic append);
+        # the driver settles the pending-work counter from it in
+        # _has_work, restoring the exact idle-detection semantics of
+        # the old eager per-cancel counter without a lock
+        self._cancel_log: List[ScheduledCall] = []
+        self._seq = 0
+        # the lock guards only the waiter list; the event store is
+        # driver-private (non-drivers hand events over via _inbox)
         self._lock = threading.Lock()
         self._driver = threading.current_thread()
         self._driver_ident = threading.get_ident()
@@ -243,36 +593,151 @@ class VirtualClock(Clock):
         self._driver = thread or threading.current_thread()
         self._driver_ident = self._driver.ident   # None until started
 
+    def call_later(self, delay: float, fn: Callable,
+                   *args: Any) -> ScheduledCall:
+        """One-shot in ``delay`` seconds — overridden to inline the
+        driver fast path (one frame instead of three: this is half the
+        scheduling traffic of a replay)."""
+        now = self._now
+        call = ScheduledCall(now + delay if delay > 0.0 else now,
+                             fn, args)
+        call.owner = self._cancel_log
+        if _get_ident() == self._driver_ident:
+            call.seq = self._seq
+            self._seq += 1
+            self._queue.push(call)
+        else:
+            self._inbox.append(call)
+        return call
+
+    def call_at(self, when: float, fn: Callable,
+                *args: Any) -> ScheduledCall:
+        """One-shot at absolute ``when`` — same inlined fast path."""
+        call = ScheduledCall(when, fn, args)
+        call.owner = self._cancel_log
+        if _get_ident() == self._driver_ident:
+            if when < self._now:
+                call.when = self._now
+            call.seq = self._seq
+            self._seq += 1
+            self._queue.push(call)
+        else:
+            self._inbox.append(call)
+        return call
+
+    def call_later_discard(self, delay: float, fn: Callable,
+                           *args: Any) -> None:
+        """Fire-and-forget ``call_later``: the event object comes from
+        (and returns to) a free list — no allocation on the replay's
+        two hottest scheduling sites.  DRIVER THREAD ONLY (the two
+        callers are clock callbacks, which always run on the driver) —
+        the identity check is skipped on this innermost path."""
+        now = self._now
+        when = now + delay if delay > 0.0 else now
+        pool = self._call_pool
+        if pool:
+            call = pool.pop()
+            call.when = when
+            call.fn = fn
+            call.args = args
+            call.cancelled = False
+            call.fired = False
+        else:
+            call = ScheduledCall(when, fn, args)
+            call.pooled = True
+        call.seq = self._seq
+        self._seq += 1
+        self._queue.push(call)
+
+    def call_at_discard(self, when: float, fn: Callable,
+                        *args: Any) -> None:
+        """Fire-and-forget ``call_at``; DRIVER THREAD ONLY (see
+        ``call_later_discard``)."""
+        if when < self._now:
+            when = self._now
+        pool = self._call_pool
+        if pool:
+            call = pool.pop()
+            call.when = when
+            call.fn = fn
+            call.args = args
+            call.cancelled = False
+            call.fired = False
+        else:
+            call = ScheduledCall(when, fn, args)
+            call.pooled = True
+        call.seq = self._seq
+        self._seq += 1
+        self._queue.push(call)
+
     def _call_at(self, when: float, fn: Callable, args: Tuple[Any, ...],
                  *, repeating: bool = False) -> ScheduledCall:
-        with self._lock:                 # clamp under the lock: _now
-            # may be advancing on the driver thread concurrently
-            now = self._now
-            call = ScheduledCall(when if when > now else now, fn, args,
-                                 repeating=repeating)
-            call.vclock = self
-            heapq.heappush(self._heap, (call.when, next(self._seq), call))
-            if not repeating:
-                self._oneshot_pending += 1
+        call = ScheduledCall(when, fn, args, repeating=repeating)
+        call.owner = self._cancel_log
+        if self.is_driver():
+            if when < self._now:
+                call.when = self._now
+            call.seq = self._seq
+            self._seq += 1
+            self._queue.push(call)
+        else:
+            # cross-thread handoff: list.append is atomic under the
+            # GIL; the driver folds the inbox in (assigning seq and
+            # clamping when) before its next queue operation
+            self._inbox.append(call)
         return call
+
+    def _drain_inbox(self):
+        inbox = self._inbox
+        q = self._queue
+        while inbox:
+            try:
+                call = inbox.pop(0)
+            except IndexError:          # raced another drain (defensive)
+                break
+            if call.when < self._now:
+                call.when = self._now
+            call.seq = self._seq
+            self._seq += 1
+            q.push(call)
 
     # ---------------------------------------------------------- stepping
     def _has_work(self) -> bool:
         """Pending WORK: live one-shot callbacks or sleeping threads.
         Repeating maintenance events (heartbeats, sweeps) never count —
-        an armed sweeper must not make idle unreachable."""
-        return self._oneshot_pending > 0 or bool(self._waiters)
+        an armed sweeper must not make idle unreachable.  The cancel
+        log is settled first, so a cancelled one-shot buried behind an
+        armed sweeper cannot report phantom work (which would make
+        ``run_until_idle`` advance time toward a dead deadline)."""
+        if self._inbox and self.is_driver():
+            self._drain_inbox()      # inbox entries count once pushed
+        log = self._cancel_log
+        if log:
+            q = self._queue
+            while log:
+                try:
+                    c = log.pop()
+                except IndexError:   # raced another driver call
+                    break
+                if c.repeating or c.fired or c.purged:
+                    continue
+                c.purged = True
+                q.oneshots -= 1
+        return (self._queue.oneshots > 0 or bool(self._inbox)
+                or bool(self._waiters))
 
     def _next_due(self) -> Optional[float]:
         """Earliest pending instant: a scheduled callback (one-shot or
         repeating) or a sleeping thread's deadline."""
-        with self._lock:
-            heap = self._heap
-            while heap and heap[0][2].cancelled:
-                heapq.heappop(heap)
-            next_ev = heap[0][0] if heap else None
-            next_wait = min((w.deadline for w in self._waiters),
-                            default=None)
+        if self._inbox and self.is_driver():
+            self._drain_inbox()
+        next_ev = self._queue.peek_when()
+        if self._waiters:
+            with self._lock:
+                next_wait = min((w.deadline for w in self._waiters),
+                                default=None)
+        else:
+            next_wait = None
         if next_ev is None:
             return next_wait
         if next_wait is None:
@@ -296,42 +761,81 @@ class VirtualClock(Clock):
 
     def run_until(self, target: float):
         """Advance to ``target``, firing every due callback and waking
-        every due sleeper along the way, in time order.  One lock
-        acquisition per step: next-due detection, head pruning and the
-        pop are a single critical section (this loop runs hundreds of
-        thousands of times in large replays)."""
-        heap = self._heap
-        while True:
-            call = None
-            with self._lock:
-                while heap and heap[0][2].cancelled:
-                    heapq.heappop(heap)
-                next_ev = heap[0][0] if heap else None
-                next_wait = min((w.deadline for w in self._waiters),
-                                default=None) if self._waiters else None
-                t = (next_ev if next_wait is None
-                     else next_wait if next_ev is None
-                     else min(next_ev, next_wait))
-                if t is None or t > target:
+        every due sleeper along the way, in time order.  The fast loop
+        (no sleepers registered — every large replay) is lock-free:
+        pop, stamp time, fire."""
+        q = self._queue
+        pop_due = q.pop_due
+        inbox = self._inbox
+        waiters = self._waiters
+        pool = self._call_pool
+        n_run = 0
+        try:
+            while True:
+                if inbox:
+                    self._drain_inbox()
+                if waiters:
+                    self.events_run += n_run
+                    n_run = 0
+                    if not self._step_with_waiters(target):
+                        break
+                    continue
+                call = pop_due(target)
+                if call is None:
                     break
-                if next_ev is not None and next_ev <= t:
-                    when, _, call = heapq.heappop(heap)
-                    call.fired = True
-                    if not call.repeating:
-                        self._oneshot_pending -= 1
-                    if when > self._now:
-                        self._now = when
-                elif t > self._now:  # the due thing is a sleeper deadline
-                    self._now = t
-            if call is not None:
-                self.events_run += 1
+                when = call.when
+                if when > self._now:
+                    self._now = when
+                call.fired = True
+                n_run += 1
                 call.fn(*call.args)
+                if call.pooled:
+                    # fire-and-forget event: nobody holds a handle
+                    # (the discard contract) — recycle the object
+                    call.args = None
+                    pool.append(call)
+        finally:
+            # exception-safe flush: a raising callback must not lose
+            # the count of events that DID run (events_run doubles as
+            # a determinism digest)
+            self.events_run += n_run
+        if target > self._now:
+            self._now = target
+        if waiters:
+            self._wake_due_waiters()
+
+    def _step_with_waiters(self, target: float) -> bool:
+        """One careful step while sleeper threads are registered: fire
+        the next event OR wake the next due sleeper, whichever comes
+        first (events win ties, exactly like the historical single-heap
+        loop).  Returns False when nothing is due at or before
+        ``target``."""
+        with self._lock:
+            next_wait = min((w.deadline for w in self._waiters),
+                            default=None)
+        next_ev = self._queue.peek_when()
+        if (next_ev is not None and next_ev <= target
+                and (next_wait is None or next_ev <= next_wait)):
+            call = self._queue.pop_due(target)
+            if call is None:            # raced a cancel (defensive)
+                return True
+            if call.when > self._now:
+                self._now = call.when
+            call.fired = True
+            self.events_run += 1
+            call.fn(*call.args)
+            if call.pooled:              # recycle here too: sleeper
+                call.args = None         # threads must not disable the
+                self._call_pool.append(call)   # discard free list
             if self._waiters:
                 self._wake_due_waiters()
-        with self._lock:
-            self._now = max(self._now, target)
-        if self._waiters:
+            return True
+        if next_wait is not None and next_wait <= target:
+            if next_wait > self._now:
+                self._now = next_wait
             self._wake_due_waiters()
+            return True
+        return False
 
     def advance(self, dt: float):
         """Move time forward by ``dt`` simulated seconds."""
@@ -353,6 +857,9 @@ class VirtualClock(Clock):
                 if t is not None and (max_time is None or t <= max_time):
                     self.run_until(t)
                     continue
+                if t is None and not self._has_work():
+                    continue          # "work" was only cancelled
+                    # entries — the _next_due purge settled the counter
                 break                 # work exists but beyond max_time
             if self._settle_after_rendezvous(
                     include_repeating=False) == "work":

@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.accounting import Ledger
 from repro.core.clock import Clock, REAL_CLOCK
+from threading import get_ident as _get_ident
 from repro.core.functions import FunctionLibrary
 from repro.core.invocation import Invocation, payload_bytes
 from repro.core.lease import Lease, LeaseRequest, LeaseState
@@ -92,16 +93,45 @@ class ExecutorWorker(threading.Thread):
         self._vactive = False
         self._inflight_id: Optional[int] = None
         self._pending: Dict[int, Invocation] = {}
+        # (version, idx) -> (fn, svc) memo: the virtual hot path runs
+        # ONE symbol millions of times; a version bump on register
+        # invalidates (indices shift when symbols re-sort)
+        self._entry_key = (-1, -1)
+        self._entry_val = (None, 0.0)
 
     # ------------------------------------------------------------- client
     def submit(self, inv: Invocation):
         if not self.alive_flag or self._stopped:
             raise ExecutorCrash(f"worker {self.name} is dead")
-        inv.timeline.t_submit = self.clock.now()
+        clock = self.clock
+        inv.timeline.t_submit = clock._now if clock.virtual \
+            else clock.now()
         if inv.future is not None:
-            inv.future._clock = self.clock
-        if self.clock.virtual:
-            self._vsubmit(inv)
+            inv.future._clock = clock
+        if clock.virtual:
+            # inlined _vsubmit + kick: when the worker is idle, the
+            # invocation starts directly (skipping a deque round-trip)
+            # — the dominant case of the million-invocation replay
+            with self._submit_lock:
+                self._pending[inv.header.invocation_id] = inv
+                if self._vactive:
+                    self._vqueue.append(inv)
+                    start = None
+                elif self._vqueue:       # defensive: FIFO order even if
+                    self._vqueue.append(inv)   # idle with a backlog
+                    self._vactive = True
+                    start = self._vqueue.popleft()
+                else:
+                    self._vactive = True
+                    start = inv
+            if start is not None:
+                if _get_ident() == clock._driver_ident:
+                    self._vexec(start)  # same thread, same instant: the
+                    # entry cannot have been crashed away in between
+                else:
+                    # non-driver submit (ServeEngine): execution stays
+                    # a driver-side event, exactly as before
+                    clock.call_later(0.0, self._vstart, start)
         else:
             with self._submit_lock:
                 if not self.alive_flag or self._stopped:
@@ -215,14 +245,6 @@ class ExecutorWorker(threading.Thread):
     # _vqueue/_vactive/_pending/_inflight_id are guarded by
     # _submit_lock: non-driver threads may submit while driver-side
     # clock callbacks dispatch (ServeEngine, backup_submit, rendezvous)
-    def _vsubmit(self, inv: Invocation):
-        with self._submit_lock:
-            self._pending[inv.header.invocation_id] = inv
-            self._vqueue.append(inv)
-            nxt = self._vkick_locked(inline=True)
-        if nxt is not None:
-            self._vstart(nxt)
-
     def _vkick_locked(self, inline: bool = False):
         """Start the next queued invocation if the worker is free.
         Scheduled AFTER a completion event at the same instant, so a
@@ -245,12 +267,24 @@ class ExecutorWorker(threading.Thread):
         return None
 
     def _vstart(self, inv: Invocation):
+        """Scheduled-event entry: re-validate against crashes that may
+        have hit between scheduling and firing, then execute."""
         with self._submit_lock:
             if inv.header.invocation_id not in self._pending:
                 self._vactive = False     # crashed while queued
                 self._vkick_locked()
                 return
-        inv.tier = self.tier
+        self._vexec(inv)
+
+    def _vexec(self, inv: Invocation):
+        """Execute one invocation (virtual mode).  Inline callers
+        (driver thread, same instant as the kick that popped ``inv``)
+        come here directly — nothing can have crashed the worker in
+        between, so the pending re-check is skipped."""
+        la = self._last_activity          # tier property, inlined
+        # virtual-only path: _now is the clock's lock-free time field
+        inv.tier = Tier.HOT if (la is not None and self.clock._now - la
+                                <= self.hot_period) else Tier.WARM
         inv.sandbox = self.sandbox
         if not self.alive_flag or (self.fault_rate and
                                    self._rng.random() < self.fault_rate):
@@ -263,9 +297,15 @@ class ExecutorWorker(threading.Thread):
             self._fail_pending(ExecutorCrash(
                 f"worker {self.name} terminated"))
             return
-        svc = self.library.service_time_of(inv.header.fn_index)
+        lib = self.library
         try:
-            fn = self.library.by_index(inv.header.fn_index)
+            key = (lib.version, inv.header.fn_index)
+            if key == self._entry_key:
+                fn, svc = self._entry_val
+            else:
+                fn, svc = lib.entry(inv.header.fn_index)
+                self._entry_key = key
+                self._entry_val = (fn, svc)
             result = fn(inv.payload)
         except BaseException as e:  # noqa: BLE001 — forwarded to client
             with self._submit_lock:
@@ -277,9 +317,14 @@ class ExecutorWorker(threading.Thread):
                 self._vactive = False
                 self._vkick_locked()
             return
-        with self._submit_lock:
-            self._inflight_id = inv.header.invocation_id
-        self.clock.call_later(svc, self._vfinish, inv, result, svc)
+        # single GIL-atomic store: concurrent readers (crash from
+        # another thread) see either the old or the new id, both safe
+        self._inflight_id = inv.header.invocation_id
+        # discard variant: the completion event is never cancelled
+        # (crashes leave it to no-op via the pending check), so the
+        # event object recycles through the clock's free list
+        self.clock.call_later_discard(svc, self._vfinish, inv, result,
+                                      svc)
 
     def _vfinish(self, inv: Invocation, result, svc: float):
         with self._submit_lock:
@@ -288,16 +333,22 @@ class ExecutorWorker(threading.Thread):
             present = self._pending.pop(inv.header.invocation_id, None)
         if present is None:
             return                    # crashed mid-execution
-        inv.timeline.exec_time = svc
-        inv.timeline.dispatch_measured = max(
-            0.0, self.clock.now() - svc
-            - inv.timeline.t_submit)      # queueing delay
+        tl = inv.timeline
+        tl.exec_time = svc
+        d = self.clock._now - svc - tl.t_submit    # queueing delay
+        tl.dispatch_measured = d if d > 0.0 else 0.0
         self._complete(inv, result, svc)
+        # inlined kick (this runs on the driver — _vfinish is a clock
+        # event): pop the FIFO successor or go idle, one lock
         with self._submit_lock:
-            self._vactive = False
-            nxt = self._vkick_locked(inline=True)
+            q = self._vqueue
+            if q:
+                nxt = q.popleft()         # _vactive stays True
+            else:
+                nxt = None
+                self._vactive = False
         if nxt is not None:
-            self._vstart(nxt)             # successor, same instant
+            self._vexec(nxt)              # successor, same instant
 
     def _complete(self, inv: Invocation, result, exec_time: float):
         """Deliver the result home and retire the invocation — shared
@@ -308,10 +359,13 @@ class ExecutorWorker(threading.Thread):
         sees a dead connection and retries elsewhere (§3.5)."""
         derr: Optional[BaseException] = None
         try:
-            inv.finish_transport(payload_bytes(result), net=self.net)
+            inv.finish_transport(0 if result is None
+                                 else payload_bytes(result),
+                                 net=self.net)
         except ChannelError as ce:
             derr = ExecutorCrash(f"result return failed: {ce}")
-        self._last_activity = self.clock.now()
+        clk = self.clock
+        self._last_activity = clk._now if clk.virtual else clk.now()
         self.busy_seconds += exec_time
         self.n_invocations += 1
         self.on_done(self, inv, exec_time, None)
@@ -550,6 +604,9 @@ class ExecutorManager:
         # before — are not billed
         proc = self._processes.get(worker.lease_id)
         if proc is not None:
-            # off the critical path: accounting after completion (§5.4)
+            # off the critical path: accounting after completion
+            # (§5.4).  Always under the ledger lock: even during a
+            # virtual-clock replay another thread may legitimately
+            # read bill()/totals() concurrently
             self.ledger.add_compute(proc.lease.request.client_id,
                                     exec_time)

@@ -17,6 +17,7 @@ from typing import Callable, Dict, List
 class FunctionLibrary:
     name: str
     code_size: int = 7_880          # bytes written at cold start
+    version: int = 0                # bumped on register (cache key)
     _fns: Dict[str, Callable] = field(default_factory=dict)
     _symbols: List[str] = field(default_factory=list)
     _service_times: Dict[str, float] = field(default_factory=dict)
@@ -31,7 +32,16 @@ class FunctionLibrary:
         self._fns[name] = fn
         self._service_times[name] = service_time_s
         self._symbols = sorted(self._fns)      # both sides sort symbols
+        self.version += 1                      # invalidates entry caches
         return self
+
+    def entry(self, idx: int) -> tuple:
+        """(callable, modeled service time) for one symbol index — the
+        per-invocation executor lookup as a single call.  Workers cache
+        the result keyed by ``version`` (registration re-sorts symbols
+        and shifts indices, so the version bump invalidates)."""
+        name = self._symbols[idx]
+        return self._fns[name], self._service_times.get(name, 0.0)
 
     def function(self, fn: Callable) -> Callable:
         """Decorator form of register()."""

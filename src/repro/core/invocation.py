@@ -16,7 +16,7 @@ import itertools
 import sys
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, List, NamedTuple, Optional
 
 import numpy as np
 
@@ -28,6 +28,10 @@ from repro.core.transport import fabric_params_for_net
 SLOTS = {"slots": True} if sys.version_info >= (3, 10) else {}
 
 _inv_ids = itertools.count(1)
+
+#: free list of recycled invocation records (``Invocation.make`` pops,
+#: ``Invocation.release`` pushes; list ops are GIL-atomic)
+_POOL: List["Invocation"] = []
 
 
 def payload_bytes(obj: Any) -> int:
@@ -100,6 +104,12 @@ class _LazyEvent:
         self._flag = False
         self._ev = None
 
+    def _reset(self):
+        """Recycle (pool reuse): forget the flag AND any Event a past
+        waiter built — the next lifecycle must not see a stale set."""
+        self._flag = False
+        self._ev = None
+
     def is_set(self) -> bool:
         return self._flag
 
@@ -146,11 +156,31 @@ class RFuture:
     # executor side -----------------------------------------------------
     def _fulfill(self, result: Any):
         self._result = result
-        self._event.set()
+        ev = self._event                 # _LazyEvent.set, inlined
+        ev._flag = True
+        waiter = ev._ev
+        if waiter is not None:
+            waiter.set()
+        cb = self.invocation.on_complete
+        if cb is not None:
+            cb(self.invocation, None)
 
     def _fail(self, err: BaseException):
         self._error = err
+        already = self._event.is_set()
         self._event.set()
+        if already:
+            return                   # a second fault on an already-
+            # settled future must not re-fire the completion hook
+        cb = self.invocation.on_complete
+        if cb is not None:
+            cb(self.invocation, err)
+
+    def _reset(self):
+        self._event._reset()
+        self._result = None
+        self._error = None
+        self._clock = None
 
     # client side -------------------------------------------------------
     def done(self) -> bool:
@@ -196,12 +226,66 @@ class Invocation:
 
     @classmethod
     def make(cls, fn_index: int, fn_name: str, payload: Any,
-             sandbox: Sandbox = Sandbox.BARE) -> "Invocation":
-        b_in = payload_bytes(payload)
-        hdr = InvocationHeader(fn_index, next(_inv_ids), return_buffer=0)
+             sandbox: Sandbox = Sandbox.BARE,
+             nbytes: Optional[int] = None) -> "Invocation":
+        """Mint (or recycle) one invocation record.  ``nbytes`` skips
+        the payload-size walk when the caller already knows it (replay
+        loops send the same payload object millions of times).
+
+        Recycling: ``release()`` resets a COMPLETED record — invocation
+        + timeline + future, one composite — and parks it on a
+        free list this constructor pops from, so a million-invocation
+        replay allocates a bounded working set instead of a million
+        short-lived object graphs (each a future↔invocation reference
+        CYCLE that only the cycle collector could reclaim).  Records
+        are only recycled by owners who know no reference survives (the
+        trace replayer, after folding the timeline into its stats)."""
+        b_in = payload_bytes(payload) if nbytes is None else nbytes
+        hdr = InvocationHeader(fn_index, next(_inv_ids), 0)
+        pool = _POOL
+        if pool:
+            try:
+                inv = pool.pop()
+            except IndexError:           # raced another maker
+                inv = None
+            if inv is not None:
+                inv.header = hdr
+                inv.fn_name = fn_name
+                inv.payload = payload
+                inv.bytes_in = b_in
+                # the future was already reset by release(); the
+                # stale timeline is NOT zeroed — every field is
+                # overwritten before it is read on the success path
+                # (t_submit/net_in at dispatch, exec_time/
+                # dispatch_measured at completion, overhead/net_out in
+                # finish_transport), and failed records are never
+                # recycled or read
+                inv.tier = Tier.HOT
+                inv.sandbox = sandbox
+                inv.retries = 0
+                inv.on_complete = None
+                inv.via = None
+                return inv
         inv = cls(hdr, fn_name, payload, b_in, sandbox=sandbox)
         inv.future = RFuture(inv)
         return inv
+
+    def release(self):
+        """Return this record to the free list, fully reset.  ONLY for
+        owners that know nothing holds the invocation, its timeline or
+        its future anymore (see ``make``); everyone else just drops
+        references."""
+        self.payload = None
+        self.via = None
+        self.on_complete = None
+        fut = self.future                # future + event reset, inlined
+        fut._result = None
+        fut._error = None
+        fut._clock = None
+        ev = fut._event
+        ev._flag = False
+        ev._ev = None
+        _POOL.append(self)
 
     def finish_transport(self, bytes_out: int,
                          net: Optional[NetParams] = None):
@@ -214,14 +298,14 @@ class Invocation:
         dispatch stamped ``via``/``net_in``): both wire components are
         modeled from it so their RTTs stay paper-comparable."""
         ch = self.via
+        tl = self.timeline
         if ch is not None:
-            self.timeline.net_out = ch.deliver_result(bytes_out)
-            net = ch.fabric.net
+            tl.net_out = ch.deliver_result(bytes_out)
+            tl.overhead = ch.fabric.tier_overhead(self.tier,
+                                                  self.sandbox)
         elif net is not None:
             params = fabric_params_for_net(net)
-            self.timeline.net_in = params.message_time(
+            tl.net_in = params.message_time(
                 self.bytes_in + InvocationHeader.SIZE)
-            self.timeline.net_out = params.message_time(bytes_out)
-        if net is not None:
-            self.timeline.overhead = tier_overhead(self.tier, self.sandbox,
-                                                   net)
+            tl.net_out = params.message_time(bytes_out)
+            tl.overhead = tier_overhead(self.tier, self.sandbox, net)

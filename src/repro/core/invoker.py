@@ -42,6 +42,8 @@ from repro.core.transport import (Channel, ChannelDropped, ChannelError,
 
 ALWAYS_WARM_INVOCATIONS = "always_warm"
 
+_HDR_SIZE = InvocationHeader.SIZE        # hoisted off the dispatch loop
+
 
 class AllocationFailed(RuntimeError):
     pass
@@ -407,6 +409,17 @@ class Invoker:
         self._dispatch(inv, worker_hint)
         return self._wrap_retries(inv, fn_name, payload)
 
+    def submit_prepared(self, inv: Invocation) -> Invocation:
+        """Dispatch a caller-built (possibly pooled) invocation record
+        — the replay hot path: the caller pre-resolved the function
+        index and payload size, and observes completion through
+        ``inv.on_complete`` instead of a future wrapper.  Raises
+        ``AllocationFailed`` when no worker is reachable, exactly like
+        ``submit``."""
+        self.stats.invocations += 1
+        self._dispatch(inv)
+        return inv
+
     def invoke(self, fn_name: str, payload: Any,
                timeout: Optional[float] = 60.0) -> Any:
         """Blocking invocation."""
@@ -430,24 +443,29 @@ class Invoker:
         delays = None                     # built only if a retry happens
         for sweep in range(self.max_retries + 1):
             # first sweep rides the validated snapshot (dispatch fast
-            # path); any failure below invalidates it, so retry sweeps
-            # revalidate against live leases/workers
-            pairs = self._worker_pairs(cached=sweep == 0)
+            # path, inlined — this is the innermost replay loop); any
+            # failure below invalidates it, so retry sweeps revalidate
+            # against live leases/workers
+            pairs = self._pairs_cache if sweep == 0 else None
+            if pairs is None:
+                pairs = self._worker_pairs()
             if not pairs:
                 pairs = self._worker_pairs()        # snapshot was stale
             if not pairs:
                 raise AllocationFailed(
                     f"{self.client_id}: no live executor workers")
+            n_pairs = len(pairs)
             start = (worker_hint if worker_hint is not None
-                     else next(self._rr)) % len(pairs)
+                     else next(self._rr)) % n_pairs
+            size = inv.bytes_in + _HDR_SIZE
             last_err: Optional[BaseException] = None
             saw_drop = False
-            for k in range(len(pairs)):
-                worker, conn, ch = pairs[(start + k) % len(pairs)]
+            for k in range(n_pairs):
+                worker, conn, ch = pairs[(start + k) % n_pairs]
                 if ch.closed:                 # connection already dropped
                     continue
                 try:
-                    t_in = ch.send(inv.bytes_in + InvocationHeader.SIZE)
+                    t_in = ch.send(size)
                 except ChannelPartitioned as e:
                     self.stats.dispatch_faults += 1
                     self._note_fault(conn.manager.server_id)

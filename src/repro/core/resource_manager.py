@@ -89,7 +89,7 @@ class AvailabilityBus:
             # an explicit bus rate overrides them for delta traffic
             ch = self.fabric.datagram(self.ENDPOINT, ep,
                                       drop_rate=self._drop_rate or None)
-            self._subs.append((cb, ch))
+            self._subs = self._subs + [(cb, ch)]   # replace, not mutate
 
     def unsubscribe(self, cb: Callable[[dict], None]):
         """Detach a subscriber and retire its datagram channel (churned
@@ -107,7 +107,9 @@ class AvailabilityBus:
 
     def publish(self, delta: dict):
         with self._lock:
-            subs = list(self._subs)
+            subs = self._subs           # snapshot semantics preserved:
+            # subscribe/unsubscribe REPLACE the list object (below), so
+            # iterating the current reference is safe without a copy
             self.multicasts += 1
         delivered = dropped = 0
         for cb, ch in subs:

@@ -132,8 +132,12 @@ class SimulatedCluster:
                  seed: int = 0, start_time: float = 0.0,
                  fabric: Union[str, FabricParams, None] = None,
                  drop_rate: float = 0.0,
-                 topology: Optional[Topology] = None):
-        self.clock = VirtualClock(start_time)
+                 topology: Optional[Topology] = None,
+                 event_queue: str = "calendar"):
+        # event_queue selects the clock's event store ("calendar" —
+        # the §15 bucket wheel — or "heap", the reference binary
+        # heap), so any full scenario can A/B the two implementations
+        self.clock = VirtualClock(start_time, queue=event_queue)
         self.ledger = Ledger()
         self.seed = seed
         # one shared fabric: "rdma" by default, or any FABRICS preset /

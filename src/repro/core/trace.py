@@ -33,9 +33,11 @@ This module makes that claim testable:
   GB-s, HPC-discounted idle capacity) vs a static reservation sized for
   peak demand at full price.
 
-A 1000-node / 100k-invocation replay completes in a few seconds of wall
-clock with zero ``time.sleep`` — the VirtualClock (PR 1) and transport
-fabric (PR 2) were built exactly so this scenario class is cheap.
+A 1000-node / 1M-invocation churn+storm replay completes bit-identically
+per seed in seconds of wall clock with zero ``time.sleep`` and a
+bounded working set — the VirtualClock's calendar-queue event core,
+the incremental congestion engine and the pooled/streaming replay path
+(DESIGN.md §15) exist exactly so this scenario class stays cheap.
 """
 from __future__ import annotations
 
@@ -52,7 +54,9 @@ import numpy as np
 from repro.core.accounting import Price
 from repro.core.clock import VirtualClock
 from repro.core.functions import FunctionLibrary
-from repro.core.invoker import AllocationFailed, ExecutorCrash, Invoker
+from repro.core.invocation import Invocation, payload_bytes
+from repro.core.invoker import (AllocationFailed, ExecutorCrash, Invoker,
+                                RetryingFuture)
 from repro.core.simulation import SimulatedCluster
 from repro.core.transport import ChannelPartitioned, Topology
 
@@ -554,18 +558,25 @@ class TraceReplayer:
                get_timeout_s: float = 300.0) -> ElasticityStats:
         """Run the full scenario and return deterministic stats.
 
-        Arrivals form ONE lazily-scheduled Poisson chain (the event heap
-        stays small even at 100k invocations); by default the stream is
-        paced to span ~80% of the trace so churn and load overlap end to
-        end."""
+        Hot-path shape (DESIGN.md §15): completions STREAM — every
+        invocation carries an ``on_complete`` hook that folds its
+        round-trip into the stats at the instant it resolves and
+        recycles the pooled record, so the working set stays bounded
+        at in-flight size even for million-invocation traces (holding
+        a million futures for an end-of-run sweep costs ~0.5 GB and a
+        second pass).  The arrival process is pre-drawn in one
+        vectorized pass and applied as ONE lazily-scheduled chain; the
+        churn/fault chain batches same-instant trace events into a
+        single callback.  Failed invocations (rare) park on a list and
+        re-run through the normal client retry machinery after the
+        trace drains — exactly when the old future sweep would have
+        retried them."""
         sim, trace, clock = self.sim, self.trace, self.sim.clock
         if mean_interarrival_s is None:
             span = max(trace.duration_s, 1e-3) * 0.8
             mean_interarrival_s = span / max(n_invocations, 1)
         lib = FunctionLibrary("replay")
         lib.register("work", lambda x: x, service_time_s=service_time_s)
-        rng = random.Random(sim.seed * 104_729 + 7)
-        uniform = rng.random
         alloc_kw = ({"timeout_s": lease_timeout_s}
                     if lease_timeout_s is not None else {})
 
@@ -578,21 +589,25 @@ class TraceReplayer:
             sim._track_leases(t)
 
         # churn + faults as ONE lazily-advanced chain (like the arrival
-        # stream): the event heap stays shallow — pre-scheduling 5k
-        # trace events would deepen every invocation's heap operations
-        # for the whole run
+        # stream) applying every same-instant event in one callback:
+        # the event queue stays shallow and a burst of simultaneous
+        # trace events costs one scheduling round-trip, not N
         events = trace.events
+        n_ev = len(events)
         ev_idx = [0]
         apply_one = self._apply
 
         def next_trace_event():
             i = ev_idx[0]
-            if i >= len(events):
-                return
-            ev_idx[0] += 1
-            if ev_idx[0] < len(events):
-                clock.call_at(events[ev_idx[0]].t, next_trace_event)
             apply_one(events[i])
+            i += 1
+            now = clock.now()
+            while i < n_ev and events[i].t <= now:
+                apply_one(events[i])     # same-instant batch
+                i += 1
+            ev_idx[0] = i
+            if i < n_ev:
+                clock.call_at(events[i].t, next_trace_event)
 
         if events:
             clock.call_at(events[0].t, next_trace_event)
@@ -600,44 +615,78 @@ class TraceReplayer:
 
         payload = (np.ones(payload_elems, np.float32)
                    if payload_elems else None)
-        futures: List = []
+        payload_nb = payload_bytes(payload)
+        fn_idx = lib.index_of("work")
+
+        # the whole Poisson arrival process in two vectorized draws
+        # (RandomState is cross-version stable) instead of two Python
+        # RNG calls per invocation
+        nprng = np.random.RandomState((sim.seed * 104_729 + 7)
+                                      & 0xFFFFFFFF)
+        arrival_times = (clock.now() + np.cumsum(
+            nprng.exponential(mean_interarrival_s,
+                              n_invocations))).tolist()
+        tenant_picks = nprng.randint(
+            0, n_clients, n_invocations).tolist()
+
+        rtts: List[float] = []
+        rtts_append = rtts.append
+        done_box = [0]
         reallocations = [0]
         submitted = [0]
-        t_arr = [clock.now()]
-        expovariate = rng.expovariate
-        rate = 1.0 / mean_interarrival_s
+        dispatch_failed = [0]
+        failures: List = []              # (tenant, inv): retried after
+
+        def make_hook(tenant):
+            def on_done(inv, err):
+                if err is None:
+                    done_box[0] += 1
+                    tl = inv.timeline    # rtt_modeled, inlined
+                    rtts_append(tl.net_in + tl.overhead + tl.exec_time
+                                + tl.net_out)
+                    inv.release()        # pooled record back on the
+                    # free list — nothing references it anymore
+                else:
+                    failures.append((tenant, inv))
+            return on_done
+        hooks = [make_hook(t) for t in tenants]
+
+        make_inv = Invocation.make
+        call_at = clock.call_at_discard   # chain events are never
+        #                                   cancelled: recycle them
 
         def arrival():
-            if submitted[0] >= n_invocations:
-                return
-            submitted[0] += 1
+            k = submitted[0]
+            submitted[0] = k + 1
             # chain BEFORE submitting: a nested clock advance inside
             # submit (backoff, re-lease) must not stall the stream
-            if submitted[0] < n_invocations:
-                t_arr[0] += expovariate(rate)
-                clock.call_at(t_arr[0], arrival)
-            # int(random()*n) instead of randrange: one C call on a
-            # 100k-iteration path, same seeded determinism
-            tenant = tenants[int(uniform() * n_clients)]
+            if k + 1 < n_invocations:
+                call_at(arrival_times[k + 1], arrival)
+            ti = tenant_picks[k]
+            tenant = tenants[ti]
+            inv = make_inv(fn_idx, "work", payload, nbytes=payload_nb)
+            inv.on_complete = hooks[ti]
             try:
-                futures.append(tenant.submit("work", payload))
+                tenant.submit_prepared(inv)
             except (AllocationFailed, ExecutorCrash):
                 # capacity lost to preemption/faults: re-lease, retry
                 reallocations[0] += 1
                 tenant.allocate(workers_per_client, **alloc_kw)
                 sim._track_leases(tenant)
+                inv = make_inv(fn_idx, "work", payload,
+                               nbytes=payload_nb)
+                inv.on_complete = hooks[ti]
                 try:
-                    futures.append(tenant.submit("work", payload))
+                    tenant.submit_prepared(inv)
                 except (AllocationFailed, ExecutorCrash):
-                    pass                   # counted as failed below
+                    dispatch_failed[0] += 1
 
-        t_arr[0] += expovariate(rate)
-        clock.call_at(t_arr[0], arrival)
+        call_at(arrival_times[0], arrival)
 
-        # the replay allocates ~10 short-lived objects per invocation
-        # while holding every future alive in one list — generational
-        # GC sweeps find nothing to free and cost real seconds at 100k
-        # scale, so pause collection for the bounded run
+        # the replay's per-invocation allocations are pooled, but the
+        # object graphs still carry future<->invocation cycles —
+        # generational GC sweeps find almost nothing to free and cost
+        # real seconds at 1M scale, so pause collection for the run
         gc_was_enabled = gc.isenabled()
         gc.disable()
         try:
@@ -649,24 +698,23 @@ class TraceReplayer:
                 gc.enable()
 
         # -------------------------------------------------- collection
-        rtts: List[float] = []
-        rtts_append = rtts.append
-        completed = failed = 0
-        for rf in futures:
-            fut = rf._cur.future         # fast path: everything is done
-            if fut._error is None and fut.done():
-                completed += 1
-                rtts_append(fut.invocation.timeline.rtt_modeled)
-                continue
-            try:                         # slow path: pending retries etc.
+        completed = done_box[0]
+        resolved = completed + len(failures) + dispatch_failed[0]
+        # unfired arrivals + double dispatch failures + anything that
+        # somehow never resolved (defensive: post-idle this is zero)
+        # count as failed, like the old future sweep's timeouts did
+        failed = ((n_invocations - submitted[0]) + dispatch_failed[0]
+                  + (submitted[0] - resolved))
+        for tenant, inv in failures:     # client-library retries (§3.5)
+            rf = RetryingFuture(tenant, inv, "work", payload)
+            try:
                 rf.get(get_timeout_s)
             except (ExecutorCrash, AllocationFailed, TimeoutError,
                     RuntimeError):
                 failed += 1
                 continue
             completed += 1
-            rtts.append(rf.timeline.rtt_modeled)
-        failed += n_invocations - len(futures)
+            rtts_append(rf.timeline.rtt_modeled)
 
         lease_states = sim._teardown_tenants(tenants)
         totals = sim.ledger.totals()

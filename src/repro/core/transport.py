@@ -73,7 +73,8 @@ from typing import (Callable, Dict, FrozenSet, List, Optional, Set,
                     Tuple, Union)
 
 from repro.core.clock import Clock, REAL_CLOCK
-from repro.core.perf_model import NetParams, write_time
+from repro.core.perf_model import (NetParams, Sandbox, Tier,
+                                   tier_overhead, write_time)
 
 #: Modeled wire size of one control-plane message (lease request or
 #: response, registration, availability delta) — a few header fields.
@@ -182,12 +183,17 @@ def fabric_params_for_net(net: NetParams,
 # Topology + congestion layer (DESIGN.md §14)
 
 class Link:
-    """One shared capacity: a NIC port direction or the switch core.
-    ``active`` counts the transfers currently crossing it — fair-share
-    rates divide ``bandwidth`` by this count."""
+    """One shared capacity: a NIC port direction, a fat-tree pod uplink
+    or the switch core.  ``active`` counts the transfers currently
+    crossing it — fair-share rates divide ``bandwidth`` by this count.
+    ``members`` is the insertion-ordered membership set (a dict keyed by
+    Transfer) the incremental engine walks to find ONLY the transfers a
+    start/finish actually affects; ``epoch`` bumps on every membership
+    change so cached rates can tell whether their path moved at all
+    (DESIGN.md §15)."""
 
     __slots__ = ("name", "bandwidth", "active", "bytes_total",
-                 "peak_active")
+                 "peak_active", "members", "epoch")
 
     def __init__(self, name: str, bandwidth: float):
         self.name = name
@@ -195,6 +201,11 @@ class Link:
         self.active = 0
         self.bytes_total = 0
         self.peak_active = 0
+        # dict-as-ordered-set: deterministic iteration (insertion
+        # order), O(1) add/remove — a plain set would make completion
+        # tie-breaking depend on id() hashes across runs
+        self.members: Dict["Transfer", None] = {}
+        self.epoch = 0
 
     def fair_share(self, extra: int = 0) -> float:
         """Per-transfer rate if ``active + extra`` transfers share it."""
@@ -233,6 +244,15 @@ class Topology:
         self._links: Dict[str, Link] = {}
         self.core: Optional[Link] = None
         self._oversub: Optional[Tuple[float, int]] = None  # (ratio, ports)
+        # 2-tier fat tree (ratio, n_pods, ports_per_pod) + resolved
+        # uplink capacity; None on single-switch/oversubscribed shapes
+        self._fat: Optional[Tuple[float, int, int]] = None
+        self._pod_bandwidth: Optional[float] = None
+        self._pod_cache: Dict[str, int] = {}       # endpoint -> pod index
+        # (src, dst) -> link tuple: paths are stable once links are
+        # minted, and the charge path asks for the same pairs millions
+        # of times in a storm replay
+        self._path_cache: Dict[Tuple[str, str], Tuple[Link, ...]] = {}
 
     @classmethod
     def single_switch(cls, nic_bandwidth: Optional[float] = None,
@@ -253,6 +273,32 @@ class Topology:
         topo._oversub = (ratio, n_ports)
         return topo
 
+    @classmethod
+    def fat_tree(cls, ratio: float, n_pods: int, ports_per_pod: int,
+                 nic_bandwidth: Optional[float] = None,
+                 **kw) -> "Topology":
+        """2-tier fat tree: endpoints group into ``n_pods`` pods of
+        ``ports_per_pod`` edge ports each; intra-pod traffic crosses
+        only the NICs (non-blocking edge switch) while inter-pod
+        traffic ALSO crosses the source pod's full-duplex uplink into
+        the core and the destination pod's downlink out of it — each
+        provisioned at ``ports_per_pod / ratio`` NIC equivalents (the
+        multi-switch oversubscription tier; the core itself is
+        non-blocking, as in a rearrangeably non-blocking fat tree).
+
+        Node ids map onto pods by their numeric suffix
+        (``node017`` → pod ``17 // ports_per_pod % n_pods``, so pods
+        are contiguous node ranges); endpoints without one (clients,
+        replicas, storm sources) hash deterministically."""
+        if ratio <= 0 or n_pods < 2 or ports_per_pod <= 0:
+            raise ValueError(
+                "fat tree needs ratio > 0, n_pods >= 2, ports_per_pod > 0")
+        topo = cls(nic_bandwidth=nic_bandwidth,
+                   name=f"fat-tree-{ratio:g}to1-{n_pods}x{ports_per_pod}",
+                   **kw)
+        topo._fat = (ratio, n_pods, ports_per_pod)
+        return topo
+
     def resolve(self, params: FabricParams):
         """Bind deferred capacities to the owning fabric's parameters."""
         if self.nic_bandwidth is None:
@@ -262,6 +308,10 @@ class Topology:
             self.core_bandwidth = self.nic_bandwidth * ports / ratio
         if self.core_bandwidth is not None and self.core is None:
             self.core = Link("core", self.core_bandwidth)
+        if self._fat is not None and self._pod_bandwidth is None:
+            ratio, _, ports_per_pod = self._fat
+            self._pod_bandwidth = self.nic_bandwidth * ports_per_pod \
+                / ratio
 
     # ------------------------------------------------------------ links
     def _nic(self, endpoint: str, direction: str) -> Link:
@@ -271,12 +321,52 @@ class Topology:
             link = self._links[key] = Link(key, self.nic_bandwidth)
         return link
 
+    def pod_of(self, endpoint: str) -> int:
+        """Deterministic endpoint → pod mapping (fat tree only)."""
+        pod = self._pod_cache.get(endpoint)
+        if pod is None:
+            _, n_pods, ports_per_pod = self._fat
+            digits = ""
+            for c in reversed(endpoint):
+                if c.isdigit():
+                    digits = c + digits
+                else:
+                    break
+            if digits:
+                pod = (int(digits) // ports_per_pod) % n_pods
+            else:
+                import zlib
+                pod = zlib.crc32(endpoint.encode()) % n_pods
+            self._pod_cache[endpoint] = pod
+        return pod
+
+    def _pod_link(self, pod: int, direction: str) -> Link:
+        key = f"pod{pod}/{direction}"
+        link = self._links.get(key)
+        if link is None:
+            link = self._links[key] = Link(key, self._pod_bandwidth)
+        return link
+
     def path(self, src: str, dst: str) -> Tuple[Link, ...]:
-        """Links a src→dst transfer crosses: tx NIC, [core], rx NIC."""
-        tx, rx = self._nic(src, "tx"), self._nic(dst, "rx")
-        if self.core is not None:
-            return (tx, self.core, rx)
-        return (tx, rx)
+        """Links a src→dst transfer crosses: tx NIC, [pod uplinks |
+        core], rx NIC.  Cached per (src, dst) — link objects are stable
+        once minted."""
+        p = self._path_cache.get((src, dst))
+        if p is None:
+            tx, rx = self._nic(src, "tx"), self._nic(dst, "rx")
+            if self._fat is not None:
+                ps, pd = self.pod_of(src), self.pod_of(dst)
+                if ps == pd:
+                    p = (tx, rx)
+                else:
+                    p = (tx, self._pod_link(ps, "up"),
+                         self._pod_link(pd, "down"), rx)
+            elif self.core is not None:
+                p = (tx, self.core, rx)
+            else:
+                p = (tx, rx)
+            self._path_cache[(src, dst)] = p
+        return p
 
     def links(self) -> List[Link]:
         out = list(self._links.values())
@@ -298,15 +388,18 @@ class Topology:
 class Transfer:
     """One in-flight bulk transfer occupying every link on its path.
 
-    ``remaining`` drains at the fair-share ``rate`` recomputed by the
-    engine at every membership change; ``t_finish`` is the currently
-    scheduled completion instant (it moves when contention changes).
-    After completion ``duration`` holds the total modeled time
-    (one-way latency + contended serialization)."""
+    ``remaining`` drains at the fair-share ``rate``; integration is
+    LAZY and per-transfer (``t_last`` marks the last instant progress
+    was folded in), so a transfer untouched by a membership change
+    costs nothing.  ``t_finish`` is the currently scheduled completion
+    instant of this transfer's OWN clock event (``event``), rescheduled
+    only when its rate actually moves.  After completion ``duration``
+    holds the total modeled time (one-way latency + contended
+    serialization)."""
 
     __slots__ = ("src", "dst", "nbytes", "path", "remaining", "rate",
-                 "t_start", "t_finish", "done", "duration", "charged",
-                 "on_done")
+                 "t_start", "t_last", "t_finish", "done", "duration",
+                 "charged", "on_done", "event", "esig")
 
     def __init__(self, src: str, dst: str, nbytes: int,
                  path: Tuple[Link, ...], t_start: float,
@@ -318,24 +411,33 @@ class Transfer:
         self.remaining = float(nbytes)
         self.rate = 0.0
         self.t_start = t_start
+        self.t_last = t_start
         self.t_finish = math.inf
         self.done = False
         self.duration: Optional[float] = None
         self.charged = False         # sync channel send: delay already
         self.on_done = on_done       # accounted at charge time
+        self.event = None            # this transfer's completion event
+        self.esig = -1               # path epoch signature of `rate`
 
 
 class CongestionEngine:
-    """Progress-based fair sharing of topology links on the clock.
+    """INCREMENTAL progress-based fair sharing of topology links on the
+    clock (DESIGN.md §15).
 
-    The engine keeps the set of in-flight transfers; at every membership
-    change (a transfer starts or the completion event fires) it
-    integrates each transfer's progress since the last change at its
-    previous rate, recomputes every rate as
-    ``min(link.bandwidth / link.active)`` over the transfer's path, and
-    reschedules ONE completion event at the earliest new finish time.
-    Everything is a deterministic function of the start sequence — no
-    wall clock, no RNG — so replays stay bit-identical per seed.
+    Every link keeps its membership set; when a transfer starts or
+    finishes, the engine touches ONLY the transfers sharing a link with
+    it: each one's progress since its own last touch is integrated at
+    its previous rate, its new rate is ``min(bandwidth / active)`` over
+    its path, and its private completion event is rescheduled (an O(1)
+    cancel-and-rearm on the calendar clock) — but only when the rate
+    actually moved, which the per-link epoch counters detect without
+    recomputation.  A storm of T transfers fanning into K NICs costs
+    O(degree) per membership change instead of the old global
+    re-integration's O(T), turning storm replays from O(T²) into
+    O(T·degree).  Everything remains a deterministic function of the
+    start sequence — membership sets are insertion-ordered dicts, so
+    same-instant completions tie-break identically on every run.
 
     Synchronous channel sends are *charged* the fair-share rate they
     observe at send time (integrated rates cannot be returned
@@ -352,9 +454,8 @@ class CongestionEngine:
         # reported duration (the serialization phase alone occupies
         # links — latency is propagation, not capacity)
         self.latency = fabric.params.net.latency if fabric else 0.0
-        self._active: List[Transfer] = []
-        self._t_last = clock.now()
-        self._event = None           # single next-completion event
+        # insertion-ordered live set (dict-as-set, O(1) removal)
+        self._active: Dict[Transfer, None] = {}
         self._lock = threading.Lock()
         # whether solo transfers already deviate from the closed form
         # (custom NIC caps below the fabric's calibrated bandwidth)
@@ -377,104 +478,177 @@ class CongestionEngine:
     def solo_rate(self, path: Tuple[Link, ...]) -> float:
         return min(link.bandwidth for link in path)
 
-    # ------------------------------------------------------ integration
-    def _advance_to_now(self) -> float:
-        """Integrate every active transfer's progress to now at the
-        rates set by the previous membership change."""
-        now = self.clock.now()
-        dt = now - self._t_last
-        if dt > 0.0:
-            for tr in self._active:
-                tr.remaining -= tr.rate * dt
-                if tr.remaining < 0.0:
-                    tr.remaining = 0.0
-            self._t_last = now
-        return now
-
-    def _refresh_rates(self, now: float):
-        """Recompute fair-share rates + finish times, reschedule the
-        completion event at the earliest finish.  Caller holds the lock
-        and has integrated progress to ``now``."""
-        nxt = math.inf
-        for tr in self._active:
-            tr.rate = min(link.fair_share() for link in tr.path)
-            if tr.rate <= 0.0 or math.isinf(tr.rate):
-                tr.t_finish = now if math.isinf(tr.rate) else math.inf
-            else:
-                tr.t_finish = now + tr.remaining / tr.rate
-            if tr.t_finish < nxt:
-                nxt = tr.t_finish
-        if math.isinf(nxt):
-            if self._event is not None:
-                self._event.cancel()
-                self._event = None
-        elif self._event is None:
-            self._event = self.clock.call_at(nxt, self._fire)
+    # ------------------------------------------------- incremental core
+    def _schedule(self, tr: Transfer, now: float):
+        """(Re)arm ``tr``'s completion event at its current finish
+        time.  Caller holds the lock and has integrated ``tr`` to
+        ``now``."""
+        rate = tr.rate
+        if rate <= 0.0:
+            tr.t_finish = math.inf
+            if tr.event is not None:
+                tr.event.cancel()
+                tr.event = None
+            return
+        if math.isinf(rate):
+            tr.t_finish = now
         else:
-            self._event = self.clock.reschedule(self._event, nxt)
-        if self.fabric is not None:
-            self.fabric._cong_active = bool(self._active) or self.always_on
+            tr.t_finish = now + tr.remaining / rate
+        if tr.event is None:
+            tr.event = self.clock.call_at(tr.t_finish, self._fire, tr)
+        else:
+            tr.event = self.clock.reschedule(tr.event, tr.t_finish)
 
-    def _fire(self):
-        """Completion event: retire every transfer that has drained,
-        then re-integrate the survivors."""
-        finished: List[Transfer] = []
-        with self._lock:
-            now = self._advance_to_now()
-            self._event = None
-            keep: List[Transfer] = []
-            for tr in self._active:
+    def _retire(self, tr: Transfer, now: float,
+                finished: List[Transfer]) -> Dict[Transfer, None]:
+        """Complete ``tr``, release its links and return the neighbors
+        whose rates may now change.  Caller holds the lock."""
+        tr.remaining = 0.0
+        tr.done = True
+        tr.duration = self.latency + (now - tr.t_start)
+        if tr.event is not None:
+            tr.event.cancel()
+            tr.event = None
+        affected: Dict[Transfer, None] = {}
+        for link in tr.path:
+            del link.members[tr]
+            link.active -= 1
+            link.epoch += 1
+            for m in link.members:
+                affected[m] = None
+        del self._active[tr]
+        self.transfers_done += 1
+        if not tr.charged:
+            solo = self.latency + (tr.nbytes / self.solo_rate(tr.path)
+                                   if tr.nbytes else 0.0)
+            extra = tr.duration - solo
+            if extra > 1e-12:
+                self.congested_sends += 1
+                self.congestion_delay_s += extra
+        finished.append(tr)
+        return affected
+
+    def _update_affected(self, affected: Dict[Transfer, None],
+                         now: float, finished: List[Transfer]):
+        """Re-rate the transfers that share a link with a membership
+        change, lazily integrating each one's progress; transfers that
+        turn out to have drained (their event was due at this very
+        instant) retire in the same pass, cascading to THEIR
+        neighbors.  Caller holds the lock."""
+        while affected:
+            cascade: Dict[Transfer, None] = {}
+            for tr in affected:
+                if tr.done:
+                    continue
+                path = tr.path
+                esig = 0
+                for link in path:
+                    esig += link.epoch
+                if esig == tr.esig:
+                    continue         # epoch cache: path untouched
+                dt = now - tr.t_last
+                if dt > 0.0:
+                    tr.remaining -= tr.rate * dt
+                    if tr.remaining < 0.0:
+                        tr.remaining = 0.0
+                    tr.t_last = now
                 # float-exact completions: the event was scheduled at
                 # remaining/rate, so drained transfers sit at 0.0 (or a
                 # hair above after an unrelated earlier event — treat
                 # sub-byte residue at/past the finish instant as done)
                 if tr.remaining <= 0.0 or (tr.t_finish <= now
                                            and tr.remaining < 1.0):
+                    cascade.update(self._retire(tr, now, finished))
+                    continue
+                rate = path[0].fair_share()
+                for link in path:
+                    r = link.fair_share()
+                    if r < rate:
+                        rate = r
+                tr.esig = esig
+                if rate != tr.rate:
+                    tr.rate = rate
+                    self._schedule(tr, now)
+            affected = cascade       # retirements bumped epochs — loop
+        if self.fabric is not None:
+            self.fabric._cong_active = bool(self._active) \
+                or self.always_on
+
+    def _fire(self, tr: Transfer):
+        """A transfer's own completion event: retire it and re-rate the
+        neighbors that shared its links (any of which may drain at the
+        same instant and cascade)."""
+        finished: List[Transfer] = []
+        with self._lock:
+            if tr.done:
+                return
+            now = self.clock.now()
+            dt = now - tr.t_last
+            if dt > 0.0:
+                tr.remaining -= tr.rate * dt
+                if tr.remaining < 0.0:
                     tr.remaining = 0.0
-                    tr.done = True
-                    tr.duration = self.latency + (now - tr.t_start)
-                    for link in tr.path:
-                        link.active -= 1
-                    self.transfers_done += 1
-                    if not tr.charged:
-                        solo = self.latency + (
-                            tr.nbytes / self.solo_rate(tr.path)
-                            if tr.nbytes else 0.0)
-                        extra = tr.duration - solo
-                        if extra > 1e-12:
-                            self.congested_sends += 1
-                            self.congestion_delay_s += extra
-                    finished.append(tr)
-                else:
-                    keep.append(tr)
-            self._active = keep
-            self._refresh_rates(now)
-        for tr in finished:
-            if tr.on_done is not None:
-                tr.on_done(tr)
+                tr.t_last = now
+            affected = self._retire(tr, now, finished)
+            self._update_affected(affected, now, finished)
+        for t in finished:
+            if t.on_done is not None:
+                t.on_done(t)
 
     # ------------------------------------------------------------ starts
     def start(self, src: str, dst: str, nbytes: int, *,
               on_done: Optional[Callable[["Transfer"], None]] = None,
               charged: bool = False) -> Transfer:
-        """Register one transfer and re-integrate the fleet.  The
-        transfer completes via the engine's clock event; ``on_done``
-        fires at that instant with the final ``duration`` set."""
+        """Register one transfer and re-rate ONLY the transfers sharing
+        its links.  The transfer completes via its own clock event;
+        ``on_done`` fires at that instant with the final ``duration``
+        set."""
+        finished: List[Transfer] = []
         with self._lock:
-            now = self._advance_to_now()
+            now = self.clock.now()
             path = self.topology.path(src, dst)
-            tr = Transfer(src, dst, nbytes, path, now, on_done)
-            tr.charged = charged
-            for link in path:
-                link.active += 1
-                link.bytes_total += nbytes
-                if link.active > link.peak_active:
-                    link.peak_active = link.active
-                if link.active > self.peak_link_active:
-                    self.peak_link_active = link.active
-            self._active.append(tr)
-            self.transfers_started += 1
-            self._refresh_rates(now)
+            tr = self._start_locked(src, dst, nbytes, on_done, charged,
+                                    now, path, finished)
+        for t in finished:             # neighbors that drained at this
+            if t.on_done is not None:  # exact instant
+                t.on_done(t)
+        return tr
+
+    def _start_locked(self, src: str, dst: str, nbytes: int, on_done,
+                      charged: bool, now: float,
+                      path: Tuple[Link, ...],
+                      finished: List[Transfer]) -> Transfer:
+        """Registration body; caller holds the lock and fires the
+        ``finished`` callbacks after releasing it."""
+        tr = Transfer(src, dst, nbytes, path, now, on_done)
+        tr.charged = charged
+        affected: Dict[Transfer, None] = {}
+        peak = self.peak_link_active
+        for link in path:
+            for m in link.members:
+                affected[m] = None
+            link.members[tr] = None
+            link.active += 1
+            link.epoch += 1
+            link.bytes_total += nbytes
+            if link.active > link.peak_active:
+                link.peak_active = link.active
+            if link.active > peak:
+                peak = link.active
+        self.peak_link_active = peak
+        self._active[tr] = None
+        self.transfers_started += 1
+        rate = path[0].fair_share()
+        esig = 0
+        for link in path:
+            r = link.fair_share()
+            if r < rate:
+                rate = r
+            esig += link.epoch
+        tr.rate = rate
+        tr.esig = esig
+        self._schedule(tr, now)
+        self._update_affected(affected, now, finished)
         return tr
 
     # ----------------------------------------------------------- charges
@@ -487,21 +661,27 @@ class CongestionEngine:
         ``FabricParams.message_time`` bit-identically).  Sends at or
         above ``min_track_bytes`` register as link load and drain via
         the engine; the charge itself stays synchronous because the
-        invocation timeline needs the number at dispatch time."""
+        invocation timeline needs the number at dispatch time.  Rates
+        depend only on membership counts, so no integration happens
+        here — the observation is O(path length)."""
         wire = nbytes if params.encoding == 1.0 \
             else int(round(nbytes * params.encoding))
-        with self._lock:
-            self._advance_to_now()
+        finished: List[Transfer] = []
+        with self._lock:               # one critical section: rate
+            # observation, congestion stats AND load registration
             path = self.topology.path(src, dst)
             rate = min(link.fair_share(extra=1) for link in path)
             solo = self.solo_rate(path)
-        serial = wire / rate if wire else 0.0
-        if rate < solo:
-            with self._lock:
+            serial = wire / rate if wire else 0.0
+            if rate < solo:
                 self.congested_sends += 1
                 self.congestion_delay_s += serial - wire / solo
-        if wire >= self.topology.min_track_bytes:
-            self.start(src, dst, wire, charged=True)
+            if wire >= self.topology.min_track_bytes:
+                self._start_locked(src, dst, wire, None, True,
+                                   self.clock.now(), path, finished)
+        for tr in finished:            # neighbors drained at this instant
+            if tr.on_done is not None:
+                tr.on_done(tr)
         t = params.net.latency + serial
         if wire <= params.net.inline_limit:
             t -= params.net.inline_save
@@ -557,8 +737,9 @@ class Channel:
         # per-message path must not serialize the whole cluster)
         self._lock = threading.Lock()
         # size -> params.message_time(size): workloads send the same
-        # few sizes millions of times and the params are frozen
-        self._mt_memo: Dict[int, float] = {}
+        # few sizes millions of times and the params are frozen —
+        # shared fabric-wide so it survives channel churn
+        self._mt_memo = fabric._size_memo
 
     # ------------------------------------------------------------ model
     @property
@@ -689,7 +870,13 @@ class Channel:
             return t + self.extra_delay
         if (self.closed and not self.faulted
                 and not fabric.partitioned(self.dst, self.src)):
-            return self.message_time(nbytes)
+            # gracefully-closed channels (client teardown, failover to
+            # another server) still deliver the in-flight result — and
+            # that return leg rides the SAME links as live traffic, so
+            # it is charged the congestion-aware wire time instead of
+            # the old congestion-blind closed form (the ROADMAP's
+            # "uncontended-path congestion for failed-over results")
+            return self._wire_time(nbytes, reverse=True)
         return self.send_retransmitting(nbytes, reverse=True)
 
     def transfer(self, nbytes: int, reverse: bool = False) -> float:
@@ -786,6 +973,12 @@ class Fabric:
             self.arm_topology(topology)
         self._lock = threading.Lock()
         self._rng = random.Random(seed)
+        # nbytes -> closed-form message_time: shared by ALL channels of
+        # this fabric (params are frozen), so the memo survives channel
+        # churn instead of re-warming per (client, worker) pair
+        self._size_memo: Dict[int, float] = {}
+        # (tier, sandbox) -> modeled overhead (per-completion lookup)
+        self._ov_memo: Dict[tuple, float] = {}
         self._nchannels = 0
         self._channels: List[Channel] = []
         self._retired = {key: 0 for key in WIRE_COUNTERS}
@@ -837,6 +1030,17 @@ class Fabric:
     def message_time(self, nbytes: int) -> float:
         return self.params.message_time(nbytes) + self.extra_delay
 
+    def tier_overhead(self, tier: Tier, sandbox: Sandbox) -> float:
+        """Memoized ``perf_model.tier_overhead`` against this fabric's
+        calibrated parameters — one dict hit per completion instead of
+        recomputing the branchy closed form."""
+        memo = self._ov_memo
+        v = memo.get((tier, sandbox))
+        if v is None:
+            v = memo[(tier, sandbox)] = tier_overhead(tier, sandbox,
+                                                      self.net)
+        return v
+
     # ------------------------------------------------------- congestion
     def arm_topology(self, topology: Topology) -> CongestionEngine:
         """Attach a shared-link topology: from here on, concurrent
@@ -848,10 +1052,13 @@ class Fabric:
         self._cong_track_min = topology.min_track_bytes
         nic = topology.nic_bandwidth
         core = topology.core.bandwidth if topology.core else math.inf
-        # a solo transfer's rate is min(nic, core): if that differs from
-        # the calibrated link bandwidth, the engine must see EVERY send
+        pod = topology._pod_bandwidth if topology._pod_bandwidth \
+            is not None else math.inf
+        # a solo transfer's rate is min(nic, core, pod uplink): if that
+        # differs from the calibrated link bandwidth, the engine must
+        # see EVERY send
         self.congestion.always_on = (
-            min(nic, core) != self.params.net.bandwidth)
+            min(nic, core, pod) != self.params.net.bandwidth)
         self._cong_active = self.congestion.always_on
         return self.congestion
 

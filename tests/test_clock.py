@@ -191,3 +191,125 @@ def test_real_clock_is_wall_time():
     t0 = REAL_CLOCK.now()
     REAL_CLOCK.sleep(0.01)
     assert REAL_CLOCK.now() - t0 >= 0.009
+
+
+# ------------------------------------------------- calendar event core
+def test_heap_queue_selectable_and_equivalent_basics():
+    """The binary-heap reference stays selectable; basic ordering is
+    identical to the default calendar queue."""
+    from repro.core.clock import VirtualClock as VC
+    logs = []
+    for impl in ("calendar", "heap"):
+        clk = VC(queue=impl)
+        log = []
+        clk.call_later(2e-6, log.append, "b")
+        clk.call_later(1e-6, log.append, "a")
+        clk.call_later(2e-6, log.append, "c")   # same instant as b: FIFO
+        clk.run_until_idle()
+        logs.append(log)
+    assert logs[0] == logs[1] == ["a", "b", "c"]
+
+
+def test_calendar_far_future_events_reseed_in_order():
+    """Events far beyond the wheel horizon (seconds vs the microsecond
+    bucket width) park in the far list and fire in exact order after
+    the wheel re-anchors — no bucket-by-bucket stepping."""
+    clk = VirtualClock()
+    order = []
+    clk.call_later(3.0, order.append, "far-late")
+    clk.call_later(1e-6, order.append, "near")
+    clk.call_later(1.5, order.append, "far-early")
+    clk.call_later(1.5, order.append, "far-early-2")    # FIFO tie
+    clk.run_until_idle()
+    assert order == ["near", "far-early", "far-early-2", "far-late"]
+    assert clk.now() == 3.0
+
+
+def test_calendar_cancel_is_entry_invalidation():
+    """Cancelling never disturbs ordering of survivors, including
+    cancels of far-future and same-bucket entries."""
+    clk = VirtualClock()
+    order = []
+    keep1 = clk.call_later(1e-6, order.append, 1)
+    kill1 = clk.call_later(1e-6, order.append, "x")
+    kill2 = clk.call_later(2.0, order.append, "y")
+    keep2 = clk.call_later(2.0, order.append, 2)
+    kill1.cancel()
+    kill2.cancel()
+    clk.run_until_idle()
+    assert order == [1, 2]
+    assert keep1.fired and keep2.fired
+    assert kill1.cancelled and not kill1.fired
+
+
+def test_reschedule_is_cancel_and_rearm():
+    clk = VirtualClock()
+    order = []
+    h = clk.call_later(5.0, order.append, "moved")
+    clk.call_later(1.0, order.append, "fixed")
+    h = clk.reschedule(h, 0.5)              # pull it earlier
+    clk.run_until_idle()
+    assert order == ["moved", "fixed"]
+    assert clk.reschedule(h, 9.0) is not h  # fired -> re-armed fresh
+    assert clk.now() == pytest.approx(1.0)
+
+
+def test_call_later_discard_fires_and_recycles():
+    """Fire-and-forget events recycle through the clock's free list
+    without disturbing order or the events_run count."""
+    clk = VirtualClock()
+    order = []
+    for i in range(5):
+        clk.call_later_discard(i * 1e-6 + 1e-6, order.append, i)
+    clk.run_until_idle()
+    assert order == [0, 1, 2, 3, 4]
+    assert len(clk._call_pool) >= 1         # events were recycled
+    n0 = clk.events_run
+    clk.call_at_discard(clk.now() + 1e-6, order.append, 5)
+    clk.run_until_idle()
+    assert order[-1] == 5 and clk.events_run == n0 + 1
+
+
+def test_calendar_adapts_width_across_cadence_change():
+    """Thousands of microsecond events followed by millisecond gaps
+    trigger the adaptive rebuild; ordering and timing stay exact."""
+    clk = VirtualClock()
+    fired = []
+    n = 5000
+    for i in range(n):
+        clk.call_later(i * 1e-6 + 1e-6, fired.append, i)
+    for i in range(100):                    # second cadence regime
+        clk.call_later(0.01 + i * 1e-3, fired.append, n + i)
+    clk.run_until_idle()
+    assert fired == list(range(n + 100))
+    assert clk.now() == pytest.approx(0.01 + 99e-3)
+
+
+def test_cross_thread_schedule_lands_via_inbox():
+    """A non-driver thread scheduling events hands them over through
+    the inbox; they fire on the driver in order."""
+    clk = VirtualClock()
+    order = []
+    def other():
+        clk.call_later(1e-3, order.append, "from-thread")
+    t = threading.Thread(target=other)
+    t.start()
+    t.join()
+    clk.run_until_idle()
+    assert order == ["from-thread"]
+
+
+def test_cancelled_oneshot_behind_repeater_is_not_work():
+    """REGRESSION: a cancelled one-shot buried behind an armed
+    repeating sweeper must not read as pending work — run_until_idle
+    returns at the CURRENT instant with zero spurious sweeper fires
+    (the cancel log settles the counter exactly, as the old eager
+    per-cancel decrement did)."""
+    for impl in ("calendar", "heap"):
+        clk = VirtualClock(queue=impl)
+        fires = []
+        clk.call_repeating(1e-5, lambda: fires.append(clk.now()))
+        clk.call_later(1.5e-3, lambda: None).cancel()
+        clk.run_until_idle()
+        assert clk.now() == 0.0, impl
+        assert fires == [], impl

@@ -1,0 +1,83 @@
+"""Million-invocation hot-path acceptance (DESIGN.md §15): the
+1000-node churn+storm elasticity replay at 1M invocations,
+bit-identical per seed, with wall time gated against an in-window
+calibration run (slow tier).  A 30k fast-tier variant keeps the same
+scenario shape under the seconds-scale budget.
+
+Lives in its own module so ``pytest -q tests/test_trace_replay.py``
+stays inside the fast tier's budget.
+"""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core import ChurnTrace, replay_trace
+
+#: the acceptance scenario: churn at 50% utilization with a drop phase,
+#: partition windows AND bandwidth storms overlapping (§2+§3.5+§14)
+TRACE_KW = dict(duration_s=2.0, utilization=0.5, fault_drop_rate=0.02,
+                drop_window_s=0.3, n_partitions=2, partition_width=3,
+                n_storms=4, storm_transfers=8, storm_bytes=4 << 20)
+
+
+_TRACES = {}
+
+
+def _run(n_invocations, seed=11, n_clients=64, workers_per_client=4):
+    tr = _TRACES.get(seed)
+    if tr is None:                 # ChurnTrace is immutable: safe to
+        # share between the paired determinism runs
+        tr = _TRACES[seed] = ChurnTrace.synthetic_piz_daint(
+            1000, TRACE_KW["duration_s"], TRACE_KW["utilization"],
+            seed=seed, **{k: v for k, v in TRACE_KW.items()
+                          if k not in ("duration_s", "utilization")})
+    t0, c0 = time.perf_counter(), time.process_time()
+    s = replay_trace(tr, seed=seed, n_clients=n_clients,
+                     n_invocations=n_invocations,
+                     workers_per_client=workers_per_client)
+    return s, time.perf_counter() - t0, time.process_time() - c0
+
+
+def test_thirty_k_storm_replay_fast_tier():
+    """Fast-tier variant: same 1000-node churn+storm scenario at 30k
+    invocations — bit-identical per seed, all layers hot."""
+    s1, _, _ = _run(30_000)
+    s2, _, _ = _run(30_000)
+    assert s1 == s2
+    assert s1.completed >= 0.999 * 30_000
+    assert s1.preemptions > 1000
+    assert s1.storm_transfers > 0            # congestion layer engaged
+    assert s1.fabric_drops > 0               # drop phase engaged
+
+
+@pytest.mark.slow
+def test_million_invocation_storm_acceptance():
+    """The headline capability: 1M invocations across 1000 churning
+    nodes with storms — bit-identical per seed, <10 s wall on an
+    unloaded reference machine.
+
+    Gating mirrors tests/test_trace_acceptance.py: shared CI boxes are
+    preempted and slowed by noisy neighbours, so the gate is the
+    absolute bound OR a 13x ratio against the SAME-window 1/10-scale
+    calibration run (near-linear scaling at calibration speed IS the
+    capability; a per-invocation engine regression breaks the ratio,
+    a uniform slowdown trips the calibration bound).  Wall time is
+    printed for visibility."""
+    _, _, calib = _run(100_000)
+    # ~3.5-4 s CPU unloaded on a 2019-class core; 3x headroom for
+    # noisy-neighbour regimes (shared boxes show up to 2x inflation)
+    assert calib < 12.0, f"calibration replay took {calib:.2f}s CPU"
+
+    s1, wall1, cpu1 = _run(1_000_000)
+    s2, wall2, cpu2 = _run(1_000_000)
+    assert s1 == s2
+    best = min(cpu1, cpu2)
+    print(f"1M replay wall {wall1:.2f}/{wall2:.2f} s, "
+          f"cpu {cpu1:.2f}/{cpu2:.2f} s, calib {calib:.2f} s")
+    assert best < max(10.0, 13.0 * calib)
+    assert s1.completed >= 0.999 * 1_000_000
+    assert s1.preemptions > 1000
+    assert s1.storm_transfers > 0
+    assert s1.fabric_drops > 0

@@ -1,6 +1,7 @@
-"""Hypothesis property tests: the Lease state machine and the transport
-Channel's wire counters (paper §3.2 lease lifecycle, DESIGN.md §12
-counter contracts).
+"""Hypothesis property tests: the Lease state machine, the transport
+Channel's wire counters, congestion fair-sharing, and the calendar-
+queue event core (paper §3.2 lease lifecycle, DESIGN.md §12 counter
+contracts, §14 fair share, §15 hot path).
 
 Guarded import (requirements-test.txt pattern): where hypothesis is
 missing the module skips itself, and the seeded-random fallback tests
@@ -24,6 +25,10 @@ Invariants:
   exceeds the link's bandwidth; every transfer eventually completes
   with its bytes fully accounted; and the completion order is
   bit-identical when the same operation sequence replays.
+* Event core (DESIGN.md §15) — the calendar-queue clock fires events
+  in BIT-IDENTICAL order to the binary-heap reference under arbitrary
+  schedule / reschedule / cancel / advance sequences spanning
+  microsecond chains, far-future events and adaptive-width rebuilds.
 """
 from __future__ import annotations
 
@@ -33,6 +38,7 @@ import pytest
 
 from repro.core import (Fabric, Lease, LeaseRequest, LeaseState,
                         TERMINAL_STATES, Topology, VirtualClock)
+from repro.core.clock import EVENT_QUEUES
 from repro.core.transport import WIRE_COUNTERS
 
 END_STATES = (LeaseState.EXPIRED, LeaseState.RELEASED,
@@ -177,6 +183,50 @@ def check_fairshare_ops(ops):
     return completed
 
 
+def check_eventqueue_ops(ops):
+    """Drive one schedule/reschedule/cancel/advance sequence against a
+    calendar-queue clock AND the heap-reference clock; the fire logs
+    (instant, tag), final times and event counts must be identical.
+    Times are derived from the SAME integer expressions on both clocks,
+    so any divergence is queue ordering, not float noise."""
+    results = []
+    for impl in EVENT_QUEUES:
+        clk = VirtualClock(queue=impl)
+        log = []
+        handles = []
+
+        def mk(tag, clk=clk, log=log):
+            def cb():
+                log.append((clk.now(), tag))
+            return cb
+
+        for i, (op, a, b) in enumerate(ops):
+            if op == "later":
+                # microsecond chains AND far-future (past the wheel
+                # horizon) delays, exercising far-list reseeds
+                delay = a * 7e-7 + b * b * 3.1e-5
+                handles.append(clk.call_later(delay, mk(i)))
+            elif op == "at":
+                handles.append(clk.call_at(a * 1.7e-6 + b * 1e-3,
+                                           mk(i)))
+            elif op == "cancel":
+                if handles:
+                    handles[a % len(handles)].cancel()
+            elif op == "reschedule":
+                if handles:
+                    j = a % len(handles)
+                    handles[j] = clk.reschedule(
+                        handles[j], clk.now() + b * 2.3e-6)
+            else:                        # advance
+                clk.advance(a * 1.1e-6 + b * 0.7e-6)
+        clk.run_until_idle()
+        results.append((log, clk.now(), clk.events_run))
+    first = results[0]
+    for other in results[1:]:
+        assert other == first
+    return first
+
+
 # ------------------------------------------------------ hypothesis path
 # guarded import (requirements-test.txt pattern): unlike a module-level
 # importorskip, only the @given tests vanish without hypothesis — the
@@ -249,6 +299,21 @@ if HAVE_HYPOTHESIS:
         order is a pure function of the op sequence (replay ==)."""
         assert check_fairshare_ops(ops) == check_fairshare_ops(ops)
 
+    EVENTQ_OP = st.tuples(
+        st.sampled_from(["later", "later", "at", "cancel",
+                         "reschedule", "advance"]),
+        st.integers(0, 40),
+        st.integers(0, 40),
+    )
+
+    @settings(max_examples=80, deadline=None)
+    @given(ops=st.lists(EVENTQ_OP, max_size=40))
+    def test_calendar_queue_matches_heap_reference(ops):
+        """The calendar-queue clock pops events in bit-identical order
+        to the heapq reference under random schedule / reschedule /
+        cancel sequences (DESIGN.md §15)."""
+        check_eventqueue_ops(ops)
+
 
 # --------------------------------------- seeded fallback (always runs)
 @pytest.mark.parametrize("trial_seed", [101, 202, 303])
@@ -287,3 +352,30 @@ def test_fairshare_ops_seeded_fallback(trial_seed):
         ops = [(rng.choice(kinds), rng.randrange(41), rng.randrange(41))
                for _ in range(rng.randrange(0, 25))]
         assert check_fairshare_ops(ops) == check_fairshare_ops(ops)
+
+
+@pytest.mark.parametrize("trial_seed", [17, 29, 71])
+def test_eventqueue_ops_seeded_fallback(trial_seed):
+    rng = random.Random(trial_seed)
+    kinds = ["later", "later", "at", "cancel", "reschedule", "advance"]
+    for _ in range(25):
+        ops = [(rng.choice(kinds), rng.randrange(41), rng.randrange(41))
+               for _ in range(rng.randrange(0, 40))]
+        check_eventqueue_ops(ops)
+
+
+def test_eventqueue_equivalence_across_adaptive_rebuild():
+    """A long mixed-cadence chain (microsecond bursts, then
+    millisecond gaps) crosses the calendar queue's ADAPT_EVERY
+    threshold and forces width rebuilds — order must still match the
+    heap exactly."""
+    ops = []
+    for i in range(120):
+        ops.append(("later", i % 37, i % 11))
+        if i % 5 == 0:
+            ops.append(("advance", 40, 40))
+        if i % 9 == 0:
+            ops.append(("reschedule", i, (i * 7) % 41))
+        if i % 13 == 0:
+            ops.append(("cancel", i * 3, 0))
+    check_eventqueue_ops(ops)

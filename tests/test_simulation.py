@@ -155,3 +155,17 @@ def test_scenario_timing_is_virtual_not_wall():
     assert stats.t_end_s > 1.0            # simulated seconds elapsed
     assert wall < stats.t_end_s           # faster than real time
     assert stats.completed == 200
+
+
+def test_scenario_bit_identical_on_calendar_and_heap_queues():
+    """End-to-end event-core equivalence (DESIGN.md §15): the SAME
+    multi-tenant scenario on the calendar-queue clock and on the
+    binary-heap reference produces bit-identical ScenarioStats."""
+    runs = []
+    for impl in ("calendar", "heap"):
+        sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=3,
+                               event_queue=impl)
+        runs.append(sim.run_multi_tenant(n_clients=2,
+                                         n_invocations=200,
+                                         lease_timeout_s=0.01))
+    assert runs[0] == runs[1]

@@ -652,3 +652,130 @@ def test_nightcore_fabric_reproduces_fig1_speedup():
              + nc.net.warm_overhead)
         ratios.append(b / r)
     assert 17.0 <= min(ratios) <= max(ratios) <= 28.0
+
+
+# ------------------------------------------- failed-over result returns
+def test_graceful_closed_channel_result_charged_congestion():
+    """REGRESSION (ROADMAP next step): the result-return of a
+    failed-over / torn-down invocation rides a gracefully-closed
+    channel — it must be charged the congestion-aware wire time, not
+    the old congestion-blind closed form."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    ch = fab.connect("client:c", "srv")
+    nbytes = 1 << 20
+    base = fab.params.message_time(nbytes)
+    ch.close()                         # graceful client teardown
+    for i in range(3):                 # load the server's tx port
+        fab.start_transfer("srv", f"sink:{i}", 256 << 20)
+    serial = nbytes / fab.net.bandwidth
+    t = ch.deliver_result(nbytes)      # dst->src: (srv/tx, client/rx)
+    assert (t - base) == pytest.approx(3 * serial, rel=1e-6)
+    clock.run_until_idle()
+    assert ch.deliver_result(nbytes) == base   # drained: closed form
+
+
+def test_failed_over_result_contends_on_new_server_nic():
+    """End to end: an invocation that fails over to a second server
+    mid-run is dispatched AND answered through that server's stormed
+    NIC — both wire legs of the failed-over invocation carry
+    fair-share (contended) times on the timeline."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=1, seed=9,
+                           topology=Topology.single_switch())
+    lib = FunctionLibrary("t").register("echo", lambda x: x,
+                                        service_time_s=5e-3)
+    c = sim.client("c0", lib)
+    assert c.allocate(2) == 2          # one worker on each node
+    x = np.ones(1 << 18, np.float32)   # 1 MiB: bulk, registers as load
+    f0 = c.submit("echo", x, worker_hint=0)
+    f0.get(5.0)
+    base_in = f0.timeline.net_in       # uncontended closed form
+    base_out = f0.timeline.net_out
+    sim.run_until_idle()               # drain the probe's load
+
+    f1 = c.submit("echo", x, worker_hint=0)
+    first = f1.invocation.via.dst
+    second = next(n for n in sim.bs.nodes if n != first)
+    # sever the first server mid-execution: its result return fails,
+    # the client retries on the surviving server
+    sim.at(1e-3, sim.isolate_nodes, [first])
+    # ... whose NIC is meanwhile stormed in BOTH directions
+    for i in range(3):
+        sim.at(2e-3, sim.fabric.start_transfer, f"storm:{i}", second,
+               256 << 20)
+        sim.at(2e-3, sim.fabric.start_transfer, second, f"sink:{i}",
+               256 << 20)
+    assert (f1.get(10.0) == 1.0).all()
+    assert f1.invocation.via.dst == second      # failed over
+    assert f1.invocation.retries >= 1
+    # dispatch crossed the new server's stormed rx NIC, the result its
+    # stormed tx NIC: ~4x the solo serialization on each leg
+    assert f1.timeline.net_in > 3 * base_in
+    assert f1.timeline.net_out > 3 * base_out
+    c.deallocate()
+
+
+# ----------------------------------------------------- 2-tier fat tree
+def test_fat_tree_pod_mapping_deterministic():
+    topo = Topology.fat_tree(2.0, n_pods=2, ports_per_pod=2)
+    assert topo.pod_of("node000") == 0
+    assert topo.pod_of("node001") == 0
+    assert topo.pod_of("node002") == 1
+    assert topo.pod_of("node003") == 1
+    assert topo.pod_of("node004") == 0          # wraps mod n_pods
+    # non-numeric endpoints hash deterministically and stably
+    assert topo.pod_of("client:c") == topo.pod_of("client:c")
+
+
+def test_fat_tree_intra_pod_runs_at_nic_rate():
+    """Same-pod traffic crosses only the NICs (non-blocking edge)."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock,
+                 topology=Topology.fat_tree(2.0, n_pods=2,
+                                            ports_per_pod=2))
+    nbytes = 8 << 20
+    a = fab.start_transfer("node000", "node001", nbytes)   # pod 0
+    clock.run_until_idle()
+    solo = fab.net.latency + nbytes / fab.net.bandwidth
+    assert a.duration == pytest.approx(solo, rel=1e-9)
+
+
+def test_fat_tree_disjoint_interpod_pairs_share_uplink():
+    """Disjoint node pairs crossing pods contend on the pod uplink —
+    the multi-switch oversubscription tier single-switch cannot model:
+    with ratio 2 and 2 ports per pod the uplink equals ONE NIC, so two
+    inter-pod transfers each get half of it."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock,
+                 topology=Topology.fat_tree(2.0, n_pods=2,
+                                            ports_per_pod=2))
+    nbytes = 8 << 20
+    serial = nbytes / fab.net.bandwidth
+    a = fab.start_transfer("node000", "node002", nbytes)
+    b = fab.start_transfer("node001", "node003", nbytes)
+    clock.run_until_idle()
+    for tr in (a, b):
+        assert (tr.duration - fab.net.latency) == pytest.approx(
+            2 * serial, rel=1e-9)
+
+
+def test_fat_tree_cross_pod_fan_in_bottlenecks_on_downlink():
+    """Fan-in across pods: 4 sources in two pods converge on one
+    server in a third pod through its 4:1 downlink (half a NIC), so
+    each transfer gets 1/8 of a NIC — worse than the same fan-in
+    through a single switch (1/4) because the downlink saturates
+    first.  Capacity stays conserved on every link."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock,
+                 topology=Topology.fat_tree(4.0, n_pods=3,
+                                            ports_per_pod=2))
+    nbytes = 4 << 20
+    serial = nbytes / fab.net.bandwidth
+    srcs = ["node000", "node001", "node002", "node003"]   # pods 0+1
+    trs = [fab.start_transfer(s, "node004", nbytes) for s in srcs]
+    clock.run_until_idle()
+    for tr in trs:
+        assert (tr.duration - fab.net.latency) == pytest.approx(
+            8 * serial, rel=1e-9)
+    wire = fab.stats()
+    assert wire["transfers"] == 4 and wire["congested"] == 4
