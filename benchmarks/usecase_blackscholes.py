@@ -4,31 +4,34 @@ executors vs the OpenMP baseline.
 Massively-parallel use case (paper §4): independent equations dispatched
 to W bare-metal workers; throughput bounded by the link once per-worker
 compute drops near the ~30 ms transmission time.  Also exercises the
-Eq. 1 planner: plan_split chooses the local/remote split."""
+Eq. 1 planner: plan_split chooses the local/remote split.
+
+``run_simulated()`` is the §6 embarrassingly-parallel sweep on the
+``SimulatedCluster``: a ``ParallelExecutor.scatter_gather`` over W
+single-worker leases (batch-acquired in one negotiation pass), numpy
+numerics, VirtualClock timing.  Each worker's ~200 KB result rides the
+reverse path into the client's rx NIC concurrently, so with a topology
+armed the W-way fan-in observes the §4 staircase fair shares — the
+congestion counters in the output row are the evidence.  Bit-identical
+per seed; jax stays out of the module import so the CI smoke runs
+numpy-only.
+"""
 from __future__ import annotations
 
 import math
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, make_stack, median, timeit
-from repro.core import FunctionLibrary, plan_split
+from benchmarks.common import emit, median, timeit
+from repro.core import (FunctionLibrary, ParallelExecutor,
+                        SimulatedCluster, Topology, plan_split)
 
 N_OPTIONS = 200_000
 WORKERS = [1, 2, 4, 8]
 
-
-@jax.jit
-def black_scholes(p):
-    s, k, t, r, v = p
-    d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / (v * jnp.sqrt(t))
-    d2 = d1 - v * jnp.sqrt(t)
-    cnd = lambda x: 0.5 * (1 + jax.lax.erf(x / math.sqrt(2)))
-    call = s * cnd(d1) - k * jnp.exp(-r * t) * cnd(d2)
-    put = k * jnp.exp(-r * t) * cnd(-d2) - s * cnd(-d1)
-    return call, put
+# ------------------------------------------------------ simulated variant
+SIM_OPTIONS = 65_536
+SIM_SVC_PER_OPT = 5e-9          # modeled per-option solve time
 
 
 def make_batch(n, seed=0):
@@ -39,7 +42,109 @@ def make_batch(n, seed=0):
         rng.uniform(0.1, 0.9, n)))
 
 
+_erf = np.vectorize(math.erf, otypes=[np.float64])
+
+
+def black_scholes_np(p):
+    """Reference numerics in numpy (float64): the simulated executor's
+    function body and the correctness oracle for the jax path."""
+    s, k, t, r, v = (np.asarray(a, np.float64) for a in p)
+    d1 = (np.log(s / k) + (r + 0.5 * v * v) * t) / (v * np.sqrt(t))
+    d2 = d1 - v * np.sqrt(t)
+    cnd = lambda x: 0.5 * (1.0 + _erf(x / math.sqrt(2.0)))
+    call = s * cnd(d1) - k * np.exp(-r * t) * cnd(d2)
+    put = k * np.exp(-r * t) * cnd(-d2) - s * cnd(-d1)
+    return call, put
+
+
+def run_simulated(seed: int = 0, workers=(1, 2, 4, 8),
+                  n_options: int = SIM_OPTIONS) -> list:
+    """Scatter-gather sweep through the SimulatedCluster: one row per
+    worker count W — modeled makespan, fan-in congestion counters, and
+    the lease-negotiation rpc count (S servers, not W workers)."""
+    batch = make_batch(n_options, seed)
+
+    rows = []
+    for w in workers:
+        # per-W library: the modeled solve time is proportional to the
+        # chunk each worker actually receives
+        lib = FunctionLibrary(f"bs-sim-{w}")
+        lib.register("solve", black_scholes_np,
+                     service_time_s=SIM_SVC_PER_OPT * (n_options // w))
+        sim = SimulatedCluster(n_nodes=max(workers), workers_per_node=1,
+                               topology=Topology.single_switch(),
+                               seed=seed)
+        inv = sim.client("bs", lib, allocation_rounds=2,
+                         backoff_base=1e-4, backoff_cap=1e-3)
+        px = ParallelExecutor(inv, target_workers=w)
+        sim._track_leases(inv)
+        # W equal shards (pad the tail so every worker models the same
+        # service time — the fan-in stays simultaneous)
+        per = -(-n_options // w)
+        shards = [tuple(a[i * per:(i + 1) * per] for a in batch)
+                  for i in range(w)]
+        t0 = sim.clock.now()
+        call, put = px.scatter_gather(
+            "solve", shards,
+            combine=lambda rs: tuple(np.concatenate(c) for c in zip(*rs)),
+            timeout=10.0)
+        makespan = sim.clock.now() - t0
+        ok = (len(call) == len(put) == len(shards) * per
+              or len(call) == n_options)
+        wire = sim.fabric.stats()
+        rows.append([w, makespan * 1e3, int(ok),
+                     inv.stats.batch_rpcs, inv.stats.allocations_granted,
+                     wire.get("congested", 0),
+                     float(wire.get("congestion_delay_s", 0.0)) * 1e6])
+        sim._teardown_tenants([inv])
+    return rows
+
+
+SIM_HEADER = ["workers", "makespan_ms", "ok", "batch_rpcs", "leases",
+              "congested_sends", "congestion_delay_us"]
+
+
+def run_smoke() -> list:
+    """CI determinism gate + model sanity: same seed twice must match;
+    the 8-way fan-in must actually contend on the client rx NIC."""
+    a = run_simulated(0)
+    b = run_simulated(0)
+    if a != b:
+        raise SystemExit(f"nondeterministic simulated sweep: {a} != {b}")
+    by_w = {r[0]: r for r in a}
+    if not all(r[2] for r in a):
+        raise SystemExit("scatter_gather dropped options")
+    if not by_w[8][5] > by_w[1][5]:
+        raise SystemExit("8-way fan-in registered no congestion: "
+                         f"{by_w[8]} vs {by_w[1]}")
+    # correctness oracle on a tiny chain (put-call parity)
+    s, k, t, r, v = make_batch(512, 1)
+    call, put = black_scholes_np((s, k, t, r, v))
+    parity = call - put - (s - k * np.exp(-r.astype(np.float64) * t))
+    if not np.allclose(parity, 0.0, atol=1e-6):
+        raise SystemExit("put-call parity violated")
+    emit("usecase_blackscholes_sim", a, SIM_HEADER)
+    print(f"# smoke ok: 8-way congested_sends={by_w[8][5]}, "
+          f"delay={by_w[8][6]:.3g} us")
+    return a
+
+
 def run(quick: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import make_stack
+
+    @jax.jit
+    def black_scholes(p):
+        s, k, t, r, v = p
+        d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / (v * jnp.sqrt(t))
+        d2 = d1 - v * jnp.sqrt(t)
+        cnd = lambda x: 0.5 * (1 + jax.lax.erf(x / math.sqrt(2)))
+        call = s * cnd(d1) - k * jnp.exp(-r * t) * cnd(d2)
+        put = k * jnp.exp(-r * t) * cnd(-d2) - s * cnd(-d1)
+        return call, put
+
     n = 50_000 if quick else N_OPTIONS
     workers = WORKERS[:3] if quick else WORKERS
     batch = make_batch(n)
@@ -79,11 +184,19 @@ def run(quick: bool = False):
           "planned_hybrid_speedup"])
     print(f"# paper: offload scales until work/thread ~ network time; "
           f"hybrid split adds further speedup")
+    # the simulated scatter-gather variant rides along (modeled)
+    emit("usecase_blackscholes_sim", run_simulated(0), SIM_HEADER)
     return rows
 
 
 def main():
-    run()
+    import sys
+    if "--smoke" in sys.argv:
+        run_smoke()
+    elif "--sim" in sys.argv:
+        emit("usecase_blackscholes_sim", run_simulated(0), SIM_HEADER)
+    else:
+        run(quick="--quick" in sys.argv)
 
 
 if __name__ == "__main__":

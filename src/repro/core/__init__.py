@@ -20,6 +20,7 @@ from repro.core.invoker import (ALWAYS_WARM_INVOCATIONS, AllocationFailed,
                                 Connection, Invoker, RetryingFuture)
 from repro.core.lease import (Lease, LeaseRequest, LeaseState,
                               TERMINAL_STATES)
+from repro.core.parallel import ALL, ANY, ParallelExecutor, wait
 from repro.core.perf_model import (BASELINE_MODELS, DEFAULT_NET, NetParams,
                                    Sandbox, Tier, invocation_rtt,
                                    max_offload_rate, n_local_min,
@@ -46,7 +47,8 @@ __all__ = [
     "ExecutorProcess", "ExecutorWorker", "FunctionLibrary", "Invocation",
     "InvocationHeader", "RFuture", "Timeline", "payload_bytes",
     "ALWAYS_WARM_INVOCATIONS", "AllocationFailed", "Connection", "Invoker",
-    "RetryingFuture", "Lease", "LeaseRequest", "LeaseState",
+    "RetryingFuture", "ALL", "ANY", "ParallelExecutor", "wait",
+    "Lease", "LeaseRequest", "LeaseState",
     "TERMINAL_STATES", "BASELINE_MODELS", "DEFAULT_NET", "NetParams",
     "Sandbox", "Tier", "invocation_rtt", "max_offload_rate", "n_local_min",
     "plan_split", "tier_overhead", "write_time", "AvailabilityBus",

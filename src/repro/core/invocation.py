@@ -239,7 +239,8 @@ class Invocation:
         short-lived object graphs (each a future↔invocation reference
         CYCLE that only the cycle collector could reclaim).  Records
         are only recycled by owners who know no reference survives (the
-        trace replayer, after folding the timeline into its stats)."""
+        trace replayer after folding the timeline into its stats; the
+        client retry path after a crash settles a record for good)."""
         b_in = payload_bytes(payload) if nbytes is None else nbytes
         hdr = InvocationHeader(fn_index, next(_inv_ids), 0)
         pool = _POOL
@@ -258,8 +259,10 @@ class Invocation:
                 # overwritten before it is read on the success path
                 # (t_submit/net_in at dispatch, exec_time/
                 # dispatch_measured at completion, overhead/net_out in
-                # finish_transport), and failed records are never
-                # recycled or read
+                # finish_transport), and a failed record is only ever
+                # recycled by the owner that observed the failure
+                # (RetryingFuture, the trace replayer) after nothing
+                # can read its timeline anymore
                 inv.tier = Tier.HOT
                 inv.sandbox = sandbox
                 inv.retries = 0

@@ -67,6 +67,7 @@ class InvokerStats:
     allocations_tried: int = 0
     allocations_granted: int = 0
     allocation_rounds: int = 0
+    batch_rpcs: int = 0              # control rpcs spent in allocate_batch
     invocations: int = 0
     retries: int = 0
     failures: int = 0
@@ -297,6 +298,90 @@ class Invoker:
                 self.clock.sleep(next(delays))                # §3.5
         return n_workers - remaining
 
+    def allocate_batch(self, n_workers: int, *, lease_workers: int = 1,
+                       memory_bytes: int = 1 << 30,
+                       timeout_s: float = 3600.0, sandbox: str = "bare",
+                       rounds: Optional[int] = None) -> int:
+        """Batched lease acquisition for parallel clients (funcX-style
+        batch submission): one availability snapshot and one placement
+        pass per round, and per chosen server a SINGLE negotiation rpc
+        that covers every lease requested from it —
+        ``ceil(slice / lease_workers)`` leases of ``lease_workers``
+        workers each — instead of one control round trip per lease.
+        Acquiring W single-worker leases from S servers costs S rpcs,
+        not W, while the fine lease granularity keeps elastic
+        scale-down cheap (``release_workers`` hands back one worker,
+        not a whole slab).  Returns the number of workers granted."""
+        remaining = n_workers
+        lease_workers = max(1, lease_workers)
+        delays = self._backoffs()
+        n_rounds = self.allocation_rounds if rounds is None else rounds
+        for _ in range(n_rounds):
+            if remaining <= 0:
+                break
+            self.stats.allocation_rounds += 1
+            servers = self._candidate_servers()
+            if not servers:
+                self.clock.sleep(next(delays))
+                continue
+            for mgr in self._placement_order(servers):
+                if remaining <= 0:
+                    break
+                free = mgr.free_workers
+                if free <= 0:
+                    continue
+                ask = min(remaining, free)
+                self.stats.allocations_tried += 1
+                self.stats.batch_rpcs += 1
+                ctrl = self._control(mgr.server_id)
+                try:
+                    ctrl.rpc(CONTROL_MSG_BYTES)   # one rpc, many leases
+                except ChannelError:
+                    self.stats.negotiation_faults += 1
+                    self._note_fault(mgr.server_id)
+                    continue
+                while ask > 0:
+                    take = min(lease_workers, ask)
+                    req = LeaseRequest(self.client_id, take,
+                                       memory_bytes, timeout_s, sandbox)
+                    try:
+                        proc = mgr.grant(req, self.library, channel=ctrl)
+                    except AllocationRejected:
+                        break            # raced another client: walk on
+                    self._add_connection(Connection(mgr, proc))
+                    self.stats.allocations_granted += 1
+                    remaining -= take
+                    ask -= take
+            if remaining > 0:
+                self.clock.sleep(next(delays))                # §3.5
+        return n_workers - remaining
+
+    def release_workers(self, n: int) -> int:
+        """Elastic scale-down between fork-join iterations: hand leases
+        back until about ``n`` workers are released (smallest leases
+        first, so the give-back tracks the ask; lease granularity may
+        overshoot by at most one lease).  Dead connections found along
+        the way are reaped for free.  Returns workers released."""
+        released = 0
+        victims: List[Connection] = []
+        with self._lock:
+            order = sorted((c for c in self._conns if not c.private),
+                           key=lambda c: len(c.process.alive_workers()))
+            for c in order:
+                if released >= n:
+                    break
+                victims.append(c)
+                released += len(c.process.alive_workers())
+                self._conns.remove(c)
+                self._close_conn_locked(c)
+            self._pairs_cache = None
+        for c in victims:
+            try:
+                c.manager.release(c.process.lease.lease_id)
+            except Exception:            # noqa: BLE001 — already dead
+                pass
+        return released
+
     def attach_private(self, manager: ExecutorManager, n_workers: int,
                        memory_bytes: int = 1 << 30) -> int:
         """Private executors (paper §3.5): job-internal capacity exposed
@@ -406,7 +491,14 @@ class Invoker:
         idx = self.library.index_of(fn_name)
         inv = Invocation.make(idx, fn_name, payload)
         self.stats.invocations += 1
-        self._dispatch(inv, worker_hint)
+        try:
+            self._dispatch(inv, worker_hint)
+        except AllocationFailed:
+            # nothing was sent and no worker holds the record — recycle
+            # it instead of abandoning the pooled graph to the cycle
+            # collector (the caller only ever sees the exception)
+            inv.release()
+            raise
         return self._wrap_retries(inv, fn_name, payload)
 
     def submit_prepared(self, inv: Invocation) -> Invocation:
@@ -428,9 +520,15 @@ class Invoker:
     def map(self, fn_name: str, payloads: List[Any],
             timeout: Optional[float] = 120.0) -> List[Any]:
         """Parallel invocations over all connected workers (§3.4):
-        independent non-blocking writes, disjoint result buffers."""
+        independent non-blocking writes, disjoint result buffers.
+        ``timeout`` is ONE total budget for the whole gather — a single
+        deadline computed up front — not a fresh allowance per future
+        (which would let K stragglers wait K × timeout)."""
         futs = [self.submit(fn_name, p) for p in payloads]
-        return [f.get(timeout) for f in futs]
+        if timeout is None:
+            return [f.get(None) for f in futs]
+        deadline = self.clock.now() + timeout
+        return [f.get(deadline - self.clock.now()) for f in futs]
 
     # ------------------------------------------------------------ internals
     def _dispatch(self, inv: Invocation, worker_hint: Optional[int] = None):
@@ -449,8 +547,13 @@ class Invoker:
             pairs = self._pairs_cache if sweep == 0 else None
             if pairs is None:
                 pairs = self._worker_pairs()
-            if not pairs:
-                pairs = self._worker_pairs()        # snapshot was stale
+            elif not pairs:
+                # the CACHED snapshot is empty but may be stale (leases
+                # can have arrived since it was validated): revalidate
+                # once.  A freshly-computed empty snapshot is already
+                # authoritative — recomputing it could not observe
+                # anything new.
+                pairs = self._worker_pairs()
             if not pairs:
                 raise AllocationFailed(
                     f"{self.client_id}: no live executor workers")
@@ -533,21 +636,37 @@ class RetryingFuture:
         return self._cur.timeline
 
     def get(self, timeout: Optional[float] = 120.0) -> Any:
+        """Blocking result fetch with crash-retries.  ``timeout`` is a
+        single TOTAL budget: the deadline is computed once, and every
+        retry attempt waits only the remaining slice — a crash partway
+        through never restarts the clock (total wait stays bounded by
+        ``timeout``, not ``(max_retries+1) × timeout``)."""
+        clock = self._invoker.clock
+        deadline = None if timeout is None else clock.now() + timeout
         while True:
             try:
-                return self._cur.future.get(timeout)
+                remaining = (None if deadline is None
+                             else deadline - clock.now())
+                return self._cur.future.get(remaining)
             except ExecutorCrash as e:
                 self._attempt += 1
                 if self._attempt > self._invoker.max_retries:
                     self._invoker.stats.failures += 1
                     raise
                 self._invoker.stats.retries += 1
-                nxt = Invocation.make(self._cur.header.fn_index,
+                failed = self._cur
+                nxt = Invocation.make(failed.header.fn_index,
                                       self._fn_name, self._payload)
                 nxt.retries = self._attempt
+                # swap the facade to the retry record FIRST, then
+                # recycle the crashed one: it is settled, the executor
+                # dropped it, and nothing else can reach it through
+                # this future anymore — abandoning it instead would
+                # leak one pooled object graph per crash-retry
+                self._cur = nxt
+                failed.release()
                 try:
                     self._invoker._dispatch(nxt)
                 except AllocationFailed:
                     self._invoker.stats.failures += 1
                     raise e
-                self._cur = nxt

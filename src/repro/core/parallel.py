@@ -1,0 +1,224 @@
+"""Client-side parallel collectives over the fabric (paper §6).
+
+The paper evaluates rFaaS on *parallel applications* — fork-join
+iterative solvers (Jacobi, §6.6), embarrassingly-parallel sweeps
+(Black-Scholes, §6.7) and W-way concurrent invocations (Fig. 12) — but
+the base ``Invoker`` drives the cluster one invocation at a time.  This
+module adds the missing client-side layer, shaped after lithops-style
+futures (``wait`` with ANY/ALL/N return policies) and funcX-style
+batched task submission:
+
+* ``wait(futures, ...)`` — block until a return policy is satisfied
+  (ANY = first completion, ALL = every one, N = a count), preserving
+  submission order in the returned partition.  On a VirtualClock driver
+  thread the wait PUMPS simulated time, so a single-threaded simulation
+  never deadlocks waiting on its own events.
+* ``ParallelExecutor`` — a fork-join harness over one ``Invoker``:
+
+  - **batched lease acquisition** via ``Invoker.allocate_batch``: one
+    availability snapshot + one placement pass, a single negotiation
+    rpc per chosen server covering all of that server's leases
+    (W workers from S servers cost S control round trips, not W), with
+    single-worker lease granularity so elastic scale-down can hand
+    back exactly one worker;
+  - **pipelined dispatch**: every payload is submitted before any
+    result is awaited — the modeled inbound writes overlap executor
+    service times on the virtual clock;
+  - **fan-in gathering**: concurrent result returns ride each data
+    channel's reverse path into the client's rx NIC; with a topology
+    armed, returns ≥ ``min_track_bytes`` register on the congestion
+    engine and K simultaneous returns observe fair shares 1/1 … 1/K
+    of the rx port (DESIGN.md §14) — the §4 fan-in regime, now on the
+    result side;
+  - **elastic scaling** (serverless-elastic fork-join, after
+    "Exploiting Inherent Elasticity of Serverless in Irregular
+    Algorithms"): ``scale_to`` between iterations re-acquires leases
+    as churn frees nodes and releases them when preemption shrinks
+    the target — mid-computation, on the same clock.
+
+Crash-retries need no extra machinery here: every future returned by
+``Invoker.submit`` is a ``RetryingFuture`` whose deadline-bounded
+``get`` re-dispatches on surviving workers (§3.5), so a worker crash
+mid-map costs a partial retry, never a hole in the result order.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+from repro.core.clock import Clock
+from repro.core.invoker import Invoker, RetryingFuture
+
+#: ``wait`` return policies (lithops naming)
+ANY = "ANY"
+ALL = "ALL"
+
+#: non-driver-thread poll interval for ``wait`` on a real clock
+_REAL_POLL_S = 1e-4
+
+_NO_INITIAL = object()
+
+
+def _future_clock(futures: Sequence[Any]) -> Optional[Clock]:
+    """Best clock to wait on: the owning invoker's (RetryingFuture) or
+    the one stamped at submission (bare RFuture)."""
+    for f in futures:
+        inv = getattr(f, "_invoker", None)
+        if inv is not None:
+            return inv.clock
+        clk = getattr(f, "_clock", None)
+        if clk is not None:
+            return clk
+    return None
+
+
+def wait(futures: Sequence[Any], *, policy: str = ALL,
+         count: Optional[int] = None, timeout: Optional[float] = None,
+         clock: Optional[Clock] = None) -> Tuple[List[Any], List[Any]]:
+    """Block until ``policy`` is satisfied and return the
+    ``(done, pending)`` partition, each preserving submission order.
+
+    ``policy=ANY`` returns once one future settles, ``ALL`` once every
+    one has, and ``count=N`` (with either policy string) once N have.
+    "Settled" includes failures — a crashed future is done for wait
+    purposes; its error (or retry) surfaces from ``get``.  On timeout
+    the current partition is returned, like lithops' ``wait`` — callers
+    decide whether a non-empty ``pending`` is an error.
+
+    From the VirtualClock driver thread this pumps simulated events
+    until the predicate holds (timeout measured in simulated seconds);
+    other threads poll the real clock."""
+    futures = list(futures)
+    if not futures:
+        return [], []
+    if count is not None:
+        k = count
+    elif policy == ANY:
+        k = 1
+    elif policy == ALL:
+        k = len(futures)
+    else:
+        raise ValueError(f"unknown wait policy {policy!r} (ANY, ALL, "
+                         f"or pass count=N)")
+    k = max(0, min(k, len(futures)))
+
+    def satisfied() -> bool:
+        n = 0
+        for f in futures:
+            if f.done():
+                n += 1
+                if n >= k:
+                    return True
+        return k == 0
+
+    clk = clock if clock is not None else _future_clock(futures)
+    if not satisfied():
+        if clk is not None and clk.virtual and clk.is_driver():
+            clk.wait_until(satisfied, timeout)
+        else:
+            deadline = (None if timeout is None
+                        else (clk.now() if clk else 0.0) + timeout)
+            while not satisfied():
+                if clk is None:
+                    break                # nothing to wait on: snapshot
+                if deadline is not None and clk.now() >= deadline:
+                    break
+                clk.sleep(_REAL_POLL_S)
+    done = [f for f in futures if f.done()]
+    pending = [f for f in futures if not f.done()]
+    return done, pending
+
+
+class ParallelExecutor:
+    """Fork-join collectives over one ``Invoker`` (see module doc)."""
+
+    def __init__(self, invoker: Invoker, *,
+                 target_workers: Optional[int] = None,
+                 lease_workers: int = 1,
+                 memory_bytes: int = 1 << 30,
+                 lease_timeout_s: float = 3600.0,
+                 sandbox: str = "bare"):
+        self.invoker = invoker
+        self.lease_workers = lease_workers
+        self.memory_bytes = memory_bytes
+        self.lease_timeout_s = lease_timeout_s
+        self.sandbox = sandbox
+        if target_workers is not None:
+            self.scale_to(target_workers)
+
+    # ------------------------------------------------------------ elasticity
+    @property
+    def n_workers(self) -> int:
+        return self.invoker.n_workers
+
+    def scale_to(self, target: int) -> int:
+        """Elastic scaling between iterations: batch-acquire leases up
+        to ``target`` live workers when churn freed capacity, release
+        surplus leases when the target shrank.  Returns the live worker
+        count actually reached (allocation may underfill when the
+        cluster is drained — fork-join callers rebalance shards over
+        whatever came back)."""
+        cur = self.invoker.n_workers
+        if cur < target:
+            self.invoker.allocate_batch(
+                target - cur, lease_workers=self.lease_workers,
+                memory_bytes=self.memory_bytes,
+                timeout_s=self.lease_timeout_s, sandbox=self.sandbox)
+        elif cur > target:
+            self.invoker.release_workers(cur - target)
+        return self.invoker.n_workers
+
+    # ------------------------------------------------------------ primitives
+    def submit_all(self, fn_name: str,
+                   payloads: Sequence[Any]) -> List[RetryingFuture]:
+        """Pipelined dispatch: every payload submitted (round-robin
+        over live workers) before any result is awaited."""
+        submit = self.invoker.submit
+        return [submit(fn_name, p) for p in payloads]
+
+    def gather(self, futures: Sequence[Any],
+               timeout: Optional[float] = None) -> List[Any]:
+        """Fan-in: collect results in submission order under ONE total
+        deadline shared by every future (and by any crash-retries their
+        ``get`` performs)."""
+        if timeout is None:
+            return [f.get(None) for f in futures]
+        clock = self.invoker.clock
+        deadline = clock.now() + timeout
+        return [f.get(deadline - clock.now()) for f in futures]
+
+    # ------------------------------------------------------------ collectives
+    def map(self, fn_name: str, payloads: Sequence[Any],
+            timeout: Optional[float] = None) -> List[Any]:
+        """Fork-join map: pipelined dispatch, order-preserving fan-in
+        gather.  A worker crash mid-map retries only the invocations it
+        took down (§3.5), never the whole map."""
+        return self.gather(self.submit_all(fn_name, payloads),
+                           timeout=timeout)
+
+    def map_reduce(self, fn_name: str, payloads: Sequence[Any],
+                   reduce_fn: Callable[[Any, Any], Any],
+                   initial: Any = _NO_INITIAL,
+                   timeout: Optional[float] = None) -> Any:
+        """``map`` then a client-side left fold in submission order —
+        deterministic regardless of completion order."""
+        results = self.map(fn_name, payloads, timeout=timeout)
+        it = iter(results)
+        acc = next(it) if initial is _NO_INITIAL else initial
+        for r in it:
+            acc = reduce_fn(acc, r)
+        return acc
+
+    def scatter_gather(self, fn_name: str, shards: Sequence[Any],
+                       combine: Optional[Callable[[List[Any]], Any]]
+                       = None,
+                       timeout: Optional[float] = None) -> Any:
+        """One shard per worker: shard *k* is pinned to worker
+        ``k mod W`` so K ≤ W shards land on K distinct executors and
+        their returns genuinely fan into the client's rx NIC
+        concurrently.  ``combine`` (e.g. ``np.concatenate``) folds the
+        ordered results into the joined value."""
+        submit = self.invoker.submit
+        futs = [submit(fn_name, s, worker_hint=i)
+                for i, s in enumerate(shards)]
+        results = self.gather(futs, timeout=timeout)
+        return combine(results) if combine is not None else results

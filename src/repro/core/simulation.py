@@ -248,6 +248,47 @@ class SimulatedCluster:
                     and node.manager.heartbeat() and nid not in known):
                 self.rm.register(node.manager)
 
+    def schedule_trace(self, trace_or_events) -> int:
+        """Scenario hook for fork-join benchmarks: schedule a
+        ``ChurnTrace`` (or a bare event sequence) onto the clock so
+        availability churn and transport faults land mid-computation —
+        node_down preempts leased nodes, node_up returns them,
+        batch_job queues competing batch work, partition/heal/drop_rate
+        drive the fabric.  Unlike ``TraceReplayer`` this attaches no
+        workload of its own: the caller's app (e.g. an elastic
+        fork-join solver re-leasing between iterations) IS the
+        workload.  Returns the number of events scheduled."""
+        events = getattr(trace_or_events, "events", trace_or_events)
+
+        def apply(ev):
+            if ev.kind == "drop_rate":
+                self.fabric.set_faults(drop_rate=ev.rate)
+            elif ev.kind == "partition":
+                if ev.group_b:
+                    self.partition(ev.group_a, ev.group_b,
+                                   one_way=ev.one_way)
+                else:
+                    self.isolate_nodes(ev.group_a, one_way=ev.one_way)
+            elif ev.kind == "heal":
+                self.heal()
+            elif ev.kind == "bandwidth_storm":
+                targets = ev.group_a or tuple(sorted(self.bs.nodes))
+                for i in range(ev.n_transfers):
+                    try:
+                        self.fabric.start_transfer(
+                            f"storm:{i}", targets[i % len(targets)],
+                            ev.nbytes)
+                    except Exception:    # noqa: BLE001 — partitioned
+                        pass             # refused like any other traffic
+            else:
+                self.bs.apply_trace_event(ev)
+
+        n = 0
+        for ev in events:
+            self.at(ev.t, apply, ev)
+            n += 1
+        return n
+
     def start_lease_sweeper(self, interval_s: float = 0.05):
         """Periodically end expired leases on every manager (§3.2)."""
         self.stop_lease_sweeper()        # restart, don't leak a sweeper

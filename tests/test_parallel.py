@@ -1,0 +1,360 @@
+"""Parallel client collectives (core.parallel) and the retry-future
+timeout/leak regressions the map path used to hide.
+
+Covers: wait() return policies under virtual time, fork-join map with
+crash-retries mid-map, scatter_gather through a partition during the
+fan-in, the K-way fan-in fair-share staircase on the client rx NIC,
+batched lease negotiation amortization, elastic scale_to under churn
+traces, single-deadline RetryingFuture/map semantics, invocation-pool
+stability under sustained crash-retries, and the stale-pairs-cache
+dispatch revalidation."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core.invocation as invocation_mod
+from repro.core import (ALL, ANY, AllocationFailed, ExecutorCrash,
+                        FunctionLibrary, ParallelExecutor,
+                        SimulatedCluster, Topology, TraceEvent, wait)
+
+
+def _lib(*fns):
+    lib = FunctionLibrary("par-test")
+    for name, fn, svc in fns:
+        lib.register(name, fn, service_time_s=svc)
+    return lib
+
+
+def _cluster(lib, *, n_nodes=4, workers_per_node=1, seed=0, **kw):
+    sim = SimulatedCluster(n_nodes=n_nodes,
+                           workers_per_node=workers_per_node,
+                           seed=seed, **kw)
+    inv = sim.client("par", lib, allocation_rounds=2,
+                     backoff_base=1e-4, backoff_cap=1e-3)
+    return sim, inv
+
+
+# --------------------------------------------------------- wait() policies
+def test_wait_any_returns_before_straggler():
+    """ANY settles on the first completion; the straggler is still
+    pending and simulated time has not advanced to its service time."""
+    lib = _lib(("fast", lambda x: x, 1e-4),
+               ("slow", lambda x: x, 5e-2))
+    sim, inv = _cluster(lib, n_nodes=2)
+    inv.allocate(2)
+    f_slow = inv.submit("slow", 1, worker_hint=0)
+    f_fast = inv.submit("fast", 2, worker_hint=1)
+    t0 = sim.clock.now()
+    done, pending = wait([f_slow, f_fast], policy=ANY)
+    assert done == [f_fast] and pending == [f_slow]
+    assert sim.clock.now() - t0 < 5e-2          # did not wait for slow
+    done, pending = wait([f_slow, f_fast], policy=ALL)
+    assert pending == [] and done == [f_slow, f_fast]   # input order
+    assert sim.clock.now() - t0 >= 5e-2
+    assert f_slow.get(1.0) == 1 and f_fast.get(1.0) == 2
+
+
+def test_wait_count_policy_and_timeout_partition():
+    lib = _lib(("fast", lambda x: x, 1e-4),
+               ("slow", lambda x: x, 5e-2))
+    sim, inv = _cluster(lib, n_nodes=3)
+    inv.allocate(3)
+    futs = [inv.submit("slow", 0, worker_hint=0),
+            inv.submit("fast", 1, worker_hint=1),
+            inv.submit("fast", 2, worker_hint=2)]
+    done, pending = wait(futs, count=2)
+    assert len(done) == 2 and pending == [futs[0]]
+    # timeout returns the partial partition instead of raising
+    done, pending = wait(futs, policy=ALL, timeout=1e-3)
+    assert pending == [futs[0]]
+    with pytest.raises(ValueError):
+        wait(futs, policy="SOME")
+    wait(futs)                                  # drain the straggler
+
+
+# ----------------------------------------------------- fork-join map paths
+def test_map_order_preserved_under_worker_crash():
+    """A node crash with queued map work retries only the lost
+    invocations; the gathered results keep submission order."""
+    lib = _lib(("echo", lambda x: x * 2, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=4, seed=3)
+    px = ParallelExecutor(inv, target_workers=4)
+    victim = inv._worker_pairs()[0][1].manager.server_id
+    futs = px.submit_all("echo", list(range(12)))
+    sim.crash_node(victim)                     # queued work fails over
+    assert px.gather(futs, timeout=5.0) == [i * 2 for i in range(12)]
+    assert inv.stats.retries >= 1
+    assert inv.stats.failures == 0
+    assert inv.n_workers == 3
+
+
+def test_scatter_gather_partition_during_fanin():
+    """A server isolated while its shard executes cannot deliver the
+    result; the crash-retry resubmits on a surviving worker and the
+    joined output is still order-complete."""
+    lib = _lib(("fill", lambda p: np.full(1024, p), 1e-3))
+    sim, inv = _cluster(lib, n_nodes=4, seed=2,
+                        topology=Topology.single_switch())
+    px = ParallelExecutor(inv, target_workers=4)
+    victim = inv._worker_pairs()[0][1].manager.server_id
+    sim.at(sim.clock.now() + 5e-4, sim.isolate_nodes, [victim])
+    res = px.scatter_gather("fill", [0.0, 1.0, 2.0, 3.0], timeout=5.0)
+    assert [r[0] for r in res] == [0.0, 1.0, 2.0, 3.0]
+    assert all(r.shape == (1024,) for r in res)
+    assert inv.stats.retries >= 1
+
+
+def test_map_reduce_deterministic_fold_order():
+    lib = _lib(("sq", lambda x: x * x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=2, workers_per_node=2)
+    px = ParallelExecutor(inv, target_workers=4)
+    total = px.map_reduce("sq", list(range(10)), lambda a, b: a + b,
+                          initial=0, timeout=5.0)
+    assert total == sum(i * i for i in range(10))
+
+
+# ------------------------------------------------- fan-in congestion model
+def test_fanin_staircase_shares_on_client_rx_nic():
+    """K simultaneous ≥64 KiB result returns fan into the client's rx
+    port: the congestion engine charges them the fair-share staircase
+    1/1, 1/2, … 1/K of the NIC (DESIGN.md §14) — the K-th return pays
+    K x the solo wire time."""
+    nb = 1 << 17                                # 128 KiB results
+    lib = _lib(("big", lambda p: np.zeros(nb, np.uint8), 1e-4))
+    sim, inv = _cluster(lib, n_nodes=4, seed=0,
+                        topology=Topology.single_switch())
+    px = ParallelExecutor(inv, target_workers=4)
+    futs = [inv.submit("big", float(i), worker_hint=i) for i in range(4)]
+    done, pending = wait(futs, timeout=5.0)
+    assert not pending
+    lat = sim.net.latency
+    outs = sorted(f.timeline.net_out for f in futs)
+    unit = outs[0] - lat                        # solo share: wire/bw
+    assert unit == pytest.approx(nb / sim.net.bandwidth, rel=0.1)
+    for k in range(4):
+        assert (outs[k] - lat) / unit == pytest.approx(k + 1, rel=1e-6)
+    # the slowest return observed exactly 1/K of the rx port
+    assert outs[-1] - lat == pytest.approx(4 * unit, rel=1e-6)
+    assert sim.fabric.stats().get("congested", 0) >= 3
+
+
+# ------------------------------------------------------ batched allocation
+def test_allocate_batch_amortizes_control_rpcs():
+    """W single-worker leases from S servers cost S negotiation rpcs
+    (one per chosen server), not W — vs one rpc per allocate(1) call."""
+    lib = _lib(("echo", lambda x: x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=4, workers_per_node=4, seed=1)
+    got = inv.allocate_batch(8, lease_workers=1)
+    assert got == 8 and inv.n_workers == 8
+    assert inv.stats.batch_rpcs == 2            # S=2 servers covered W=8
+    assert inv.stats.allocations_granted == 8   # single-worker leases
+    assert len(inv.connections()) == 8
+    # the naive path pays one control round trip per lease
+    inv2 = sim.client("naive", lib, allocation_rounds=2,
+                      backoff_base=1e-4, backoff_cap=1e-3)
+    for _ in range(8):
+        inv2.allocate(1)
+    assert inv2.stats.allocations_tried == 8
+    assert inv.stats.allocations_tried < inv2.stats.allocations_tried
+    # fine granularity makes scale-down exact
+    assert inv.release_workers(3) == 3 and inv.n_workers == 5
+
+
+def test_elastic_scale_under_churn_trace():
+    """scale_to between iterations re-leases as churn preempts and
+    returns nodes — the serverless-elastic fork-join loop."""
+    lib = _lib(("echo", lambda x: x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=6, seed=3)
+    px = ParallelExecutor(inv, target_workers=4)
+    leased = sorted({c.manager.server_id for c in inv.connections()})
+    assert inv.n_workers == 4 and len(leased) == 4
+    now = sim.clock.now()
+    sim.schedule_trace([
+        TraceEvent(t=now, kind="node_down", node_id=leased[0],
+                   grace_s=0.0),
+        TraceEvent(t=now, kind="node_up", node_id=leased[0])])
+    # the preemption event retires the lease on the virtual clock…
+    sim.run_for(1e-6)
+    assert inv.n_workers < 4
+    # …and the next iteration boundary re-acquires to target
+    assert px.scale_to(4) == 4
+    assert px.map("echo", list(range(8)), timeout=1.0) == list(range(8))
+    assert px.scale_to(6) == 6                  # returned node reusable
+    assert px.scale_to(3) == 3                  # surplus leases released
+    assert inv.stats.batch_rpcs >= 2            # churn paid batched rpcs
+
+
+# ------------------------------------- retry-future deadline regressions
+def test_retrying_future_single_total_deadline():
+    """A crash-retry must NOT restart the timeout: the deadline is
+    computed once, so the total wait is bounded by ``timeout`` even
+    though the retry's service would finish later."""
+    lib = _lib(("work", lambda x: x, 1.5))
+    sim, inv = _cluster(lib, n_nodes=2, seed=4)
+    inv.allocate(2)
+    victim = inv._worker_pairs()[0][1].manager.server_id
+    # a pad keeps the target QUEUED on the victim: crash() lets the
+    # in-flight invocation finish (real-mode parity), queued work fails
+    inv.submit("work", 0, worker_hint=0)
+    f = inv.submit("work", 7, worker_hint=0)
+    sim.at(1.0, sim.crash_node, victim)
+    # crash at t=1.0 -> retry completes at t=2.5; budget expires at 2.0.
+    # (The old per-attempt timeout would have waited until 2.5 and
+    # returned success 0.5 s past the caller's budget.)
+    with pytest.raises(TimeoutError):
+        f.get(2.0)
+    assert sim.clock.now() == pytest.approx(2.0, abs=1e-6)
+    assert inv.stats.retries == 1
+
+
+def test_retrying_future_retry_within_budget_succeeds():
+    lib = _lib(("work", lambda x: x + 1, 1.5))
+    sim, inv = _cluster(lib, n_nodes=2, seed=4)
+    inv.allocate(2)
+    victim = inv._worker_pairs()[0][1].manager.server_id
+    t0 = sim.clock.now()
+    inv.submit("work", 0, worker_hint=0)        # pad: keeps f queued
+    f = inv.submit("work", 7, worker_hint=0)
+    sim.at(1.0, sim.crash_node, victim)
+    assert f.get(4.0) == 8
+    elapsed = sim.clock.now() - t0
+    assert elapsed == pytest.approx(2.5, abs=1e-3)  # crash + one service
+    assert elapsed <= 4.0                           # within the budget
+
+
+def test_map_single_total_budget():
+    """Invoker.map shares ONE deadline across the gather: three 1 s
+    invocations on one worker must time out at t=2.5, not let the
+    third future enjoy a fresh 2.5 s allowance (finishing at 3.0)."""
+    lib = _lib(("work", lambda x: x, 1.0))
+    sim, inv = _cluster(lib, n_nodes=1)
+    inv.allocate(1)
+    with pytest.raises(TimeoutError):
+        inv.map("work", [1, 2, 3], timeout=2.5)
+    assert sim.clock.now() == pytest.approx(2.5, abs=1e-6)
+
+
+# -------------------------------------------------- invocation-pool leaks
+def test_crash_retry_recycles_failed_record():
+    """The crashed attempt's pooled record is released back to the
+    free list once the facade swaps to the retry — not abandoned as a
+    future<->invocation cycle for the gc."""
+    lib = _lib(("work", lambda x: x, 1e-3))
+    sim, inv = _cluster(lib, n_nodes=2, seed=5)
+    inv.allocate(2)
+    victim = inv._worker_pairs()[0][1].manager.server_id
+    inv.submit("work", 0, worker_hint=0)        # pad: keeps rec0 queued
+    f = inv.submit("work", 9, worker_hint=0)
+    rec0 = f.invocation
+    sim.crash_node(victim)                      # settles rec0 for good
+    assert f.get(1.0) == 9
+    assert f.invocation is not rec0             # facade swapped first
+    assert any(r is rec0 for r in invocation_mod._POOL)
+
+
+def test_submit_dispatch_failure_releases_record():
+    """submit() that cannot dispatch (no live workers) recycles the
+    record it minted instead of leaking it with the exception."""
+    lib = _lib(("work", lambda x: x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=1)         # nothing allocated
+    invocation_mod._POOL.clear()
+    with pytest.raises(AllocationFailed):
+        inv.submit("work", 1)
+    assert len(invocation_mod._POOL) == 1
+
+
+def test_pool_stable_under_sustained_crash_retries():
+    """10k-invocation loop with fault-injected executor crashes: the
+    free list stays bounded (released records are reused, crashed ones
+    recycled) instead of growing with the invocation count."""
+    lib = _lib(("work", lambda x: x, 20e-6))
+    sim, inv = _cluster(lib, n_nodes=8, workers_per_node=8, seed=6,
+                        fault_rate=0.004)
+    inv.allocate_batch(64, lease_workers=8)
+    pool_cap = len(invocation_mod._POOL) + 8
+    for i in range(10_000):
+        assert inv.submit("work", i).get(1.0) == i
+        if i % 1000 == 0:
+            assert len(invocation_mod._POOL) <= pool_cap
+    assert len(invocation_mod._POOL) <= pool_cap
+    assert inv.stats.retries >= 10              # crashes really happened
+    assert inv.stats.failures == 0
+
+
+# ------------------------------------------------- stale dispatch snapshot
+def test_dispatch_revalidates_stale_empty_cache():
+    """An empty CACHED pairs snapshot is revalidated exactly once —
+    leases that arrived since the snapshot are found, and a fresh empty
+    snapshot is not recomputed back-to-back."""
+    lib = _lib(("echo", lambda x: x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=2)
+    inv.allocate(2)
+    calls = []
+    orig = inv._worker_pairs
+
+    def counting(cached=False):
+        calls.append(cached)
+        return orig(cached)
+
+    inv._worker_pairs = counting
+    inv._pairs_cache = []                       # stale: leases DO exist
+    assert inv.submit("echo", 5).get(1.0) == 5
+    assert calls == [False]                     # one revalidation
+
+
+def test_dispatch_empty_cluster_single_snapshot():
+    lib = _lib(("echo", lambda x: x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=1)         # no allocation at all
+    calls = []
+    orig = inv._worker_pairs
+
+    def counting(cached=False):
+        calls.append(cached)
+        return orig(cached)
+
+    inv._worker_pairs = counting
+    with pytest.raises(AllocationFailed):
+        inv.submit("echo", 1)
+    # a freshly-computed empty snapshot is authoritative: exactly one
+    # _worker_pairs call per dispatch sweep, not two back-to-back
+    assert calls == [False]
+
+
+# ----------------------------------------------- ported parallel use cases
+def test_jacobi_simulated_bit_identical_and_elastic():
+    import benchmarks.usecase_jacobi as uj
+    a = uj.run_simulated(0)
+    assert a == uj.run_simulated(0)             # bit-identical per seed
+    assert a != uj.run_simulated(1)             # the seed matters
+    final = a[-2]
+    assert final[5] < 1e-6                      # converged
+    assert final[3] >= 1                        # crash-retries exercised
+    assert final[4] >= 1                        # churn forced re-setup
+    assert final[2] == 6                        # scaled up after node_up
+
+
+def test_blackscholes_simulated_bit_identical_fanin():
+    import benchmarks.usecase_blackscholes as ub
+    kw = dict(workers=(1, 4), n_options=16384)
+    a = ub.run_simulated(0, **kw)
+    assert a == ub.run_simulated(0, **kw)
+    by = {r[0]: r for r in a}
+    assert by[4][1] < by[1][1]                  # makespan shrinks with W
+    assert by[4][5] > by[1][5]                  # fan-in congestion grows
+    assert all(r[2] for r in a)                 # no options dropped
+
+
+def test_parallel_workers_simulated_matches_closed_form():
+    import benchmarks.parallel_workers as pw
+    rows = pw.run_simulated(0, workers=(1, 8), sizes=(1 << 10, 1 << 20))
+    by = {(r[0], r[1]): r for r in rows}
+    # 1 kB: below the tracking floor, flat and uncongested
+    assert by[(1024, 8)][2] == by[(1024, 1)][2]
+    assert by[(1024, 8)][4] == 0
+    # 1 MB x8: wire sharing ~8x solo, within the closed form's ballpark
+    slowdown = by[(1 << 20, 8)][2] / by[(1 << 20, 1)][2]
+    assert 4.0 < slowdown < 12.0
+    assert by[(1 << 20, 8)][4] > 0
+    assert by[(1 << 20, 8)][2] == pytest.approx(by[(1 << 20, 8)][3],
+                                                rel=0.05)
