@@ -48,6 +48,19 @@ TRACE_KW = dict(utilization=0.5, fault_drop_rate=0.02,
                 drop_window_s=0.3, n_partitions=2, partition_width=3,
                 n_storms=4, storm_transfers=8, storm_bytes=4 << 20)
 
+# streaming row: 10M invocations at the SAME offered load and the SAME
+# churn/fault event budget as the 1M acceptance replay, observed over a
+# 10x longer span (mean idle scales with duration, so the trace carries
+# the same ~4.5k events either way).  The row exists to prove the
+# bounded-memory path: 10x the invocations for ~constant extra wall.
+STREAM_N_INV = 10_000_000
+STREAM_DURATION_S = 20.0
+STREAM_CLIENTS = 64
+STREAM_WORKERS = 4
+#: 10M wall must stay under this multiple of the fresh 1M wall (the
+#: measured ratio is ~1.5x; headroom for noisy CI boxes)
+STREAM_WALL_RATIO_MAX = 1.8
+
 
 def calibrate(n: int = 2_000_000) -> float:
     """Machine-speed proxy: Mops/s of a fixed pure-Python loop."""
@@ -117,6 +130,19 @@ def _make_trace(n_nodes: int, duration_s: float, seed: int) -> ChurnTrace:
                                              if k != "utilization"})
 
 
+def _make_stretched_trace(n_nodes: int, duration_s: float,
+                          seed: int) -> ChurnTrace:
+    """The acceptance trace's event budget observed over ``duration_s``
+    instead of 2 s: per-node churn slows in proportion, so a 10x longer
+    replay sees the same number of preemptions/drop phases/partitions/
+    storms — the knob that lets invocation count scale without the
+    fault schedule scaling with it."""
+    return ChurnTrace.synthetic_piz_daint(
+        n_nodes, duration_s, TRACE_KW["utilization"], seed=seed,
+        mean_idle_s=0.5 * (duration_s / 2.0),
+        **{k: v for k, v in TRACE_KW.items() if k != "utilization"})
+
+
 def bench_replay(n_nodes: int = 1000, n_invocations: int = 200_000,
                  duration_s: float = 2.0, n_clients: int = 16,
                  workers_per_client: int = 2, seed: int = SEED) -> dict:
@@ -143,6 +169,8 @@ def bench_replay(n_nodes: int = 1000, n_invocations: int = 200_000,
         "n_nodes": n_nodes,
         "n_invocations": n_invocations,
         "completed": stats.completed,
+        "failed": stats.failed,
+        "lost": stats.lost,
         "trace_events": stats.trace_events,
         "storm_transfers": stats.storm_transfers,
         "clock_events": events,
@@ -155,11 +183,46 @@ def bench_replay(n_nodes: int = 1000, n_invocations: int = 200_000,
     }
 
 
+def bench_replay_streaming(n_invocations: int = STREAM_N_INV,
+                           seed: int = SEED) -> dict:
+    """The 10M streaming row plus a fresh same-shape 1M reference run
+    (same box, same process) — the ratio between the two is the
+    headline number: constant event budget, 10x the invocations."""
+    def one(n_inv, duration_s):
+        trace = (_make_trace if duration_s == 2.0
+                 else _make_stretched_trace)(1000, duration_s, seed)
+        sim = SimulatedCluster(n_nodes=1000, workers_per_node=2,
+                               n_replicas=2, seed=seed)
+        t0 = time.perf_counter()
+        stats = TraceReplayer(sim, trace).replay(
+            n_clients=STREAM_CLIENTS, n_invocations=n_inv,
+            workers_per_client=STREAM_WORKERS)
+        return stats, time.perf_counter() - t0
+
+    ref, wall_1m = one(1_000_000, 2.0)
+    stats, wall_10m = one(n_invocations, STREAM_DURATION_S)
+    return {
+        "n_nodes": 1000,
+        "n_invocations": n_invocations,
+        "completed": stats.completed,
+        "failed": stats.failed,
+        "lost": stats.lost,
+        "trace_events": stats.trace_events,
+        "wall_1m_ref_s": wall_1m,
+        "completed_1m_ref": ref.completed,
+        "wall_s": wall_10m,
+        "wall_ratio_vs_1m": wall_10m / wall_1m,
+        "invocations_per_s": n_invocations / wall_10m,
+        "us_per_invocation": wall_10m / n_invocations * 1e6,
+    }
+
+
 def _digest(stats) -> str:
     """Deterministic one-line summary of a replay (everything in it is
     a pure function of the seed — safe to diff across processes)."""
     return (f"completed={stats.completed}/{stats.invocations_requested}"
-            f" failed={stats.failed} preempt={stats.preemptions}"
+            f" failed={stats.failed} lost={stats.lost}"
+            f" preempt={stats.preemptions}"
             f" drops={stats.fabric_drops} storms={stats.storm_transfers}"
             f" congested={stats.congested_sends}"
             f" p50={stats.rtt_p50_s:.9g} p99={stats.rtt_p99_s:.9g}"
@@ -188,6 +251,85 @@ def _smoke_measure():
     return s1, s2, ev1, ev2, min(dt1, dt2)
 
 
+def _run_smoke_streaming():
+    """CI gate for the streaming stats path: the smoke-shaped replay in
+    sketch mode twice (bit-identity + diffable stdout), then once in
+    exact mode — every non-percentile field must agree bit-for-bit
+    (same StreamingMoments fold under both modes), and the sketch
+    percentiles must sit within tolerance of the exact ones."""
+    n_nodes, n_inv = 100, 5_000
+    trace = _make_trace(n_nodes, 1.0, SEED)
+
+    def one(mode):
+        sim = SimulatedCluster(n_nodes=n_nodes, workers_per_node=2,
+                               n_replicas=2, seed=SEED)
+        return TraceReplayer(sim, trace).replay(
+            n_clients=8, n_invocations=n_inv, workers_per_client=2,
+            rtt_stats=mode)
+
+    s1 = one("sketch")
+    s2 = one("sketch")
+    if s1 != s2:
+        diff = [k for k, v in s1.as_dict().items()
+                if v != getattr(s2, k)]
+        raise SystemExit(
+            f"nondeterministic streaming replay; fields differ: {diff}")
+    se = one("exact")
+    pct_fields = ("rtt_p50_s", "rtt_p99_s")
+    diff = [k for k, v in s1.as_dict().items()
+            if k not in pct_fields and v != getattr(se, k)]
+    if diff:
+        raise SystemExit(
+            f"sketch-mode replay diverged from exact mode on "
+            f"non-percentile fields: {diff}")
+    for k in pct_fields:
+        a, b = getattr(s1, k), getattr(se, k)
+        if abs(a - b) > 0.05 * abs(b) + 1e-9:
+            raise SystemExit(
+                f"sketch {k}={a} strayed >5% from exact {b}")
+    print(f"# streaming smoke ok: {_digest(s1)}"
+          f" exact_p50={se.rtt_p50_s:.9g} exact_p99={se.rtt_p99_s:.9g}")
+    return []
+
+
+def _run_memgate():
+    """CI gate for bounded memory: the replay's peak traced working
+    set must be ~flat in n_invocations (chunked arrivals + quantile
+    sketches + pooled invocations; nothing O(n) survives the loop).
+    8x the invocations on an 8x-stretched trace — same offered load,
+    same event budget — must not grow peak memory beyond noise."""
+    import tracemalloc
+    n_nodes = 100
+
+    def peak(n_inv, duration_s):
+        trace = _make_stretched_trace(n_nodes, duration_s, SEED)
+        sim = SimulatedCluster(n_nodes=n_nodes, workers_per_node=2,
+                               n_replicas=2, seed=SEED)
+        replayer = TraceReplayer(sim, trace)
+        tracemalloc.start()
+        try:
+            tracemalloc.reset_peak()
+            replayer.replay(n_clients=8, n_invocations=n_inv,
+                            workers_per_client=2)
+            _, pk = tracemalloc.get_traced_memory()
+        finally:
+            tracemalloc.stop()
+        return pk
+
+    small = peak(20_000, 2.0)
+    large = peak(160_000, 16.0)
+    ratio = large / small
+    print(f"memgate: peak {small / 1e6:.2f} MB @ 20k vs "
+          f"{large / 1e6:.2f} MB @ 160k (ratio {ratio:.2f})",
+          file=sys.stderr)
+    if ratio > 1.5:
+        raise SystemExit(
+            f"replay working set grew {ratio:.2f}x for 8x the "
+            f"invocations — streaming memory bound broken (limit 1.5x)")
+    print("# memgate ok: peak traced memory flat in n_invocations")
+    return []
+
+
 def run(quick: bool = False, smoke: bool = False,
         write_baseline: bool = False):
     """Full measurement.  The committed ``BENCH_hotpath.json`` CI
@@ -201,6 +343,7 @@ def run(quick: bool = False, smoke: bool = False,
     calib = calibrate()
     core = bench_event_core(100_000 if quick else 300_000)
     rep = bench_replay(n_invocations=n_inv)
+    rep_stream = None if quick else bench_replay_streaming()
     _, _, smoke_ev, _, smoke_dt = _smoke_measure()
     doc = {
         "benchmark": "hotpath",
@@ -214,6 +357,8 @@ def run(quick: bool = False, smoke: bool = False,
         "normalized_smoke_events_per_mop":
             (smoke_ev / smoke_dt) / (calib * 1e6),
     }
+    if rep_stream is not None:
+        doc["replay_10m_streaming"] = rep_stream
     if write_baseline and not quick:
         with open(BASELINE_PATH, "w") as f:
             json.dump(doc, f, indent=1)
@@ -229,7 +374,13 @@ def run(quick: bool = False, smoke: bool = False,
         ["replay_events_per_s", rep["events_per_s"]],
         ["replay_us_per_invocation", rep["us_per_invocation"]],
         ["normalized_events_per_mop", doc["normalized_events_per_mop"]],
-    ], ["metric", "value"])
+    ] + ([
+        ["streaming_10m_wall_s", rep_stream["wall_s"]],
+        ["streaming_10m_wall_ratio_vs_1m",
+         rep_stream["wall_ratio_vs_1m"]],
+        ["streaming_10m_invocations_per_s",
+         rep_stream["invocations_per_s"]],
+    ] if rep_stream is not None else []), ["metric", "value"])
     if write_baseline and not quick:
         print(f"# wrote {os.path.abspath(BASELINE_PATH)}")
     return doc
@@ -274,5 +425,10 @@ def _run_smoke():
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv, smoke="--smoke" in sys.argv,
-        write_baseline="--smoke" not in sys.argv)
+    if "--smoke-streaming" in sys.argv:
+        _run_smoke_streaming()
+    elif "--memgate" in sys.argv:
+        _run_memgate()
+    else:
+        run(quick="--quick" in sys.argv, smoke="--smoke" in sys.argv,
+            write_baseline="--smoke" not in sys.argv)

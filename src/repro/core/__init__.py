@@ -29,6 +29,8 @@ from repro.core.resource_manager import (AvailabilityBus, ResourceManager,
                                          ResourceManagerReplica)
 from repro.core.simulation import (PartitionStats, ScenarioStats,
                                    SimulatedCluster)
+from repro.core.stats import (P2Quantile, QuantileDigest, RTT_STATS_MODES,
+                              RttAccumulator, StreamingMoments)
 from repro.core.trace import (ChurnTrace, ElasticityStats, EVENT_KINDS,
                               TraceEvent, TraceReplayer, replay_trace)
 from repro.core.transport import (Channel, ChannelDropped, ChannelError,
@@ -53,7 +55,9 @@ __all__ = [
     "Sandbox", "Tier", "invocation_rtt", "max_offload_rate", "n_local_min",
     "plan_split", "tier_overhead", "write_time", "AvailabilityBus",
     "ResourceManager", "ResourceManagerReplica", "PartitionStats",
-    "ScenarioStats", "SimulatedCluster", "Channel", "ChannelDropped",
+    "ScenarioStats", "SimulatedCluster",
+    "P2Quantile", "QuantileDigest", "RTT_STATS_MODES", "RttAccumulator",
+    "StreamingMoments", "Channel", "ChannelDropped",
     "ChannelError", "ChannelPartitioned", "CONTROL_MSG_BYTES",
     "CongestionEngine", "FABRICS", "Fabric", "FabricParams",
     "HEARTBEAT_MSG_BYTES", "Link", "Topology", "Transfer",

@@ -56,6 +56,19 @@ class Ledger:
             if self._pending_compute[client_id] >= GRANULARITY_S:
                 self._flush_locked(client_id)
 
+    def add_compute_bulk(self, client_id: str, seconds: float, n: int):
+        """Fold ``n`` completed invocations totalling ``seconds`` of
+        compute in one locked update — the cohort fast path bills a
+        whole fault-free window at once instead of paying a lock
+        round-trip per invocation.  Granule semantics match ``n``
+        individual ``add_compute`` calls: at most one granule of
+        pending compute is ever at risk."""
+        with self._lock:
+            self._pending_compute[client_id] += seconds
+            self._bills[client_id].invocations += n
+            if self._pending_compute[client_id] >= GRANULARITY_S:
+                self._flush_locked(client_id)
+
     def add_allocation(self, client_id: str, gb_seconds: float):
         with self._lock:
             self._bills[client_id].gb_seconds += gb_seconds

@@ -726,6 +726,17 @@ class VirtualClock(Clock):
         return (self._queue.oneshots > 0 or bool(self._inbox)
                 or bool(self._waiters))
 
+    def foreign_activity(self) -> bool:
+        """Cross-thread work the driver has not absorbed yet: threads
+        sleeping on this clock, or inbox entries scheduled from
+        off-driver threads.  The vectorized replay path refuses to
+        compress a time window while any exists — a sleeper's wake or
+        an unknown inbox callback could land mid-window and observe
+        state the cohort would have fast-forwarded past.  Driver-side
+        one-shot and repeating events are NOT foreign: the cohort's
+        eligibility checks account for those explicitly."""
+        return bool(self._waiters) or bool(self._inbox)
+
     def _next_due(self) -> Optional[float]:
         """Earliest pending instant: a scheduled callback (one-shot or
         repeating) or a sleeping thread's deadline."""

@@ -80,6 +80,7 @@ class ExecutorWorker(threading.Thread):
         self._rng = random.Random(seed)
         self._q: "queue.Queue" = queue.Queue()
         self._last_activity: Optional[float] = None
+        self._busy_until: Optional[float] = None   # virtual-mode only
         self.busy_seconds = 0.0
         self.n_invocations = 0
         self.alive_flag = True
@@ -320,6 +321,9 @@ class ExecutorWorker(threading.Thread):
         # single GIL-atomic store: concurrent readers (crash from
         # another thread) see either the old or the new id, both safe
         self._inflight_id = inv.header.invocation_id
+        # busy horizon for the vectorized cohort: when this execution
+        # (and thus the worker, absent queued work) will finish
+        self._busy_until = self.clock._now + svc
         # discard variant: the completion event is never cancelled
         # (crashes leave it to no-op via the pending check), so the
         # event object recycles through the clock's free list
@@ -373,6 +377,46 @@ class ExecutorWorker(threading.Thread):
             inv.future._fail(derr)
         else:
             inv.future._fulfill(result)
+
+    # ------------------------------------------------- cohort fast path
+    def vectorizable(self) -> bool:
+        """True when the worker's executions can be simulated
+        closed-form by the vectorized replay path: alive, not stopping,
+        and fault-free.  The fault check matters for determinism, not
+        just speed — a faulty worker consumes its RNG per execution, so
+        it must stay on the scalar path where every draw happens.
+        In-flight or queued work does NOT disqualify: the cohort seeds
+        its FIFO recurrence from ``cohort_seed`` and the pending
+        completions fire (and bill) independently mid-window."""
+        return (self.alive_flag and not self._stopped
+                and not self.fault_rate)
+
+    def cohort_seed(self, queued_svc: float) -> Optional[float]:
+        """When this worker frees up, as the cohort must assume it:
+        the in-flight execution's finish time plus ``queued_svc``
+        seconds per FIFO-queued invocation (the replay runs one
+        function, so every queued item costs the same service time).
+        ``None`` when the worker has never executed — the cohort seeds
+        WARM from the first arrival."""
+        bu = self._busy_until
+        if bu is None:
+            bu = self._last_activity     # threaded-mode history only
+            if bu is None:
+                return None
+        return bu + queued_svc * len(self._vqueue)
+
+    def absorb_cohort(self, n: int, busy_s: float,
+                      last_activity: float):
+        """Charge ``n`` already-simulated executions (``busy_s`` total
+        service time, last one finishing at ``last_activity``) to this
+        worker's counters.  The cohort path computed tiers/finish times
+        itself; this records exactly what ``n`` scalar ``_complete``
+        calls would have, and advances the busy horizon so the NEXT
+        cohort queues behind this one."""
+        self.busy_seconds += busy_s
+        self.n_invocations += n
+        self._last_activity = last_activity
+        self._busy_until = last_activity
 
     def _fail_pending(self, err: ExecutorCrash,
                       keep_id: Optional[int] = None):

@@ -461,6 +461,28 @@ class Invoker:
     def _alive_workers(self) -> List[ExecutorWorker]:
         return [w for w, _, _ in self._worker_pairs()]
 
+    # ------------------------------------------------- cohort fast path
+    def cohort_pairs(self) \
+            -> List[Tuple[ExecutorWorker, Connection, Channel]]:
+        """The dispatch snapshot exactly as ``_dispatch``'s first sweep
+        would see it: the validated cache when present, else a fresh
+        validation.  The cohort path inspects these triples to decide
+        whether a window can be simulated closed-form."""
+        pairs = self._pairs_cache
+        if pairs is None:
+            pairs = self._worker_pairs()
+        return pairs
+
+    def take_rr(self, n: int) -> int:
+        """Consume ``n`` round-robin dispatch slots in one step and
+        return the first, so a vectorized cohort lands on exactly the
+        worker sequence ``n`` scalar ``_dispatch`` calls would have
+        used, and the next scalar dispatch continues the rotation
+        unperturbed."""
+        c0 = next(self._rr)
+        self._rr = itertools.count(c0 + n)
+        return c0
+
     def _drop_connection(self, conn: Connection):
         """A broken route is indistinguishable from a dead executor on
         the client side (§3.5): drop the cached connection."""

@@ -57,6 +57,7 @@ from repro.core.invoker import AllocationFailed, ExecutorCrash, Invoker
 from repro.core.lease import Lease
 from repro.core.perf_model import DEFAULT_NET, NetParams
 from repro.core.resource_manager import ResourceManager
+from repro.core.stats import RttAccumulator, StreamingMoments
 from repro.core.transport import (Fabric, FabricParams, Topology,
                                   fabric_params_for_net)
 
@@ -331,7 +332,8 @@ class SimulatedCluster:
                          lease_timeout_s: Optional[float] = None,
                          lease_sweep_interval_s: float = 0.01,
                          crash_schedule: Optional[Dict[str, float]] = None,
-                         get_timeout_s: float = 120.0) -> ScenarioStats:
+                         get_timeout_s: float = 120.0,
+                         rtt_stats: str = "sketch") -> ScenarioStats:
         """Multi-tenant Poisson workload with optional lease churn and
         node crashes; returns deterministic latency-breakdown stats."""
         lib = FunctionLibrary("sim")
@@ -378,7 +380,15 @@ class SimulatedCluster:
         self.stop_lease_sweeper()
         self.run_until_idle()
 
-        rtts, tiers, done_timelines = [], {}, []
+        # bounded-memory collection: RTTs fold into a quantile sketch
+        # (or the exact accumulator when rtt_stats="exact"), the
+        # breakdown components into streaming moments — no per-
+        # invocation lists survive the loop (DESIGN.md §17)
+        acc = RttAccumulator(rtt_stats)
+        net_in_m, overhead_m, exec_m = (StreamingMoments(),
+                                        StreamingMoments(),
+                                        StreamingMoments())
+        tiers: Dict[str, int] = {}
         completed = failed = 0
         for fut in futures:
             try:
@@ -388,15 +398,16 @@ class SimulatedCluster:
                 continue
             completed += 1
             tl = fut.timeline
-            done_timelines.append(tl)
-            rtts.append(tl.rtt_modeled)
+            acc.add(tl.rtt_modeled)
+            net_in_m.add(tl.net_in)
+            overhead_m.add(tl.overhead)
+            exec_m.add(tl.exec_time)
             tier = fut.invocation.tier.value
             tiers[tier] = tiers.get(tier, 0) + 1
         failed += n_invocations - len(futures)
 
         lease_states = self._teardown_tenants(tenants)
         totals = self.ledger.totals()
-        arr = np.asarray(rtts) if rtts else np.zeros(1)
         return ScenarioStats(
             invocations_requested=n_invocations,
             completed=completed,
@@ -407,21 +418,15 @@ class SimulatedCluster:
             leases_granted=len(self.leases),
             tier_counts=tiers,
             lease_states=lease_states,
-            rtt_p50_s=float(np.percentile(arr, 50)),
-            rtt_p99_s=float(np.percentile(arr, 99)),
-            rtt_mean_s=float(arr.mean()),
-            rtt_max_s=float(arr.max()),
+            rtt_p50_s=acc.percentile(50),
+            rtt_p99_s=acc.percentile(99),
+            rtt_mean_s=acc.mean,
+            rtt_max_s=acc.max,
             # breakdown means over COMPLETED invocations only (failed
             # futures carry zeroed timelines), same population as rtt_*
-            net_in_mean_s=float(np.mean(
-                [t.net_in for t in done_timelines])
-                if done_timelines else 0.0),
-            overhead_mean_s=float(np.mean(
-                [t.overhead for t in done_timelines])
-                if done_timelines else 0.0),
-            exec_mean_s=float(np.mean(
-                [t.exec_time for t in done_timelines])
-                if done_timelines else 0.0),
+            net_in_mean_s=net_in_m.mean,
+            overhead_mean_s=overhead_m.mean,
+            exec_mean_s=exec_m.mean,
             gb_seconds=totals.gb_seconds,
             compute_seconds=totals.compute_seconds,
             invocations_billed=totals.invocations,
@@ -439,7 +444,8 @@ class SimulatedCluster:
                            service_time_s: float = 100e-6,
                            mean_interarrival_s: float = 150e-6,
                            heartbeat_interval_s: float = 0.005,
-                           get_timeout_s: float = 60.0) -> PartitionStats:
+                           get_timeout_s: float = 60.0,
+                           rtt_stats: str = "sketch") -> PartitionStats:
         """Network partition + heal under virtual time (§3.5 fault
         tolerance on the transport layer): at ``t_partition`` the
         ``isolate`` nodes are cut off from clients AND the resource
@@ -511,7 +517,7 @@ class SimulatedCluster:
             replica.__dict__.pop("sweep_heartbeats", None)
         self.run_until_idle()
 
-        rtts: List[float] = []
+        acc = RttAccumulator(rtt_stats)
         completed = failed = 0
         for fut in futures:
             try:
@@ -521,12 +527,11 @@ class SimulatedCluster:
                 failed += 1
                 continue
             completed += 1
-            rtts.append(fut.timeline.rtt_modeled)
+            acc.add(fut.timeline.rtt_modeled)
         failed += n_invocations - len(futures)
 
         lease_states = self._teardown_tenants(tenants)
         wire = self.fabric.stats()
-        arr = np.asarray(rtts) if rtts else np.zeros(1)
         return PartitionStats(
             invocations_requested=n_invocations,
             completed=completed,
@@ -546,7 +551,7 @@ class SimulatedCluster:
             fabric_transfers=wire.get("transfers", 0),
             congested_sends=wire.get("congested", 0),
             congestion_delay_s=wire.get("congestion_delay_s", 0.0),
-            rtt_p50_s=float(np.percentile(arr, 50)),
-            rtt_mean_s=float(arr.mean()),
+            rtt_p50_s=acc.percentile(50),
+            rtt_mean_s=acc.mean,
             t_end_s=self.clock.now(),
         )

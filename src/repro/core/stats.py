@@ -1,0 +1,342 @@
+"""Streaming statistics for bounded-memory replays (DESIGN.md §17).
+
+A 10M-invocation replay cannot hold every RTT sample in a Python list:
+at 8 bytes a float (plus list slack) the sample array alone outgrows
+the whole simulator working set, and a single end-of-run
+``np.percentile`` pass forces a second traversal of data that was
+already streamed past once.  This module provides the O(1)-memory
+replacements:
+
+* ``P2Quantile`` — the classic Jain & Chlamtac P² estimator: five
+  markers per tracked quantile, updated per observation with the
+  piecewise-parabolic rule.  Exact until five samples have arrived,
+  approximate after.  Used where samples arrive one at a time.
+* ``QuantileDigest`` — a t-digest-style merging sketch sized by a
+  ``compression`` factor: observations buffer up and fold into a
+  bounded centroid set with the arcsine scale function, so resolution
+  concentrates at the tails (p99 stays sharp at 10M samples).  Batch
+  absorption (``add_vector``) is fully vectorized — the cohort fast
+  path feeds whole numpy arrays without a per-sample Python loop.
+* ``StreamingMoments`` — count / compensated sum / min / max, folded
+  chunk-at-a-time with ``math.fsum`` so the mean is reproducible
+  independent of chunk boundaries within a seed.
+* ``RttAccumulator`` — the drop-in replacement for the old
+  ``rtts: List[float]`` + ``np.percentile`` pattern, with the mode kept
+  selectable: ``"sketch"`` (bounded memory, digest percentiles) or
+  ``"exact"`` (samples kept, ``np.percentile``) for equivalence tests.
+  The non-percentile statistics (count/mean/max) are computed by the
+  SAME fold in both modes, so a sketch-mode and an exact-mode replay of
+  one seed agree on every non-percentile field bit-for-bit.
+
+Everything here is deterministic: no RNG, no wall clock, and the
+centroid compression depends only on the observation sequence.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["P2Quantile", "QuantileDigest", "StreamingMoments",
+           "RttAccumulator", "RTT_STATS_MODES"]
+
+RTT_STATS_MODES = ("sketch", "exact")
+
+
+class P2Quantile:
+    """Jain & Chlamtac's P² algorithm: one quantile, five markers,
+    O(1) memory and O(1) per-observation update.  Exact for the first
+    five observations (and for any constant stream)."""
+
+    __slots__ = ("p", "_q", "_n", "_np", "_dn", "count")
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {p}")
+        self.p = p
+        self._q: List[float] = []          # marker heights
+        self._n = [0, 1, 2, 3, 4]          # marker positions (0-based)
+        self._np = [0.0, 2 * p, 4 * p, 2 + 2 * p, 4.0]  # desired
+        self._dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+        self.count = 0
+
+    def add(self, x: float):
+        self.count += 1
+        q = self._q
+        if len(q) < 5:
+            # bootstrap: exact order statistics until 5 samples exist
+            q.append(x)
+            q.sort()
+            return
+        n = self._n
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            while x >= q[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            n[i] += 1
+        np_ = self._np
+        dn = self._dn
+        for i in range(5):
+            np_[i] += dn[i]
+        for i in (1, 2, 3):
+            d = np_[i] - n[i]
+            if ((d >= 1.0 and n[i + 1] - n[i] > 1)
+                    or (d <= -1.0 and n[i - 1] - n[i] < -1)):
+                d = 1 if d >= 1.0 else -1
+                qi = self._parabolic(i, d)
+                if not q[i - 1] < qi < q[i + 1]:
+                    qi = self._linear(i, d)
+                q[i] = qi
+                n[i] += d
+
+    def _parabolic(self, i: int, d: int) -> float:
+        q, n = self._q, self._n
+        return q[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (q[i + 1] - q[i])
+            / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1])
+            / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, d: int) -> float:
+        q, n = self._q, self._n
+        return q[i] + d * (q[i + d] - q[i]) / (n[i + d] - n[i])
+
+    def value(self) -> float:
+        q = self._q
+        if not q:
+            return 0.0
+        if self.count < 5:
+            # exact small-sample quantile, numpy 'linear' convention
+            return float(np.percentile(np.asarray(q), self.p * 100.0))
+        return q[2]
+
+
+class QuantileDigest:
+    """Merging t-digest over numpy centroid arrays.
+
+    Observations accumulate in a buffer; at ``flush`` the buffer is
+    sorted, concatenated with the existing centroids and re-compressed
+    into at most ~2x ``compression`` centroids using the arcsine scale
+    function k(q) = c/(2π)·asin(2q−1), whose derivative blows up at
+    q→0 and q→1 — centroids stay near-singleton at the tails, which is
+    what keeps p99/p999 estimates sharp.  The whole merge is numpy
+    (sort + bucket reduction): absorbing a 100k-sample cohort costs a
+    few array passes, not 100k Python iterations."""
+
+    __slots__ = ("compression", "_means", "_weights", "_buf",
+                 "_buf_len", "_flush_at")
+
+    def __init__(self, compression: int = 200, buffer_size: int = 4096):
+        self.compression = compression
+        self._means = np.empty(0)
+        self._weights = np.empty(0)
+        self._buf: List[np.ndarray] = []
+        self._buf_len = 0
+        self._flush_at = buffer_size
+
+    @property
+    def count(self) -> float:
+        return float(self._weights.sum()) + sum(
+            a.size for a in self._buf)
+
+    def add(self, x: float):
+        self._buf.append(np.asarray([x], dtype=np.float64))
+        self._buf_len += 1
+        if self._buf_len >= self._flush_at:
+            self.flush()
+
+    def add_vector(self, xs: np.ndarray):
+        if xs.size == 0:
+            return
+        self._buf.append(np.asarray(xs, dtype=np.float64))
+        self._buf_len += xs.size
+        if self._buf_len >= self._flush_at:
+            self.flush()
+
+    def flush(self):
+        if not self._buf:
+            return
+        incoming = np.concatenate(self._buf)
+        self._buf = []
+        self._buf_len = 0
+        means = np.concatenate([self._means, incoming])
+        weights = np.concatenate(
+            [self._weights, np.ones(incoming.size)])
+        order = np.argsort(means, kind="stable")  # stable: determinism
+        means = means[order]
+        weights = weights[order]
+        total = weights.sum()
+        # mid-point quantile of each sorted item, mapped through the
+        # scale function and quantized: items sharing a bucket merge
+        cum = np.cumsum(weights) - 0.5 * weights
+        q = cum / total
+        k = (self.compression / (2.0 * math.pi)
+             * np.arcsin(2.0 * q - 1.0))
+        buckets = np.floor(k).astype(np.int64)
+        # reduceat over bucket boundaries: one merged centroid per
+        # occupied bucket, mean = weight-averaged member mean
+        starts = np.flatnonzero(np.diff(buckets, prepend=buckets[0]
+                                        - 1))
+        w_merged = np.add.reduceat(weights, starts)
+        m_merged = np.add.reduceat(means * weights, starts) / w_merged
+        self._means = m_merged
+        self._weights = w_merged
+
+    def percentile(self, pct: float) -> float:
+        """Estimate the ``pct`` percentile (0-100) by interpolating
+        the centroid cumulative-weight curve."""
+        self.flush()
+        m, w = self._means, self._weights
+        if m.size == 0:
+            return 0.0
+        if m.size == 1:
+            return float(m[0])
+        total = w.sum()
+        cum = np.cumsum(w) - 0.5 * w
+        target = pct / 100.0 * total
+        return float(np.interp(target, cum, m))
+
+
+class StreamingMoments:
+    """Count / sum / min / max folded chunk-at-a-time.  The sum is an
+    ``fsum`` over (chunk fsums), which is exact for the chunk and
+    reproducible for a fixed observation sequence — the fold is shared
+    by sketch and exact accumulator modes so their means agree
+    bit-for-bit."""
+
+    __slots__ = ("count", "_sums", "max", "min")
+
+    def __init__(self):
+        self.count = 0
+        self._sums: List[float] = []      # per-chunk exact sums
+        self.max = -math.inf
+        self.min = math.inf
+
+    def add(self, x: float):
+        self.count += 1
+        self._sums.append(float(x))
+        if len(self._sums) >= 256:
+            self._sums = [math.fsum(self._sums)]
+        if x > self.max:
+            self.max = x
+        if x < self.min:
+            self.min = x
+
+    def fold(self, xs: np.ndarray):
+        if xs.size == 0:
+            return
+        self.count += xs.size
+        # math.fsum over the chunk is exactly rounded; keeping the
+        # (few) per-chunk sums and fsum-ing those at read time keeps
+        # the final mean independent of how adds were batched
+        self._sums.append(math.fsum(xs.tolist()))
+        if len(self._sums) >= 256:
+            self._sums = [math.fsum(self._sums)]
+        hi = float(xs.max())
+        lo = float(xs.min())
+        if hi > self.max:
+            self.max = hi
+        if lo < self.min:
+            self.min = lo
+
+    @property
+    def sum(self) -> float:
+        return math.fsum(self._sums)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+
+class RttAccumulator:
+    """Replacement for ``rtts: List[float]`` + end-of-run
+    ``np.percentile``: O(1)-memory online percentiles in ``"sketch"``
+    mode, the old exact semantics in ``"exact"`` mode.  Scalar ``add``s
+    buffer and fold in chunks; ``add_vector`` absorbs whole cohorts.
+    Chunk boundaries influence neither mode's non-percentile results
+    (shared ``StreamingMoments`` fold) nor exact-mode percentiles."""
+
+    __slots__ = ("mode", "moments", "_digest", "_kept", "_pending",
+                 "_pending_len", "_chunk")
+
+    def __init__(self, mode: str = "sketch", *, compression: int = 200,
+                 chunk: int = 4096):
+        if mode not in RTT_STATS_MODES:
+            raise ValueError(
+                f"rtt stats mode must be one of {RTT_STATS_MODES}, "
+                f"got {mode!r}")
+        self.mode = mode
+        self.moments = StreamingMoments()
+        self._digest = (QuantileDigest(compression)
+                        if mode == "sketch" else None)
+        self._kept: List[np.ndarray] = []     # exact mode only
+        self._pending: List[float] = []
+        self._pending_len = 0
+        self._chunk = chunk
+
+    @property
+    def count(self) -> int:
+        return self.moments.count + self._pending_len
+
+    def add(self, x: float):
+        self._pending.append(x)
+        self._pending_len += 1
+        if self._pending_len >= self._chunk:
+            self.flush()
+
+    def add_vector(self, xs: Sequence[float]):
+        arr = np.asarray(xs, dtype=np.float64)
+        if arr.size == 0:
+            return
+        self.flush()                     # preserve observation order
+        self._absorb(arr)
+
+    def flush(self):
+        if not self._pending:
+            return
+        arr = np.asarray(self._pending, dtype=np.float64)
+        self._pending = []
+        self._pending_len = 0
+        self._absorb(arr)
+
+    def _absorb(self, arr: np.ndarray):
+        self.moments.fold(arr)
+        if self._digest is not None:
+            self._digest.add_vector(arr)
+        else:
+            self._kept.append(arr)
+
+    # ------------------------------------------------------------ reads
+    def percentile(self, pct: float) -> float:
+        self.flush()
+        if self.moments.count == 0:
+            return 0.0
+        if self._digest is not None:
+            return self._digest.percentile(pct)
+        return float(np.percentile(np.concatenate(self._kept), pct))
+
+    @property
+    def mean(self) -> float:
+        self.flush()
+        return self.moments.mean
+
+    @property
+    def max(self) -> float:
+        self.flush()
+        return self.moments.max if self.moments.count else 0.0
+
+    def samples(self) -> Optional[np.ndarray]:
+        """Exact mode's kept samples (None in sketch mode) — for tests
+        that cross-check the digest against ``np.percentile``."""
+        self.flush()
+        if self._kept:
+            return np.concatenate(self._kept)
+        return None if self.mode == "sketch" else np.empty(0)

@@ -45,6 +45,7 @@ import gc
 import io
 import json
 import random
+from collections import deque
 from dataclasses import dataclass, field, fields as dc_fields
 from typing import Dict, IO, Iterable, Iterator, List, Optional, Tuple, \
     Union
@@ -54,10 +55,13 @@ import numpy as np
 from repro.core.accounting import Price
 from repro.core.clock import VirtualClock
 from repro.core.functions import FunctionLibrary
-from repro.core.invocation import Invocation, payload_bytes
+from repro.core.invocation import (Invocation, InvocationHeader,
+                                   payload_bytes)
 from repro.core.invoker import (AllocationFailed, ExecutorCrash, Invoker,
                                 RetryingFuture)
+from repro.core.perf_model import Tier
 from repro.core.simulation import SimulatedCluster
+from repro.core.stats import RttAccumulator
 from repro.core.transport import ChannelPartitioned, Topology
 
 #: Recognized trace event kinds: batch-system churn + transport faults
@@ -425,10 +429,17 @@ class ElasticityStats:
     §6 lease-vs-static cost comparison.  ``==``-comparable: two
     same-seed replays must produce bit-identical instances."""
 
-    # workload outcome
+    # workload outcome.  ``completed + failed + lost`` accounts for
+    # every requested invocation: ``failed`` resolved with an error
+    # (dispatch gave up, or the post-drain client retry failed too);
+    # ``lost`` never resolved at all — arrivals the trace window never
+    # fired, or submissions whose future neither completed nor failed
+    # by the time the run drained (previously folded silently into
+    # ``failed``).
     invocations_requested: int = 0
     completed: int = 0
     failed: int = 0
+    lost: int = 0
     retries: int = 0
     reallocations: int = 0            # emergency re-leases after loss
     # churn accounting
@@ -547,6 +558,16 @@ class TraceReplayer:
             sim.bs.apply_trace_event(ev)
 
     # ---------------------------------------------------------- workload
+    #: Arrival stream chunk: pre-drawn arrival gaps / tenant picks per
+    #: refill, and the upper bound on one vectorized cohort.  Large
+    #: enough that refills are rare, small enough that the working set
+    #: stays O(CHUNK) however many invocations the replay streams.
+    ARRIVAL_CHUNK = 1 << 17
+
+    #: Below this many in-window arrivals the vectorized cohort's numpy
+    #: setup costs more than the scalar path it replaces.
+    MIN_COHORT = 16
+
     def replay(self, *, n_clients: int = 8, n_invocations: int = 10_000,
                workers_per_client: int = 2,
                service_time_s: float = 100e-6,
@@ -555,22 +576,33 @@ class TraceReplayer:
                allocation_window: int = 32,
                lease_timeout_s: Optional[float] = None,
                tail_s: float = 0.2,
-               get_timeout_s: float = 300.0) -> ElasticityStats:
+               get_timeout_s: float = 300.0,
+               rtt_stats: str = "sketch") -> ElasticityStats:
         """Run the full scenario and return deterministic stats.
 
-        Hot-path shape (DESIGN.md §15): completions STREAM — every
+        Hot-path shape (DESIGN.md §15/§17): completions STREAM — every
         invocation carries an ``on_complete`` hook that folds its
         round-trip into the stats at the instant it resolves and
         recycles the pooled record, so the working set stays bounded
         at in-flight size even for million-invocation traces (holding
         a million futures for an end-of-run sweep costs ~0.5 GB and a
-        second pass).  The arrival process is pre-drawn in one
-        vectorized pass and applied as ONE lazily-scheduled chain; the
-        churn/fault chain batches same-instant trace events into a
-        single callback.  Failed invocations (rare) park on a list and
-        re-run through the normal client retry machinery after the
-        trace drains — exactly when the old future sweep would have
-        retried them."""
+        second pass).  The arrival process is pre-drawn CHUNK at a
+        time (10M arrival instants never exist at once) and applied as
+        ONE lazily-scheduled chain; the churn/fault chain batches
+        same-instant trace events into a single callback.  Round-trip
+        latencies fold into an ``RttAccumulator`` — ``rtt_stats=
+        "sketch"`` (default) keeps percentiles in a bounded t-digest,
+        ``"exact"`` keeps every sample for ``np.percentile`` — and the
+        two modes share the non-percentile fold bit-for-bit.  Failed
+        invocations (rare) park on a list and re-run through the
+        normal client retry machinery after the trace drains — exactly
+        when the old future sweep would have retried them.
+
+        Between trace events, stretches where the fabric is healthy
+        and every involved worker is idle are simulated closed-form by
+        a vectorized cohort (``_try_cohort``): whole arrival windows
+        are dispatched, executed and billed in a handful of numpy
+        passes instead of five clock events per invocation."""
         sim, trace, clock = self.sim, self.trace, self.sim.clock
         if mean_interarrival_s is None:
             span = max(trace.duration_s, 1e-3) * 0.8
@@ -618,19 +650,37 @@ class TraceReplayer:
         payload_nb = payload_bytes(payload)
         fn_idx = lib.index_of("work")
 
-        # the whole Poisson arrival process in two vectorized draws
-        # (RandomState is cross-version stable) instead of two Python
-        # RNG calls per invocation
+        # the Poisson arrival process in vectorized draws (RandomState
+        # is cross-version stable) instead of two Python RNG calls per
+        # invocation — pre-drawn CHUNK arrivals at a time so a 10M
+        # replay never materializes 10M instants (bounded memory; a
+        # run with n_invocations <= ARRIVAL_CHUNK draws the identical
+        # stream the old single-pass code did)
         nprng = np.random.RandomState((sim.seed * 104_729 + 7)
                                       & 0xFFFFFFFF)
-        arrival_times = (clock.now() + np.cumsum(
-            nprng.exponential(mean_interarrival_s,
-                              n_invocations))).tolist()
-        tenant_picks = nprng.randint(
-            0, n_clients, n_invocations).tolist()
+        CHUNK = self.ARRIVAL_CHUNK
+        chunk = {"start": 0, "arr": np.empty(0), "picks": np.empty(0),
+                 "last_t": clock.now()}
 
-        rtts: List[float] = []
-        rtts_append = rtts.append
+        def load_chunk(start: int):
+            m = min(CHUNK, n_invocations - start)
+            gaps = nprng.exponential(mean_interarrival_s, m)
+            arr = chunk["last_t"] + np.cumsum(gaps)
+            chunk["start"] = start
+            chunk["arr"] = arr
+            chunk["picks"] = nprng.randint(0, n_clients, m)
+            chunk["last_t"] = float(arr[-1])
+        load_chunk(0)
+
+        def arr_time(k: int) -> float:
+            s = chunk["start"]
+            if k >= s + chunk["arr"].size:
+                load_chunk(s + chunk["arr"].size)
+                s = chunk["start"]
+            return float(chunk["arr"][k - s])
+
+        acc = RttAccumulator(rtt_stats)
+        acc_add = acc.add
         done_box = [0]
         reallocations = [0]
         submitted = [0]
@@ -642,8 +692,8 @@ class TraceReplayer:
                 if err is None:
                     done_box[0] += 1
                     tl = inv.timeline    # rtt_modeled, inlined
-                    rtts_append(tl.net_in + tl.overhead + tl.exec_time
-                                + tl.net_out)
+                    acc_add(tl.net_in + tl.overhead + tl.exec_time
+                            + tl.net_out)
                     inv.release()        # pooled record back on the
                     # free list — nothing references it anymore
                 else:
@@ -655,14 +705,199 @@ class TraceReplayer:
         call_at = clock.call_at_discard   # chain events are never
         #                                   cancelled: recycle them
 
-        def arrival():
-            k = submitted[0]
-            submitted[0] = k + 1
-            # chain BEFORE submitting: a nested clock advance inside
-            # submit (backoff, re-lease) must not stall the stream
-            if k + 1 < n_invocations:
-                call_at(arrival_times[k + 1], arrival)
-            ti = tenant_picks[k]
+        # ------------------------------------------- vectorized cohort
+        # Closed-form dispatch of whole arrival windows (DESIGN.md
+        # §17).  Eligible when the window [now, next trace event) has
+        # a healthy fabric (no partitions, no congestion in flight, no
+        # fault-phase drop rates) and every involved tenant's dispatch
+        # snapshot is fault-free and idle; then arrival -> round-robin
+        # dispatch -> FIFO execution -> tier -> completion -> billing
+        # is a recurrence the cohort solves with numpy, charging the
+        # identical counters/billing the scalar path would have.
+        fabric = sim.fabric
+        _, svc_s = lib.entry(fn_idx)
+        hdr_in = payload_nb + InvocationHeader.SIZE
+        out_nb = payload_nb               # identity fn: result == payload
+        t_in_s = fabric.params.message_time(hdr_in)
+        t_out_s = fabric.params.message_time(out_nb)
+        events_ref = events
+        worker_memo: Dict = {}            # (sandbox, hot_period) ->
+        #                                   (ov_hot, ov_warm, hot_period)
+        no_cohort_until = [-1.0]          # failed window: retry only
+        #                                   after the next trace event
+        pending_scalar: deque = deque()   # (time, tenant) arrivals a
+        #   cohort excluded (tenant mid-re-lease): replayed scalar, in
+        #   order, before the stream advances past the window
+
+        def tenant_capable(tenant) -> Optional[list]:
+            """The tenant's validated dispatch pairs when EVERY one of
+            them can be simulated closed-form, else None."""
+            pairs = tenant.cohort_pairs()
+            if not pairs:
+                return None
+            for w, conn, ch in pairs:
+                if (ch.closed or ch.drop_rate or ch.extra_delay
+                        or not w.vectorizable()
+                        or w.lease_id not in conn.manager._processes):
+                    return None           # scalar path bills via the
+                #   manager's live process map — stay exact
+            return pairs
+
+        def try_cohort(k: int) -> bool:
+            """Vector-process arrivals [k, k+m) inside the current
+            trace window.  True when the window was consumed (next
+            arrival already chained); False -> scalar fallback."""
+            start = chunk["start"]
+            if k < start:                 # k was the tail of the
+                return False              # previous (refilled) chunk
+            now = clock._now
+            if now < no_cohort_until[0]:
+                return False
+            i = ev_idx[0]
+            hz = events_ref[i].t if i < n_ev else np.inf
+            if (fabric._partitions or fabric._cong_active
+                    or hdr_in >= fabric._cong_track_min
+                    or out_nb >= fabric._cong_track_min
+                    or clock.foreign_activity()):
+                no_cohort_until[0] = hz
+                return False
+            arr = chunk["arr"]
+            i0 = k - start
+            j1 = int(np.searchsorted(arr, hz, side="left"))
+            if j1 - i0 < self.MIN_COHORT:
+                no_cohort_until[0] = hz
+                return False
+            picks = chunk["picks"][i0:j1]
+            window = arr[i0:j1]
+            # ---- flatten: tenant-rank -> round-robin pair -> worker id
+            # (windows split over 64 tenants x 4 pairs leave ~1 arrival
+            # per pair — per-pair numpy would drown in setup, so the
+            # WHOLE window is solved in one set of segmented passes;
+            # the same argsort doubles as the capability scan's
+            # unique-tenant pass)
+            order_t = np.argsort(picks, kind="stable")
+            sorted_t = picks[order_t]
+            t_starts = np.flatnonzero(np.diff(
+                sorted_t, prepend=sorted_t[0] - 1))
+            pair_map = {}
+            degraded = []                 # tenants re-leasing / faulted:
+            for ti in sorted_t[t_starts].tolist():  # their arrivals
+                pairs = tenant_capable(tenants[ti])  # run scalar, the
+                if pairs is None:                    # rest vectorize
+                    degraded.append(ti)
+                else:
+                    pair_map[ti] = pairs
+            if degraded:
+                bad = np.isin(picks, degraded)
+                good = ~bad
+                if int(good.sum()) < self.MIN_COHORT:
+                    no_cohort_until[0] = hz
+                    return False
+                # park the degraded arrivals for the scalar chain (copy
+                # out times/picks: the chunk may refill under them),
+                # vectorize everyone else
+                for t_a, ti in zip(window[bad].tolist(),
+                                   picks[bad].tolist()):
+                    pending_scalar.append((t_a, ti))
+                picks = picks[good]
+                window = window[good]
+                order_t = np.argsort(picks, kind="stable")
+                sorted_t = picks[order_t]
+                t_starts = np.flatnonzero(np.diff(
+                    sorted_t, prepend=sorted_t[0] - 1))
+            m_all = j1 - i0               # whole window consumed
+            n_good = picks.size
+            t_counts = np.diff(np.append(t_starts, n_good))
+            t_seg = np.repeat(np.arange(t_starts.size), t_counts)
+            rank_sorted = np.arange(n_good) - t_starts[t_seg]
+            slot = np.empty(n_good, np.int64)  # arrival -> tenant slot
+            slot[order_t] = t_seg
+            x = np.empty(n_good, np.int64)     # arrival -> tenant rank
+            x[order_t] = rank_sorted
+            uniq_t = sorted_t[t_starts].tolist()
+            flat_pairs = []
+            base = np.empty(len(uniq_t), np.int64)
+            c0s = np.empty(len(uniq_t), np.int64)
+            n_ps = np.empty(len(uniq_t), np.int64)
+            for s_i, ti in enumerate(uniq_t):
+                pairs = pair_map[ti]
+                base[s_i] = len(flat_pairs)
+                n_ps[s_i] = len(pairs)
+                c0s[s_i] = tenants[ti].take_rr(int(t_counts[s_i]))
+                flat_pairs.extend(pairs)
+            gid = base[slot] + (c0s[slot] + x) % n_ps[slot]
+            # ---- group by worker, FIFO-ordered within each group
+            order_w = np.argsort(gid, kind="stable")
+            gs = gid[order_w]
+            ap = window[order_w].copy()
+            w_starts = np.flatnonzero(np.diff(gs, prepend=gs[0] - 1))
+            w_counts = np.diff(np.append(w_starts, n_good))
+            w_seg = np.repeat(np.arange(w_starts.size), w_counts)
+            rank_w = np.arange(n_good) - w_starts[w_seg]
+            uids = gs[w_starts].tolist()
+            n_u = len(uids)
+            seeds = np.empty(n_u)
+            ov_h = np.empty(n_u)
+            ov_w = np.empty(n_u)
+            hp = np.empty(n_u)
+            wmemo = worker_memo
+            for u_i, u in enumerate(uids):
+                w = flat_pairs[u][0]
+                s = w.cohort_seed(svc_s)
+                seeds[u_i] = -np.inf if s is None else s
+                mk = (w.sandbox, w.hot_period)
+                mv = wmemo.get(mk)
+                if mv is None:
+                    mv = wmemo[mk] = (
+                        fabric.tier_overhead(Tier.HOT, w.sandbox),
+                        fabric.tier_overhead(Tier.WARM, w.sandbox),
+                        w.hot_period)
+                ov_h[u_i], ov_w[u_i], hp[u_i] = mv
+            # a busy worker (in-flight + FIFO backlog, or a previous
+            # cohort draining) queues the window's first item behind it
+            ap[w_starts] = np.maximum(ap[w_starts], seeds)
+            # segmented fin[i] = max(ap[i], fin[i-1]) + svc: offset
+            # each worker's segment so one global max.accumulate
+            # cannot leak across segments
+            g = ap - svc_s * rank_w
+            big = float(g.max() - g.min()) + svc_s * n_good + 1.0
+            off = w_seg * big
+            run = np.maximum.accumulate(g + off) - off
+            fin = run + svc_s * (rank_w + 1)
+            exec_start = fin - svc_s
+            prev_fin = np.empty(n_good)
+            prev_fin[w_starts] = seeds
+            nstart = np.ones(n_good, bool)
+            nstart[w_starts] = False
+            prev_fin[nstart] = fin[:-1][nstart[1:]]
+            hot = (exec_start - prev_fin) <= hp[w_seg]
+            rtt = (np.where(hot, ov_h[w_seg], ov_w[w_seg])
+                   + (t_in_s + svc_s + t_out_s))
+            acc.add_vector(rtt)
+            # ---- commit: wire/worker counters, billing, stream state
+            per_msg = hdr_in + out_nb
+            ends = w_starts + w_counts - 1
+            for u_i, u in enumerate(uids):
+                w, _, ch = flat_pairs[u]
+                n = int(w_counts[u_i])
+                ch.record_messages(2 * n, n * per_msg)
+                w.absorb_cohort(n, svc_s * n, float(fin[ends[u_i]]))
+            ledger = sim.ledger
+            for s_i, ti in enumerate(uniq_t):
+                m_t = int(t_counts[s_i])
+                tenants[ti].stats.invocations += m_t
+                ledger.add_compute_bulk(tenants[ti].client_id,
+                                        svc_s * m_t, m_t)
+            done_box[0] += n_good
+            submitted[0] = k + m_all      # excluded arrivals counted
+            #   here; the pending-scalar drain must not recount them
+            if pending_scalar:
+                call_at(pending_scalar[0][0], arrival)
+            elif k + m_all < n_invocations:
+                call_at(arr_time(k + m_all), arrival)
+            return True
+
+        def dispatch_scalar(ti: int):
             tenant = tenants[ti]
             inv = make_inv(fn_idx, "work", payload, nbytes=payload_nb)
             inv.on_complete = hooks[ti]
@@ -681,7 +916,33 @@ class TraceReplayer:
                 except (AllocationFailed, ExecutorCrash):
                     dispatch_failed[0] += 1
 
-        call_at(arrival_times[0], arrival)
+        def arrival():
+            if pending_scalar:
+                # drain a cohort-excluded arrival (already counted in
+                # submitted when its window was consumed)
+                _, ti = pending_scalar.popleft()
+                if pending_scalar:
+                    call_at(pending_scalar[0][0], arrival)
+                else:
+                    k2 = submitted[0]
+                    if k2 < n_invocations:
+                        call_at(arr_time(k2), arrival)
+                dispatch_scalar(ti)
+                return
+            k = submitted[0]
+            if try_cohort(k):
+                return
+            # read this arrival's pick BEFORE chaining: scheduling
+            # k+1 can refill the chunk and drop index k
+            ti = int(chunk["picks"][k - chunk["start"]])
+            submitted[0] = k + 1
+            # chain BEFORE submitting: a nested clock advance inside
+            # submit (backoff, re-lease) must not stall the stream
+            if k + 1 < n_invocations:
+                call_at(arr_time(k + 1), arrival)
+            dispatch_scalar(ti)
+
+        call_at(arr_time(0), arrival)
 
         # the replay's per-invocation allocations are pooled, but the
         # object graphs still carry future<->invocation cycles —
@@ -700,11 +961,13 @@ class TraceReplayer:
         # -------------------------------------------------- collection
         completed = done_box[0]
         resolved = completed + len(failures) + dispatch_failed[0]
-        # unfired arrivals + double dispatch failures + anything that
-        # somehow never resolved (defensive: post-idle this is zero)
-        # count as failed, like the old future sweep's timeouts did
-        failed = ((n_invocations - submitted[0]) + dispatch_failed[0]
-                  + (submitted[0] - resolved))
+        # LOST: arrivals the trace window never fired, plus anything
+        # that somehow never resolved (defensive: post-idle this is
+        # zero).  FAILED: resolved with an error — double dispatch
+        # failures now, post-drain retry failures below.
+        lost = ((n_invocations - submitted[0])
+                + (submitted[0] - resolved))
+        failed = dispatch_failed[0]
         for tenant, inv in failures:     # client-library retries (§3.5)
             rf = RetryingFuture(tenant, inv, "work", payload)
             try:
@@ -714,12 +977,11 @@ class TraceReplayer:
                 failed += 1
                 continue
             completed += 1
-            rtts_append(rf.timeline.rtt_modeled)
+            acc_add(rf.timeline.rtt_modeled)
 
         lease_states = sim._teardown_tenants(tenants)
         totals = sim.ledger.totals()
         wire = sim.fabric.stats()
-        arr = np.asarray(rtts) if rtts else np.zeros(1)
 
         # ------------------------------------------- §6 cost comparison
         # lease-based: pay the GB-seconds actually held, at the HPC
@@ -742,6 +1004,7 @@ class TraceReplayer:
             invocations_requested=n_invocations,
             completed=completed,
             failed=failed,
+            lost=lost,
             retries=sum(t.stats.retries for t in tenants),
             reallocations=reallocations[0],
             trace_events=self.events_applied,
@@ -766,9 +1029,9 @@ class TraceReplayer:
             fabric_transfers=wire.get("transfers", 0),
             congested_sends=wire.get("congested", 0),
             congestion_delay_s=wire.get("congestion_delay_s", 0.0),
-            rtt_p50_s=float(np.percentile(arr, 50)),
-            rtt_p99_s=float(np.percentile(arr, 99)),
-            rtt_mean_s=float(arr.mean()),
+            rtt_p50_s=acc.percentile(50),
+            rtt_p99_s=acc.percentile(99),
+            rtt_mean_s=acc.mean,
             node_seconds_faas=occ["faas"],
             node_seconds_batch=occ["batch"],
             node_seconds_idle=occ["idle"],

@@ -69,8 +69,8 @@ import math
 import random
 import threading
 from dataclasses import dataclass, replace
-from typing import (Callable, Dict, FrozenSet, List, Optional, Set,
-                    Tuple, Union)
+from typing import (Callable, Dict, FrozenSet, List, Optional,
+                    Sequence, Set, Tuple, Union)
 
 from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.perf_model import (NetParams, Sandbox, Tier,
@@ -911,6 +911,17 @@ class Channel:
             return 0.0
         return t + self.transfer(bytes_response, reverse=True)
 
+    def record_messages(self, n: int, nbytes_total: int):
+        """Bulk counter update for ``n`` messages already modeled
+        elsewhere (the cohort fast path charges a whole window of
+        dispatch+result exchanges in one locked add).  Counter
+        semantics are identical to ``n`` healthy ``send``s totalling
+        ``nbytes_total`` — callers own the proof that every one of
+        those sends would have taken the healthy fast path."""
+        with self._lock:
+            self.messages += n
+            self.bytes += nbytes_total
+
     def close(self, faulted: bool = False):
         """Mark closed and hand the counters back to the fabric's
         retired totals, so long-churn runs don't accumulate channel
@@ -1082,6 +1093,54 @@ class Fabric:
         if self.congestion is None:
             return 0
         return self.congestion.nic_load(endpoint)
+
+    def multicast(self, channels: Sequence[Channel],
+                  nbytes: int) -> List[bool]:
+        """One payload delivered to many unreliable channels — the
+        §3.4 UD-multicast fan-out as a single fabric operation.  The
+        payload is sized once (one memoized wire-time lookup) and each
+        channel then pays only its own fate checks: per-channel seeded
+        drop decisions draw from the same per-channel RNGs in the same
+        order as N independent ``send``s, and every counter (messages,
+        bytes, drops, blocked) lands exactly where a per-channel send
+        loop would have put it — ``AvailabilityBus`` batching must be
+        bit-invisible in the wire stats.  Returns one delivered flag
+        per channel.  When partitions or congestion are live the
+        fan-out degrades to true per-channel sends (route checks and
+        fair-share charging are per-destination state)."""
+        if not (self._partitions or self._cong_active
+                or nbytes >= self._cong_track_min):
+            t = self._size_memo.get(nbytes)
+            if t is None:
+                t = self._size_memo[nbytes] = \
+                    self.params.message_time(nbytes)
+            flags = []
+            append = flags.append
+            for ch in channels:
+                if ch.closed:
+                    with ch._lock:
+                        ch.blocked += 1
+                    with self._lock:
+                        self._retired["blocked"] += 1
+                    append(False)
+                    continue
+                if ch.drop_rate and ch._rng.random() < ch.drop_rate:
+                    with ch._lock:
+                        ch.drops += 1
+                    append(False)
+                    continue
+                with ch._lock:
+                    ch.messages += 1
+                    ch.bytes += nbytes
+                append(True)
+            return flags
+        flags = []
+        for ch in channels:
+            try:
+                flags.append(ch.send(nbytes) is not None)
+            except ChannelError:          # reliable channel in the set
+                flags.append(False)
+        return flags
 
     def endpoints(self) -> Set[str]:
         with self._lock:

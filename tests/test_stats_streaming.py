@@ -1,0 +1,241 @@
+"""Streaming-statistics tests (DESIGN.md §17): the P² single-quantile
+estimator, the merging quantile digest, the streaming moments fold and
+the RttAccumulator facade — plus the end-to-end guarantee the whole
+module exists for: a replay in "sketch" mode agrees with "exact" mode
+bit-for-bit on every non-percentile stat field, and within tolerance
+on the percentiles, in O(1) memory.
+
+Accuracy is asserted in RANK space: an estimate for quantile q is good
+when its empirical rank in the sample lands within a few percentile
+points of q.  That phrasing is robust across distribution shapes
+(bimodal gaps make value-space tolerances meaningless: the true median
+sits in a density hole).
+
+Guarded hypothesis import (requirements-test.txt pattern): the seeded
+fallback tests share the same checking helpers, so the two paths
+cannot drift.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (ChurnTrace, P2Quantile, QuantileDigest,
+                        RTT_STATS_MODES, RttAccumulator,
+                        SimulatedCluster, StreamingMoments,
+                        TraceReplayer)
+
+# -------------------------------------------------------- distributions
+# the sketch's stress set: smooth unimodal, two widely separated modes
+# (density hole at the median), heavy tail (p99 far from the mass),
+# and a constant stream (zero spread: estimates must be EXACT)
+
+
+def _draw(kind: str, rng: np.random.RandomState, n: int) -> np.ndarray:
+    if kind == "uniform":
+        return rng.uniform(0.0, 1.0, n)
+    if kind == "bimodal":
+        lo = rng.normal(1.0, 0.05, n)
+        hi = rng.normal(10.0, 0.5, n)
+        return np.where(rng.random_sample(n) < 0.5, lo, hi)
+    if kind == "heavy_tail":
+        return rng.lognormal(0.0, 2.0, n)
+    if kind == "constant":
+        return np.full(n, 0.125)
+    raise AssertionError(kind)
+
+
+DISTRIBUTIONS = ("uniform", "bimodal", "heavy_tail", "constant")
+
+
+def _rank_of(xs: np.ndarray, v: float) -> float:
+    """Empirical percentile rank of value ``v`` in sample ``xs``."""
+    return 100.0 * np.searchsorted(np.sort(xs), v, side="left") / len(xs)
+
+
+def _check_estimator_rank(xs: np.ndarray, pct: float, estimate: float,
+                          tol_pts: float):
+    """``estimate`` of the ``pct`` percentile must rank within
+    ``tol_pts`` percentile points of ``pct`` in the sample."""
+    if xs.max() == xs.min():             # constant stream: exact
+        assert estimate == xs[0]
+        return
+    rank = _rank_of(xs, estimate)
+    assert abs(rank - pct) <= tol_pts, (
+        f"estimate {estimate} for p{pct} ranks at {rank:.2f} "
+        f"({tol_pts} pts allowed)")
+
+
+# --------------------------------------------------------------- P²
+def _check_p2(kind: str, seed: int, n: int = 20_000):
+    rng = np.random.RandomState(seed)
+    xs = _draw(kind, rng, n)
+    for pct, tol in ((50.0, 5.0), (99.0, 1.0)):
+        est = P2Quantile(pct / 100.0)
+        for x in xs.tolist():
+            est.add(x)
+        _check_estimator_rank(xs, pct, est.value(), tol)
+
+
+@pytest.mark.parametrize("kind", DISTRIBUTIONS)
+def test_p2_rank_accuracy_seeded(kind):
+    for seed in (0, 7, 123):
+        _check_p2(kind, seed)
+
+
+def test_p2_small_samples_exact():
+    """Below five observations P² reports the exact empirical
+    percentile (it has no marker set to interpolate yet)."""
+    est = P2Quantile(0.5)
+    xs = [3.0, 1.0, 2.0, 9.0]
+    for i, x in enumerate(xs):
+        est.add(x)
+        assert est.value() == float(np.percentile(xs[:i + 1], 50))
+
+
+# ----------------------------------------------------------- digest
+def _check_digest(kind: str, seed: int, n: int = 50_000):
+    rng = np.random.RandomState(seed)
+    xs = _draw(kind, rng, n)
+    dg = QuantileDigest()
+    # mixed scalar/vector feeding, deliberately unaligned chunk sizes
+    dg.add_vector(xs[:1000])
+    for x in xs[1000:1100].tolist():
+        dg.add(x)
+    dg.add_vector(xs[1100:])
+    for pct, tol in ((50.0, 1.5), (99.0, 0.5)):
+        _check_estimator_rank(xs, pct, dg.percentile(pct), tol)
+
+
+@pytest.mark.parametrize("kind", DISTRIBUTIONS)
+def test_digest_rank_accuracy_seeded(kind):
+    for seed in (1, 42):
+        _check_digest(kind, seed)
+
+
+def test_digest_bounded_memory():
+    """The digest's retained state stays at O(compression) centroids no
+    matter how many observations stream through."""
+    dg = QuantileDigest(compression=200)
+    rng = np.random.RandomState(3)
+    for _ in range(40):
+        dg.add_vector(rng.lognormal(0.0, 2.0, 10_000))
+    dg.flush()
+    assert dg._means.size <= 2 * 200 + 1
+
+
+# ----------------------------------------------------------- moments
+def test_streaming_moments_match_numpy():
+    rng = np.random.RandomState(9)
+    xs = rng.uniform(-5.0, 5.0, 10_000)
+    m = StreamingMoments()
+    m.fold(xs[:3000])
+    for x in xs[3000:3100].tolist():
+        m.add(x)
+    m.fold(xs[3100:])
+    assert m.count == xs.size
+    assert m.max == xs.max()
+    assert m.min == xs.min()
+    assert m.mean == pytest.approx(xs.mean(), rel=1e-12)
+
+
+# ------------------------------------------------------- accumulator
+def test_exact_mode_is_bitwise_np_percentile():
+    rng = np.random.RandomState(5)
+    xs = rng.lognormal(0.0, 1.0, 7_777)
+    acc = RttAccumulator("exact")
+    for x in xs[:500].tolist():
+        acc.add(x)
+    acc.add_vector(xs[500:])
+    for pct in (50.0, 99.0):
+        assert acc.percentile(pct) == float(np.percentile(xs, pct))
+    assert acc.max == xs.max()
+
+
+def test_modes_share_the_moments_fold():
+    """Sketch and exact modes fold the identical observation sequence
+    through the same StreamingMoments — count/mean/max agree
+    bit-for-bit; only the percentile machinery differs."""
+    rng = np.random.RandomState(11)
+    xs = rng.uniform(0.0, 1.0, 9_999)
+    accs = {m: RttAccumulator(m) for m in RTT_STATS_MODES}
+    for acc in accs.values():
+        for x in xs[:250].tolist():
+            acc.add(x)
+        acc.add_vector(xs[250:])
+    sk, ex = accs["sketch"], accs["exact"]
+    assert sk.count == ex.count == xs.size
+    assert sk.mean == ex.mean
+    assert sk.max == ex.max
+    assert abs(_rank_of(xs, sk.percentile(99)) - 99.0) <= 0.5
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError):
+        RttAccumulator("approximate")
+
+
+def test_empty_accumulator_reads_zero():
+    for mode in RTT_STATS_MODES:
+        acc = RttAccumulator(mode)
+        assert acc.percentile(50) == 0.0
+        assert acc.mean == 0.0
+        assert acc.max == 0.0
+
+
+# ------------------------------------------------- end-to-end replay
+def _small_replay(rtt_stats: str):
+    trace = ChurnTrace.synthetic_piz_daint(
+        100, 1.0, 0.5, seed=7, fault_drop_rate=0.02, drop_window_s=0.3,
+        n_partitions=2, partition_width=3, n_storms=4,
+        storm_transfers=8, storm_bytes=4 << 20)
+    sim = SimulatedCluster(n_nodes=100, workers_per_node=2,
+                           n_replicas=2, seed=7)
+    return TraceReplayer(sim, trace).replay(
+        n_clients=8, n_invocations=5_000, workers_per_client=2,
+        rtt_stats=rtt_stats)
+
+
+def test_replay_sketch_vs_exact_equivalence():
+    """The tentpole guarantee: switching the replay's percentile
+    machinery to the sketch changes NOTHING except the two percentile
+    fields — every other ElasticityStats field is bit-identical, and
+    the percentiles stay within rank tolerance of exact."""
+    sk = _small_replay("sketch")
+    ex = _small_replay("exact")
+    pct_fields = {"rtt_p50_s", "rtt_p99_s"}
+    diffs = [k for k, v in sk.as_dict().items()
+             if k not in pct_fields and v != getattr(ex, k)]
+    assert diffs == []
+    for k in pct_fields:
+        a, b = getattr(sk, k), getattr(ex, k)
+        assert a == pytest.approx(b, rel=0.05, abs=1e-9)
+
+
+def test_replay_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        _small_replay("bogus")
+
+
+# ------------------------------------------------------ hypothesis path
+# guarded import (requirements-test.txt pattern): without hypothesis
+# only the @given tests vanish — the seeded tests above keep the same
+# helpers exercised everywhere
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI has it
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(kind=st.sampled_from(DISTRIBUTIONS),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_p2_rank_accuracy_hypothesis(kind, seed):
+        _check_p2(kind, seed, n=5_000)
+
+    @given(kind=st.sampled_from(DISTRIBUTIONS),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_digest_rank_accuracy_hypothesis(kind, seed):
+        _check_digest(kind, seed, n=20_000)

@@ -182,7 +182,7 @@ def test_preemption_ends_leases_retrieved_mid_invocation():
                        mean_interarrival_s=100e-6)
     assert stats.preemptions == 1
     assert stats.lease_states.get("retrieved", 0) >= 1
-    assert stats.completed + stats.failed == 200
+    assert stats.completed + stats.failed + stats.lost == 200
     assert stats.completed >= 190             # failover absorbed it
     assert stats.t_end_s > 0.01               # preemption was mid-run
 
@@ -213,7 +213,7 @@ def test_replay_bit_identical_per_seed():
     s3 = _medium_stats(8)
     assert s1 == s2                           # bit-identical, not approx
     assert s1 != s3                           # the seed actually matters
-    assert s1.completed + s1.failed == 2000
+    assert s1.completed + s1.failed + s1.lost == 2000
     assert s1.preemptions > 0 and s1.node_returns > 0
 
 
@@ -338,7 +338,7 @@ def test_csv_state_log_converts_to_trace(tmp_path):
     # and it actually replays
     stats = replay_trace(tr, seed=1, n_clients=1, n_invocations=50,
                          workers_per_client=1)
-    assert stats.completed + stats.failed == 50
+    assert stats.completed + stats.failed + stats.lost == 50
 
 
 def test_csv_event_shape_and_cli_roundtrip(tmp_path):
