@@ -5,7 +5,8 @@ replicated eventually-consistent resource management, fault tolerance
 with bounded retries + private executors, GB-s + compute-s accounting,
 and the LogP-derived offload model (Eq. 1).
 """
-from repro.core.accounting import ClientBill, Ledger, Price
+from repro.core.accounting import (CLASS_PRICE_FACTOR, ClientBill, Ledger,
+                                   Price, QuotaState)
 from repro.core.batch_system import BatchJob, BatchSystem, Node
 from repro.core.clock import (CalendarQueue, Clock, EVENT_QUEUES,
                               HeapEventQueue, REAL_CLOCK, RealClock,
@@ -17,9 +18,10 @@ from repro.core.functions import FunctionLibrary
 from repro.core.invocation import (Invocation, InvocationHeader, RFuture,
                                    Timeline, payload_bytes)
 from repro.core.invoker import (ALWAYS_WARM_INVOCATIONS, AllocationFailed,
+                                CLASS_NET_WEIGHT, CLASS_NIC_HEADROOM,
                                 Connection, Invoker, RetryingFuture)
-from repro.core.lease import (Lease, LeaseRequest, LeaseState,
-                              TERMINAL_STATES)
+from repro.core.lease import (CLASS_PROTECTION, LEASE_CLASSES, Lease,
+                              LeaseRequest, LeaseState, TERMINAL_STATES)
 from repro.core.parallel import ALL, ANY, ParallelExecutor, wait
 from repro.core.perf_model import (BASELINE_MODELS, DEFAULT_NET, NetParams,
                                    Sandbox, Tier, invocation_rtt,
@@ -30,7 +32,7 @@ from repro.core.resource_manager import (AvailabilityBus, ResourceManager,
 from repro.core.simulation import (PartitionStats, ScenarioStats,
                                    SimulatedCluster)
 from repro.core.stats import (P2Quantile, QuantileDigest, RTT_STATS_MODES,
-                              RttAccumulator, StreamingMoments)
+                              RttAccumulator, StreamingMoments, TenantRtts)
 from repro.core.trace import (ChurnTrace, ElasticityStats, EVENT_KINDS,
                               TraceEvent, TraceReplayer, replay_trace)
 from repro.core.transport import (Channel, ChannelDropped, ChannelError,
@@ -40,7 +42,8 @@ from repro.core.transport import (Channel, ChannelDropped, ChannelError,
                                   Topology, Transfer)
 
 __all__ = [
-    "ClientBill", "Ledger", "Price", "BatchJob", "BatchSystem", "Node",
+    "CLASS_PRICE_FACTOR", "ClientBill", "Ledger", "Price", "QuotaState",
+    "BatchJob", "BatchSystem", "Node",
     "ChurnTrace", "ElasticityStats", "EVENT_KINDS", "TraceEvent",
     "TraceReplayer", "replay_trace",
     "CalendarQueue", "Clock", "EVENT_QUEUES", "HeapEventQueue",
@@ -48,16 +51,17 @@ __all__ = [
     "AllocationRejected", "ExecutorCrash", "ExecutorManager",
     "ExecutorProcess", "ExecutorWorker", "FunctionLibrary", "Invocation",
     "InvocationHeader", "RFuture", "Timeline", "payload_bytes",
-    "ALWAYS_WARM_INVOCATIONS", "AllocationFailed", "Connection", "Invoker",
+    "ALWAYS_WARM_INVOCATIONS", "AllocationFailed", "CLASS_NET_WEIGHT",
+    "CLASS_NIC_HEADROOM", "Connection", "Invoker",
     "RetryingFuture", "ALL", "ANY", "ParallelExecutor", "wait",
-    "Lease", "LeaseRequest", "LeaseState",
-    "TERMINAL_STATES", "BASELINE_MODELS", "DEFAULT_NET", "NetParams",
+    "CLASS_PROTECTION", "LEASE_CLASSES", "Lease", "LeaseRequest",
+    "LeaseState", "TERMINAL_STATES", "BASELINE_MODELS", "DEFAULT_NET", "NetParams",
     "Sandbox", "Tier", "invocation_rtt", "max_offload_rate", "n_local_min",
     "plan_split", "tier_overhead", "write_time", "AvailabilityBus",
     "ResourceManager", "ResourceManagerReplica", "PartitionStats",
     "ScenarioStats", "SimulatedCluster",
     "P2Quantile", "QuantileDigest", "RTT_STATS_MODES", "RttAccumulator",
-    "StreamingMoments", "Channel", "ChannelDropped",
+    "StreamingMoments", "TenantRtts", "Channel", "ChannelDropped",
     "ChannelError", "ChannelPartitioned", "CONTROL_MSG_BYTES",
     "CongestionEngine", "FABRICS", "Fabric", "FabricParams",
     "HEARTBEAT_MSG_BYTES", "Link", "Topology", "Transfer",

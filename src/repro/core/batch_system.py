@@ -197,12 +197,22 @@ class BatchSystem:
 
     def _claimable(self, affinity: tuple = ()) -> List[str]:
         """Node ids a job may take, in claim order: idle first, then
-        FaaS (preemption), both by node id — deterministic.  A non-empty
-        ``affinity`` restricts the pool to those node ids."""
+        FaaS (preemption) — deterministic.  FaaS nodes are ranked by
+        the protection of their most-protected hosted lease (spot-
+        hosting nodes reclaimed FIRST, premium-hosting LAST, §18); the
+        sort is stable, so a cluster whose every lease is standard
+        keeps the exact pre-QoS node-id (or affinity) order.  A
+        non-empty ``affinity`` restricts the pool to those node ids."""
         nodes = sorted(self.nodes.items()) if not affinity else \
             [(nid, self.nodes[nid]) for nid in affinity]
         idle = [nid for nid, n in nodes if n.state == "idle"]
-        faas = [nid for nid, n in nodes if n.state == "faas"]
+        faas_nodes = [(nid, n) for nid, n in nodes if n.state == "faas"]
+        ranks = {nid: (n.manager.hosted_protection()
+                       if n.manager is not None else 1)
+                 for nid, n in faas_nodes}
+        faas = [nid for nid, _ in faas_nodes]
+        if any(r != 1 for r in ranks.values()):
+            faas.sort(key=ranks.__getitem__)   # stable: ties keep order
         return idle + faas
 
     def _schedule(self):

@@ -41,7 +41,8 @@ from repro.core.clock import Clock, REAL_CLOCK
 from threading import get_ident as _get_ident
 from repro.core.functions import FunctionLibrary
 from repro.core.invocation import Invocation, payload_bytes
-from repro.core.lease import Lease, LeaseRequest, LeaseState
+from repro.core.lease import (CLASS_PROTECTION, Lease, LeaseRequest,
+                              LeaseState)
 from repro.core.perf_model import (DEFAULT_NET, NetParams, Sandbox, Tier,
                                    tier_overhead)
 from repro.core.transport import (Channel, ChannelError, CONTROL_MSG_BYTES,
@@ -372,7 +373,12 @@ class ExecutorWorker(threading.Thread):
         self._last_activity = clk._now if clk.virtual else clk.now()
         self.busy_seconds += exec_time
         self.n_invocations += 1
-        self.on_done(self, inv, exec_time, None)
+        # delivered=False when the result leg broke: the compute is
+        # still billed (the work ran), but the INVOCATION count is not
+        # — the client's retry re-executes and the eventual successful
+        # delivery is the one counted (§5.4; previously a crash-retried
+        # invocation double-counted ClientBill.invocations)
+        self.on_done(self, inv, exec_time, None, derr is None)
         if derr is not None:
             inv.future._fail(derr)
         else:
@@ -496,6 +502,18 @@ class ExecutorManager:
     def heartbeat(self) -> bool:
         return self._alive
 
+    def hosted_protection(self) -> int:
+        """Preemption rank of this node's most-protected live lease
+        (spot 0 < standard 1 < premium 2, ``lease.CLASS_PROTECTION``).
+        A node with no live leases ranks as standard — the batch
+        system's spot-first ordering then leaves all-standard clusters
+        in the exact pre-QoS node-id order (§18)."""
+        with self._lock:
+            procs = list(self._processes.values())
+        ranks = [CLASS_PROTECTION[p.lease.request.lease_class]
+                 for p in procs]
+        return max(ranks) if ranks else CLASS_PROTECTION["standard"]
+
     def describe(self) -> dict:
         with self._lock:
             return {"server_id": self.server_id,
@@ -520,6 +538,16 @@ class ExecutorManager:
                 raise AllocationRejected(
                     f"{self.server_id}: insufficient capacity "
                     f"({self._free_workers}w free)")
+            # quota admission (§18): the ledger's per-tenant held-worker
+            # counter spans every manager, so a hoarder walking the
+            # server list is refused everywhere at negotiation time.
+            # The ledger lock nests strictly inside the manager lock
+            # (leaf lock, never calls out).
+            if not self.ledger.try_acquire_workers(request.client_id,
+                                                   request.n_workers):
+                raise AllocationRejected(
+                    f"{self.server_id}: lease quota exhausted for "
+                    f"{request.client_id}")
             self._free_workers -= request.n_workers
             self._free_memory -= request.memory_bytes
             lease = Lease(request, self.server_id,
@@ -582,6 +610,8 @@ class ExecutorManager:
         lease.end(state)
         self.ledger.add_allocation(lease.request.client_id,
                                    lease.gb_seconds())
+        self.ledger.release_workers(lease.request.client_id,
+                                    lease.request.n_workers)
         with self._lock:
             was_full = self._free_workers == 0
             self._free_workers += lease.request.n_workers
@@ -637,10 +667,13 @@ class ExecutorManager:
             proc.lease.end(LeaseState.FAILED)
             self.ledger.add_allocation(proc.lease.request.client_id,
                                        proc.lease.gb_seconds())
+            self.ledger.release_workers(proc.lease.request.client_id,
+                                        proc.lease.request.n_workers)
 
     # ------------------------------------------------------------ internal
     def _worker_done(self, worker: ExecutorWorker, inv: Invocation,
-                     exec_time: float, err: Optional[BaseException]):
+                     exec_time: float, err: Optional[BaseException],
+                     delivered: bool = True):
         if err is not None:
             return
         # lock-free dict read (GIL-atomic): a lease already released or
@@ -651,6 +684,9 @@ class ExecutorManager:
             # off the critical path: accounting after completion
             # (§5.4).  Always under the ledger lock: even during a
             # virtual-clock replay another thread may legitimately
-            # read bill()/totals() concurrently
+            # read bill()/totals() concurrently.  An undelivered
+            # result bills its compute but count=0 invocations — the
+            # client retry that eventually lands is the counted one
             self.ledger.add_compute(proc.lease.request.client_id,
-                                    exec_time)
+                                    exec_time,
+                                    count=1 if delivered else 0)

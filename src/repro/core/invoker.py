@@ -28,19 +28,35 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+import math
+
 from repro.core.clock import Clock, REAL_CLOCK
 from repro.core.executor import (AllocationRejected, ExecutorCrash,
                                  ExecutorManager, ExecutorProcess,
                                  ExecutorWorker)
 from repro.core.functions import FunctionLibrary
 from repro.core.invocation import Invocation, InvocationHeader, RFuture
-from repro.core.lease import LeaseRequest
+from repro.core.lease import LEASE_CLASSES, LeaseRequest
 from repro.core.resource_manager import ResourceManager
 from repro.core.transport import (Channel, ChannelDropped, ChannelError,
                                   ChannelPartitioned, CONTROL_MSG_BYTES,
                                   Fabric, WIRE_COUNTERS)
 
 ALWAYS_WARM_INVOCATIONS = "always_warm"
+
+#: Default network share weight per lease class (DESIGN.md §18): a
+#: premium tenant's traffic takes twice the standard share of a
+#: contended link, spot half.  Standard's exact 1.0 registers NOTHING
+#: on the fabric, so classless scenarios keep the unweighted 1/K
+#: arithmetic bit-identically.
+CLASS_NET_WEIGHT = {"premium": 2.0, "standard": 1.0, "spot": 0.5}
+
+#: SLO placement headroom per class: a premium allocation ranks
+#: candidate servers whose heartbeat NIC-load snapshot is at/above
+#: this many in-flight transfers BEHIND quieter same-group candidates;
+#: standard/spot tolerate any load (inf -> the pre-QoS ordering).
+CLASS_NIC_HEADROOM = {"premium": 4.0, "standard": math.inf,
+                      "spot": math.inf}
 
 _HDR_SIZE = InvocationHeader.SIZE        # hoisted off the dispatch loop
 
@@ -86,11 +102,25 @@ class Invoker:
                  fault_memory_s: float = 1.0,
                  allocation_window: Optional[int] = None,
                  clock: Clock = REAL_CLOCK,
-                 fabric: Optional[Fabric] = None):
+                 fabric: Optional[Fabric] = None,
+                 lease_class: str = "standard",
+                 net_weight: Optional[float] = None,
+                 net_cap: Optional[float] = None,
+                 nic_headroom: Optional[float] = None):
+        if lease_class not in CLASS_NET_WEIGHT:
+            raise ValueError(
+                f"unknown lease class {lease_class!r}; expected one of "
+                f"{LEASE_CLASSES}")
         self.client_id = client_id
         self.rm = rm
         self.library = library
         self.clock = clock
+        # QoS surface (DESIGN.md §18): every lease this client
+        # negotiates carries its class; the class also defaults the
+        # tenant's network weight and placement headroom
+        self.lease_class = lease_class
+        self.nic_headroom = (CLASS_NIC_HEADROOM[lease_class]
+                             if nic_headroom is None else nic_headroom)
         self.max_retries = max_retries
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
@@ -122,6 +152,14 @@ class Invoker:
         self.stats = InvokerStats()
         self._removed_servers: set = set()
         rm.bus.subscribe(self._on_delta, endpoint=self.endpoint)
+        # register the tenant's network share on the fabric — ONLY when
+        # it deviates from the unit weight, so standard tenants leave
+        # the congestion arithmetic untouched
+        weight = (CLASS_NET_WEIGHT[lease_class] if net_weight is None
+                  else net_weight)
+        if weight != 1.0 or net_cap is not None:
+            self.fabric.set_tenant_qos(self.endpoint, weight=weight,
+                                       cap=net_cap)
 
     # ------------------------------------------------------- notifications
     def _on_delta(self, delta: dict):
@@ -205,8 +243,9 @@ class Invoker:
             self.fault_memory_s
         loads = self._replica.nic_loads()
         get_load = loads.get
+        headroom = self.nic_headroom
 
-        def rank(mgr: ExecutorManager) -> Tuple[int, int]:
+        def rank(mgr: ExecutorManager) -> Tuple[int, int, int]:
             sid = mgr.server_id
             t = fault_at.get(sid)
             if t is not None and now - t < memory:
@@ -214,7 +253,13 @@ class Invoker:
             else:
                 ch = ctrl.get(sid)
                 group = 0 if ch is not None and not ch.closed else 1
-            return group, get_load(sid, 0)
+            load = get_load(sid, 0)
+            # SLO-aware headroom (§18): a class with finite headroom
+            # demotes servers whose NIC load snapshot already meets it,
+            # steering premium leases to quiet nodes.  inf headroom
+            # (standard/spot) never demotes, so the pre-QoS ordering
+            # is reproduced bit-for-bit.
+            return group, (1 if load >= headroom else 0), load
 
         order.sort(key=rank)
         return order
@@ -278,7 +323,8 @@ class Invoker:
                     # guaranteed-rejected negotiation round trip
                 ask = min(remaining, free)
                 req = LeaseRequest(self.client_id, ask, memory_bytes,
-                                   timeout_s, sandbox)
+                                   timeout_s, sandbox,
+                                   lease_class=self.lease_class)
                 self.stats.allocations_tried += 1
                 ctrl = self._control(mgr.server_id)
                 try:
@@ -343,7 +389,8 @@ class Invoker:
                 while ask > 0:
                     take = min(lease_workers, ask)
                     req = LeaseRequest(self.client_id, take,
-                                       memory_bytes, timeout_s, sandbox)
+                                       memory_bytes, timeout_s, sandbox,
+                                       lease_class=self.lease_class)
                     try:
                         proc = mgr.grant(req, self.library, channel=ctrl)
                     except AllocationRejected:
@@ -387,7 +434,7 @@ class Invoker:
         """Private executors (paper §3.5): job-internal capacity exposed
         through the same interface — used when public allocation starves."""
         req = LeaseRequest(self.client_id, n_workers, memory_bytes,
-                           3600.0, "bare")
+                           3600.0, "bare", lease_class=self.lease_class)
         ctrl = self._control(manager.server_id)
         # same fault surface and the same tolerance as allocate():
         # transient losses back off and resend, only a severed route
@@ -427,6 +474,7 @@ class Invoker:
         client must not keep costing the multicast fan-out forever."""
         self.deallocate()
         self.rm.bus.unsubscribe(self._on_delta)
+        self.fabric.set_tenant_qos(self.endpoint)   # drop weight/cap entry
         with self._lock:
             for ch in self._ctrl.values():
                 ch.fold_into(self._retired_wire)

@@ -33,6 +33,17 @@ class LeaseState(Enum):
 TERMINAL_STATES = frozenset({LeaseState.EXPIRED, LeaseState.RELEASED,
                              LeaseState.RETRIEVED, LeaseState.FAILED})
 
+#: Priority lease classes (DESIGN.md §18), most- to least-protected:
+#: under batch-system pressure spot-hosting nodes are reclaimed first
+#: and premium-hosting nodes last; pricing scales the same way
+#: (``accounting.CLASS_PRICE_FACTOR``).
+LEASE_CLASSES = ("premium", "standard", "spot")
+
+#: Preemption rank: higher = reclaimed later.  Spot leases are the
+#: batch system's first target; premium leases are shielded until no
+#: spot/standard capacity remains.
+CLASS_PROTECTION = {"spot": 0, "standard": 1, "premium": 2}
+
 
 @dataclass
 class LeaseRequest:
@@ -41,6 +52,13 @@ class LeaseRequest:
     memory_bytes: int
     timeout_s: float
     sandbox: str = "bare"        # bare | docker
+    lease_class: str = "standard"  # premium | standard | spot (§18)
+
+    def __post_init__(self):
+        if self.lease_class not in CLASS_PROTECTION:
+            raise ValueError(
+                f"unknown lease class {self.lease_class!r}; expected "
+                f"one of {LEASE_CLASSES}")
 
 
 @dataclass

@@ -272,15 +272,26 @@ class SimulatedCluster:
                     self.isolate_nodes(ev.group_a, one_way=ev.one_way)
             elif ev.kind == "heal":
                 self.heal()
-            elif ev.kind == "bandwidth_storm":
+            elif ev.kind in ("bandwidth_storm", "tenant_storm"):
+                # tenant_storm sources from the tenant's endpoint so
+                # its registered fair-share weight/cap throttles the
+                # fan-out (DESIGN.md §18); bandwidth_storm sources are
+                # anonymous unit-weight "storm:i" endpoints
                 targets = ev.group_a or tuple(sorted(self.bs.nodes))
+                src_tenant = (f"client:{ev.tenant}"
+                              if ev.kind == "tenant_storm" else None)
                 for i in range(ev.n_transfers):
                     try:
                         self.fabric.start_transfer(
-                            f"storm:{i}", targets[i % len(targets)],
-                            ev.nbytes)
+                            src_tenant or f"storm:{i}",
+                            targets[i % len(targets)], ev.nbytes)
                     except Exception:    # noqa: BLE001 — partitioned
                         pass             # refused like any other traffic
+            elif ev.kind in ("quota_exhaustion", "lease_hoarding"):
+                # need a live Invoker for the named tenant — that is
+                # TraceReplayer's job; with no workload attached these
+                # are inert (documented no-ops, not errors)
+                pass
             else:
                 self.bs.apply_trace_event(ev)
 

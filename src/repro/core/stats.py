@@ -39,7 +39,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 __all__ = ["P2Quantile", "QuantileDigest", "StreamingMoments",
-           "RttAccumulator", "RTT_STATS_MODES"]
+           "RttAccumulator", "TenantRtts", "RTT_STATS_MODES"]
 
 RTT_STATS_MODES = ("sketch", "exact")
 
@@ -340,3 +340,73 @@ class RttAccumulator:
         if self._kept:
             return np.concatenate(self._kept)
         return None if self.mode == "sketch" else np.empty(0)
+
+
+class TenantRtts:
+    """Per-tenant RTT accumulators for multi-tenant QoS replays
+    (DESIGN.md §18).  One ``RttAccumulator`` per tenant id, created on
+    first observation, all sharing the accumulator mode/compression so
+    a sketch-mode and an exact-mode replay of the same seed disagree
+    only where the digest approximates.  Iteration order is insertion
+    order (first-observation order), which is itself deterministic per
+    seed — reports built by iterating tenants are bit-identical."""
+
+    __slots__ = ("mode", "_compression", "_chunk", "_tenants")
+
+    def __init__(self, mode: str = "sketch", *, compression: int = 200,
+                 chunk: int = 4096):
+        if mode not in RTT_STATS_MODES:
+            raise ValueError(
+                f"rtt stats mode must be one of {RTT_STATS_MODES}, "
+                f"got {mode!r}")
+        self.mode = mode
+        self._compression = compression
+        self._chunk = chunk
+        self._tenants: dict = {}
+
+    def acc(self, tenant: str) -> RttAccumulator:
+        a = self._tenants.get(tenant)
+        if a is None:
+            a = RttAccumulator(self.mode, compression=self._compression,
+                               chunk=self._chunk)
+            self._tenants[tenant] = a
+        return a
+
+    def add(self, tenant: str, x: float):
+        self.acc(tenant).add(x)
+
+    def add_vector(self, tenant: str, xs: Sequence[float]):
+        self.acc(tenant).add_vector(xs)
+
+    def tenants(self) -> List[str]:
+        return list(self._tenants)
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._tenants
+
+    def percentile(self, tenant: str, pct: float) -> float:
+        a = self._tenants.get(tenant)
+        return a.percentile(pct) if a is not None else 0.0
+
+    def mean(self, tenant: str) -> float:
+        a = self._tenants.get(tenant)
+        return a.mean if a is not None else 0.0
+
+    def count(self, tenant: str) -> int:
+        a = self._tenants.get(tenant)
+        return a.count if a is not None else 0
+
+    def report(self, pcts: Sequence[float] = (50.0, 99.0)) -> dict:
+        """``{tenant: {"count", "mean", "p<pct>"...}}`` in insertion
+        order — the shape the QoS benchmark prints and diffs."""
+        out = {}
+        for tenant, a in self._tenants.items():
+            row = {"count": a.count, "mean": a.mean}
+            for p in pcts:
+                key = f"p{p:g}"
+                row[key] = a.percentile(p)
+            out[tenant] = row
+        return out

@@ -47,8 +47,8 @@ import json
 import random
 from collections import deque
 from dataclasses import dataclass, field, fields as dc_fields
-from typing import Dict, IO, Iterable, Iterator, List, Optional, Tuple, \
-    Union
+from typing import Dict, IO, Iterable, Iterator, List, Optional, \
+    Sequence, Tuple, Union
 
 import numpy as np
 
@@ -61,13 +61,19 @@ from repro.core.invoker import (AllocationFailed, ExecutorCrash, Invoker,
                                 RetryingFuture)
 from repro.core.perf_model import Tier
 from repro.core.simulation import SimulatedCluster
-from repro.core.stats import RttAccumulator
+from repro.core.stats import RttAccumulator, TenantRtts
 from repro.core.transport import ChannelPartitioned, Topology
 
 #: Recognized trace event kinds: batch-system churn + transport faults
-#: + shared-link congestion storms.
+#: + shared-link congestion storms + multi-tenant QoS adversaries
+#: (DESIGN.md §18): ``tenant_storm`` is a bandwidth_storm whose
+#: transfers originate from one tenant's endpoint (so its registered
+#: fair-share weight/cap applies), ``quota_exhaustion`` is an oversized
+#: allocation burst that per-tenant quotas should reject, and
+#: ``lease_hoarding`` grabs workers and sits on them for a while.
 EVENT_KINDS = ("node_down", "node_up", "batch_job",
-               "drop_rate", "partition", "heal", "bandwidth_storm")
+               "drop_rate", "partition", "heal", "bandwidth_storm",
+               "tenant_storm", "quota_exhaustion", "lease_hoarding")
 
 
 @dataclass(frozen=True)
@@ -90,6 +96,8 @@ class TraceEvent:
     one_way: bool = False              # asymmetric partition (a→b only)
     n_transfers: int = 0               # bandwidth_storm fan-in width
     nbytes: int = 0                    # bandwidth_storm per-transfer bytes
+    tenant: str = ""                   # tenant_storm / quota_exhaustion /
+    #                                    lease_hoarding actor (client id)
 
     def to_dict(self) -> dict:
         out = {}
@@ -155,15 +163,26 @@ class ChurnTrace:
                     raise ValueError(
                         f"batch_job wants {ev.n_nodes} nodes but its "
                         f"affinity only names {len(ev.group_a)}")
-            if ev.kind == "bandwidth_storm":
+            if ev.kind in ("bandwidth_storm", "tenant_storm"):
                 if ev.n_transfers <= 0 or ev.nbytes <= 0:
                     raise ValueError(
-                        "bandwidth_storm needs n_transfers > 0 and "
+                        f"{ev.kind} needs n_transfers > 0 and "
                         "nbytes > 0")
                 bad = set(ev.group_a) - node_ids
                 if bad:
                     raise ValueError(
-                        f"bandwidth_storm targets unknown nodes {bad}")
+                        f"{ev.kind} targets unknown nodes {bad}")
+            if ev.kind in ("tenant_storm", "quota_exhaustion",
+                           "lease_hoarding"):
+                if not ev.tenant:
+                    raise ValueError(f"{ev.kind} needs a tenant id")
+            if ev.kind in ("quota_exhaustion", "lease_hoarding"):
+                if ev.n_nodes <= 0:
+                    raise ValueError(
+                        f"{ev.kind} needs n_nodes > 0 (workers to grab)")
+                if ev.kind == "lease_hoarding" and ev.duration_s <= 0:
+                    raise ValueError(
+                        "lease_hoarding needs duration_s > 0")
 
     def counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -480,6 +499,12 @@ class ElasticityStats:
     cost_lease_usd: float = 0.0       # discounted idle-capacity leases
     cost_static_usd: float = 0.0      # peak-sized reservation, full price
     t_end_s: float = 0.0
+    # multi-tenant QoS surface (§18; zero/empty without QoS events)
+    quota_rejections: int = 0         # leases refused by tenant quotas
+    tenant_storm_transfers: int = 0   # adversary transfers launched
+    quota_bursts: int = 0             # quota_exhaustion events applied
+    hoarded_workers: int = 0          # workers grabbed by hoarders
+    tenant_rtts: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -521,6 +546,12 @@ class TraceReplayer:
         self.events_applied = 0
         self.storm_transfers = 0
         self.storm_blocked = 0
+        # QoS adversary accounting (§18)
+        self.tenant_storm_transfers = 0
+        self.quota_bursts = 0
+        self.hoarded_workers = 0
+        self._tenants_by_id: Dict[str, Invoker] = {}
+        self._hoard_alloc_kw: dict = {}
 
     # ------------------------------------------------------ trace events
     def _apply(self, ev: TraceEvent):
@@ -554,6 +585,46 @@ class TraceReplayer:
                     self.storm_transfers += 1
                 except ChannelPartitioned:
                     self.storm_blocked += 1
+        elif ev.kind == "tenant_storm":
+            # bandwidth_storm whose transfers originate from ONE
+            # tenant's endpoint (§18): the fabric's QoS registry keys
+            # on the source, so every storm transfer is throttled to
+            # that tenant's registered fair-share weight/cap — an
+            # adversarial fan-out cannot outrun its own share, and a
+            # premium victim on the same links keeps w_i/Σw of them.
+            targets = ev.group_a or tuple(sorted(sim.bs.nodes))
+            src = f"client:{ev.tenant}"
+            for i in range(ev.n_transfers):
+                dst = targets[i % len(targets)]
+                try:
+                    sim.fabric.start_transfer(src, dst, ev.nbytes)
+                    self.storm_transfers += 1
+                    self.tenant_storm_transfers += 1
+                except ChannelPartitioned:
+                    self.storm_blocked += 1
+        elif ev.kind == "quota_exhaustion":
+            # oversized allocation burst: per-tenant quotas reject at
+            # negotiation time (Ledger.try_acquire_workers), the burst
+            # walks every candidate and comes home short-handed
+            tenant = self._tenants_by_id.get(ev.tenant)
+            if tenant is not None:
+                self.quota_bursts += 1
+                got = tenant.allocate(ev.n_nodes, **self._hoard_alloc_kw)
+                if got:
+                    sim._track_leases(tenant)
+        elif ev.kind == "lease_hoarding":
+            # grab-and-sit: the hoarder leases n_nodes workers and
+            # releases them duration_s later; victims re-lease around
+            # it, quotas (when set) bound the grab
+            tenant = self._tenants_by_id.get(ev.tenant)
+            if tenant is not None:
+                got = tenant.allocate(ev.n_nodes, **self._hoard_alloc_kw)
+                if got:
+                    sim._track_leases(tenant)
+                    self.hoarded_workers += got
+                    sim.clock.call_at(
+                        sim.clock.now() + ev.duration_s,
+                        lambda t=tenant, n=got: t.release_workers(n))
         else:
             sim.bs.apply_trace_event(ev)
 
@@ -577,7 +648,10 @@ class TraceReplayer:
                lease_timeout_s: Optional[float] = None,
                tail_s: float = 0.2,
                get_timeout_s: float = 300.0,
-               rtt_stats: str = "sketch") -> ElasticityStats:
+               rtt_stats: str = "sketch",
+               per_tenant_stats: bool = False,
+               tenant_classes: Optional[Sequence[str]] = None) \
+            -> ElasticityStats:
         """Run the full scenario and return deterministic stats.
 
         Hot-path shape (DESIGN.md §15/§17): completions STREAM — every
@@ -612,13 +686,21 @@ class TraceReplayer:
         alloc_kw = ({"timeout_s": lease_timeout_s}
                     if lease_timeout_s is not None else {})
 
+        # per-tenant lease classes (cycled) are opt-in: None leaves
+        # every tenant standard/unit-weight — the pre-QoS replay
+        classes = tuple(tenant_classes or ())
         tenants = [sim.client(f"tenant{i}", lib, allocation_rounds=2,
                               backoff_base=1e-4, backoff_cap=1e-3,
-                              allocation_window=allocation_window)
+                              allocation_window=allocation_window,
+                              **({"lease_class":
+                                  classes[i % len(classes)]}
+                                 if classes else {}))
                    for i in range(n_clients)]
         for t in tenants:
             t.allocate(workers_per_client, **alloc_kw)
             sim._track_leases(t)
+        self._tenants_by_id = {t.client_id: t for t in tenants}
+        self._hoard_alloc_kw = dict(alloc_kw)
 
         # churn + faults as ONE lazily-advanced chain (like the arrival
         # stream) applying every same-instant event in one callback:
@@ -681,6 +763,10 @@ class TraceReplayer:
 
         acc = RttAccumulator(rtt_stats)
         acc_add = acc.add
+        # per-tenant percentile sketches are OPT-IN: with the flag off
+        # the hooks and cohort commit run the exact pre-QoS code, so
+        # default replays stay bit-identical to PR-7 outputs
+        tacc = (TenantRtts(rtt_stats) if per_tenant_stats else None)
         done_box = [0]
         reallocations = [0]
         submitted = [0]
@@ -688,12 +774,16 @@ class TraceReplayer:
         failures: List = []              # (tenant, inv): retried after
 
         def make_hook(tenant):
+            tid = tenant.client_id
             def on_done(inv, err):
                 if err is None:
                     done_box[0] += 1
                     tl = inv.timeline    # rtt_modeled, inlined
-                    acc_add(tl.net_in + tl.overhead + tl.exec_time
-                            + tl.net_out)
+                    rtt_s = (tl.net_in + tl.overhead + tl.exec_time
+                             + tl.net_out)
+                    acc_add(rtt_s)
+                    if tacc is not None:
+                        tacc.add(tid, rtt_s)
                     inv.release()        # pooled record back on the
                     # free list — nothing references it anymore
                 else:
@@ -874,6 +964,13 @@ class TraceReplayer:
             rtt = (np.where(hot, ov_h[w_seg], ov_w[w_seg])
                    + (t_in_s + svc_s + t_out_s))
             acc.add_vector(rtt)
+            if tacc is not None:
+                # rtt is in worker order; map back to tenant picks so
+                # each tenant's sketch absorbs its own samples
+                tp = picks[order_w]
+                for ti in uniq_t:
+                    tacc.add_vector(tenants[ti].client_id,
+                                    rtt[tp == ti])
             # ---- commit: wire/worker counters, billing, stream state
             per_msg = hdr_in + out_nb
             ends = w_starts + w_counts - 1
@@ -978,6 +1075,8 @@ class TraceReplayer:
                 continue
             completed += 1
             acc_add(rf.timeline.rtt_modeled)
+            if tacc is not None:
+                tacc.add(tenant.client_id, rf.timeline.rtt_modeled)
 
         lease_states = sim._teardown_tenants(tenants)
         totals = sim.ledger.totals()
@@ -1043,6 +1142,11 @@ class TraceReplayer:
             cost_lease_usd=cost_lease,
             cost_static_usd=cost_static,
             t_end_s=clock.now(),
+            quota_rejections=sim.ledger.quota_rejections(),
+            tenant_storm_transfers=self.tenant_storm_transfers,
+            quota_bursts=self.quota_bursts,
+            hoarded_workers=self.hoarded_workers,
+            tenant_rtts=(tacc.report() if tacc is not None else {}),
         )
 
 
@@ -1056,7 +1160,8 @@ def replay_trace(trace: ChurnTrace, *, seed: int = 0,
     replay ``trace`` on it (benchmarks and CI smoke use this).  A trace
     carrying bandwidth_storm events arms the default single-switch
     topology automatically unless one is given."""
-    if topology is None and any(e.kind == "bandwidth_storm"
+    if topology is None and any(e.kind in ("bandwidth_storm",
+                                           "tenant_storm")
                                 for e in trace.events):
         topology = Topology.single_switch()
     sim = SimulatedCluster(n_nodes=trace.n_nodes,

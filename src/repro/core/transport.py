@@ -193,7 +193,7 @@ class Link:
     (DESIGN.md §15)."""
 
     __slots__ = ("name", "bandwidth", "active", "bytes_total",
-                 "peak_active", "members", "epoch")
+                 "peak_active", "members", "epoch", "wsum", "nonunit")
 
     def __init__(self, name: str, bandwidth: float):
         self.name = name
@@ -206,11 +206,27 @@ class Link:
         # tie-breaking depend on id() hashes across runs
         self.members: Dict["Transfer", None] = {}
         self.epoch = 0
+        # weighted fair share (DESIGN.md §18): sum of member weights and
+        # the count of members whose weight differs from 1.0.  While
+        # nonunit == 0 the share is computed from the INTEGER active
+        # count — bit-identical to the pre-QoS 1/K division — so the
+        # weighted machinery costs nothing until a weighted tenant
+        # actually lands on the link.
+        self.wsum = 0.0
+        self.nonunit = 0
 
-    def fair_share(self, extra: int = 0) -> float:
-        """Per-transfer rate if ``active + extra`` transfers share it."""
-        n = self.active + extra
-        return self.bandwidth / n if n else self.bandwidth
+    def fair_share(self, extra: int = 0, weight: float = 1.0) -> float:
+        """Per-transfer rate for a member of ``weight`` if
+        ``active + extra`` transfers share the link: ``bw·w_i/Σw``,
+        reducing to the exact integer-count ``bw/K`` when every weight
+        on the link is 1 (the bit-identity anchor for all pre-QoS
+        exact-value tests)."""
+        if not self.nonunit and weight == 1.0:
+            n = self.active + extra
+            return self.bandwidth / n if n else self.bandwidth
+        denom = self.wsum + extra * weight
+        return self.bandwidth * weight / denom if denom \
+            else self.bandwidth
 
 
 class Topology:
@@ -399,11 +415,12 @@ class Transfer:
 
     __slots__ = ("src", "dst", "nbytes", "path", "remaining", "rate",
                  "t_start", "t_last", "t_finish", "done", "duration",
-                 "charged", "on_done", "event", "esig")
+                 "charged", "on_done", "event", "esig", "weight", "cap")
 
     def __init__(self, src: str, dst: str, nbytes: int,
                  path: Tuple[Link, ...], t_start: float,
-                 on_done: Optional[Callable[["Transfer"], None]] = None):
+                 on_done: Optional[Callable[["Transfer"], None]] = None,
+                 weight: float = 1.0, cap: Optional[float] = None):
         self.src = src
         self.dst = dst
         self.nbytes = nbytes
@@ -419,6 +436,8 @@ class Transfer:
         self.on_done = on_done       # accounted at charge time
         self.event = None            # this transfer's completion event
         self.esig = -1               # path epoch signature of `rate`
+        self.weight = weight         # tenant QoS share weight (§18)
+        self.cap = cap               # tenant bandwidth cap, bytes/s
 
 
 class CongestionEngine:
@@ -514,6 +533,9 @@ class CongestionEngine:
             del link.members[tr]
             link.active -= 1
             link.epoch += 1
+            link.wsum -= tr.weight
+            if tr.weight != 1.0:
+                link.nonunit -= 1
             for m in link.members:
                 affected[m] = None
         del self._active[tr]
@@ -560,11 +582,14 @@ class CongestionEngine:
                                            and tr.remaining < 1.0):
                     cascade.update(self._retire(tr, now, finished))
                     continue
-                rate = path[0].fair_share()
+                w = tr.weight
+                rate = path[0].fair_share(0, w)
                 for link in path:
-                    r = link.fair_share()
+                    r = link.fair_share(0, w)
                     if r < rate:
                         rate = r
+                if tr.cap is not None and rate > tr.cap:
+                    rate = tr.cap
                 tr.esig = esig
                 if rate != tr.rate:
                     tr.rate = rate
@@ -598,17 +623,20 @@ class CongestionEngine:
     # ------------------------------------------------------------ starts
     def start(self, src: str, dst: str, nbytes: int, *,
               on_done: Optional[Callable[["Transfer"], None]] = None,
-              charged: bool = False) -> Transfer:
+              charged: bool = False, weight: float = 1.0,
+              cap: Optional[float] = None) -> Transfer:
         """Register one transfer and re-rate ONLY the transfers sharing
         its links.  The transfer completes via its own clock event;
         ``on_done`` fires at that instant with the final ``duration``
-        set."""
+        set.  ``weight``/``cap`` are the tenant's QoS parameters
+        (§18): the transfer takes ``w_i/Σw`` of each link, never more
+        than ``cap`` bytes/s."""
         finished: List[Transfer] = []
         with self._lock:
             now = self.clock.now()
             path = self.topology.path(src, dst)
             tr = self._start_locked(src, dst, nbytes, on_done, charged,
-                                    now, path, finished)
+                                    now, path, finished, weight, cap)
         for t in finished:             # neighbors that drained at this
             if t.on_done is not None:  # exact instant
                 t.on_done(t)
@@ -617,10 +645,12 @@ class CongestionEngine:
     def _start_locked(self, src: str, dst: str, nbytes: int, on_done,
                       charged: bool, now: float,
                       path: Tuple[Link, ...],
-                      finished: List[Transfer]) -> Transfer:
+                      finished: List[Transfer],
+                      weight: float = 1.0,
+                      cap: Optional[float] = None) -> Transfer:
         """Registration body; caller holds the lock and fires the
         ``finished`` callbacks after releasing it."""
-        tr = Transfer(src, dst, nbytes, path, now, on_done)
+        tr = Transfer(src, dst, nbytes, path, now, on_done, weight, cap)
         tr.charged = charged
         affected: Dict[Transfer, None] = {}
         peak = self.peak_link_active
@@ -630,6 +660,9 @@ class CongestionEngine:
             link.members[tr] = None
             link.active += 1
             link.epoch += 1
+            link.wsum += weight
+            if weight != 1.0:
+                link.nonunit += 1
             link.bytes_total += nbytes
             if link.active > link.peak_active:
                 link.peak_active = link.active
@@ -638,13 +671,15 @@ class CongestionEngine:
         self.peak_link_active = peak
         self._active[tr] = None
         self.transfers_started += 1
-        rate = path[0].fair_share()
+        rate = path[0].fair_share(0, weight)
         esig = 0
         for link in path:
-            r = link.fair_share()
+            r = link.fair_share(0, weight)
             if r < rate:
                 rate = r
             esig += link.epoch
+        if cap is not None and rate > cap:
+            rate = cap
         tr.rate = rate
         tr.esig = esig
         self._schedule(tr, now)
@@ -653,7 +688,8 @@ class CongestionEngine:
 
     # ----------------------------------------------------------- charges
     def charged_time(self, src: str, dst: str, nbytes: int,
-                     params: FabricParams) -> float:
+                     params: FabricParams, weight: float = 1.0,
+                     cap: Optional[float] = None) -> float:
         """Congestion-aware modeled one-way time of a channel send:
         latency + serialization at the fair-share rate the transfer
         observes at send time (inline saving and wire encoding exactly
@@ -670,7 +706,9 @@ class CongestionEngine:
         with self._lock:               # one critical section: rate
             # observation, congestion stats AND load registration
             path = self.topology.path(src, dst)
-            rate = min(link.fair_share(extra=1) for link in path)
+            rate = min(link.fair_share(1, weight) for link in path)
+            if cap is not None and rate > cap:
+                rate = cap
             solo = self.solo_rate(path)
             serial = wire / rate if wire else 0.0
             if rate < solo:
@@ -678,7 +716,8 @@ class CongestionEngine:
                 self.congestion_delay_s += serial - wire / solo
             if wire >= self.topology.min_track_bytes:
                 self._start_locked(src, dst, wire, None, True,
-                                   self.clock.now(), path, finished)
+                                   self.clock.now(), path, finished,
+                                   weight, cap)
         for tr in finished:            # neighbors drained at this instant
             if tr.on_done is not None:
                 tr.on_done(tr)
@@ -771,8 +810,13 @@ class Channel:
         fabric = self.fabric
         if fabric._cong_active or nbytes >= fabric._cong_track_min:
             a, b = (self.dst, self.src) if reverse else (self.src, self.dst)
+            if fabric._qos:
+                weight, cap = fabric._qos_for(self.src, self.dst)
+            else:
+                weight, cap = 1.0, None
             return fabric.congestion.charged_time(
-                a, b, nbytes, fabric.params) + self.extra_delay
+                a, b, nbytes, fabric.params, weight,
+                cap) + self.extra_delay
         return fabric.params.message_time(nbytes) + self.extra_delay
 
     # ------------------------------------------------------------- wire
@@ -980,6 +1024,11 @@ class Fabric:
         # registers as link load — otherwise channel-only bulk traffic
         # would still overlap for free
         self._cong_track_min = math.inf
+        # tenant QoS registry (DESIGN.md §18): endpoint -> (weight,
+        # cap).  Empty for every pre-QoS scenario, and the charge path
+        # checks emptiness before doing any lookup — unregistered
+        # fabrics stay bit-identical to the unweighted engine.
+        self._qos: Dict[str, Tuple[float, Optional[float]]] = {}
         if topology is not None:
             self.arm_topology(topology)
         self._lock = threading.Lock()
@@ -1073,11 +1122,47 @@ class Fabric:
         self._cong_active = self.congestion.always_on
         return self.congestion
 
+    def set_tenant_qos(self, endpoint: str, *, weight: float = 1.0,
+                       cap: Optional[float] = None):
+        """Register per-tenant network QoS (DESIGN.md §18): transfers
+        and charged sends touching ``endpoint`` take ``weight·bw/Σw``
+        of each shared link instead of the unweighted ``bw/K``, and
+        never exceed ``cap`` bytes/s.  The defaults (weight 1, no cap)
+        REMOVE the entry, so a fabric whose every tenant is standard
+        keeps the exact pre-QoS arithmetic."""
+        if weight <= 0.0 or not math.isfinite(weight):
+            raise ValueError(f"weight must be finite and > 0, "
+                             f"got {weight}")
+        if cap is not None and cap <= 0.0:
+            raise ValueError(f"cap must be > 0 bytes/s, got {cap}")
+        with self._lock:
+            if weight == 1.0 and cap is None:
+                self._qos.pop(endpoint, None)
+            else:
+                self._qos[endpoint] = (weight, cap)
+
+    def tenant_qos(self, endpoint: str) -> Tuple[float, Optional[float]]:
+        return self._qos.get(endpoint, (1.0, None))
+
+    def _qos_for(self, src: str,
+                 dst: str) -> Tuple[float, Optional[float]]:
+        """QoS parameters governing a src→dst message: the source
+        endpoint's entry wins (the sender owns its traffic class);
+        otherwise the destination's (a registered client's rx fan-in
+        is shaped by its own class).  Reads are lock-free like
+        ``partitioned()`` — entries are replaced atomically."""
+        q = self._qos
+        e = q.get(src)
+        if e is None:
+            e = q.get(dst)
+        return e if e is not None else (1.0, None)
+
     def start_transfer(self, src: str, dst: str, nbytes: int, *,
                        on_done=None) -> Transfer:
         """Launch one bulk transfer on the topology (arming the default
         single-switch topology on first use).  The transfer fair-shares
-        every link it crosses and completes via a clock event; faults
+        every link it crosses (weighted by the owning tenant's QoS
+        entry, if any) and completes via a clock event; faults
         compose — a partitioned route refuses the transfer outright."""
         if self.congestion is None:
             self.arm_topology(Topology.single_switch())
@@ -1085,7 +1170,10 @@ class Fabric:
             raise ChannelPartitioned(f"{src} -/-> {dst}: no route")
         wire = nbytes if self.params.encoding == 1.0 \
             else int(round(nbytes * self.params.encoding))
-        return self.congestion.start(src, dst, wire, on_done=on_done)
+        weight, cap = self._qos_for(src, dst) if self._qos \
+            else (1.0, None)
+        return self.congestion.start(src, dst, wire, on_done=on_done,
+                                     weight=weight, cap=cap)
 
     def nic_load(self, endpoint: str) -> int:
         """Transfers currently crossing this endpoint's NIC — 0 when no

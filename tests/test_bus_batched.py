@@ -85,6 +85,37 @@ def test_unsubscribed_channel_left_out():
     assert bus.delivered == 2
 
 
+def test_closed_mid_iteration_counter_parity():
+    """Degenerate channels: subscribers whose channels were CLOSED (not
+    unsubscribed) stay in the fan-out set.  The multicast fast path
+    must treat them exactly like ``Channel.send`` does — blocked
+    counters on both the channel and the fabric's retired aggregate,
+    counted as a bus drop, and NO RNG draw (so every later seeded drop
+    decision on the live channels stays bit-aligned with the scalar
+    loop)."""
+    results = {}
+    for batched in (True, False):
+        bus, fabric, got = _bus(batched, drop_rate=0.25, n_subs=8,
+                                seed=42)
+        for i in range(10):
+            bus.publish({"op": "add", "server_id": f"a{i}"})
+        before = [len(g) for g in got]
+        for idx in (2, 5):                # close mid-sequence, in-set
+            bus._subs[idx][1].close()
+        for i in range(10):
+            bus.publish({"op": "add", "server_id": f"b{i}"})
+        results[batched] = (bus.delivered, bus.dropped,
+                            [len(g) for g in got], fabric.stats())
+        # a closed subscriber never hears another delta
+        assert results[batched][2][2] == before[2]
+        assert results[batched][2][5] == before[5]
+    assert results[True] == results[False]
+    delivered, dropped, per_sub, wire = results[True]
+    assert wire["blocked"] == 2 * 10      # each publish blocks both
+    assert dropped >= 2 * 10              # blocked copies count as drops
+    assert delivered + dropped == 20 * 8
+
+
 def _storm_replay(batched: bool):
     trace = ChurnTrace.synthetic_piz_daint(
         100, 1.0, 0.5, seed=5, fault_drop_rate=0.02, drop_window_s=0.3,

@@ -321,6 +321,65 @@ def test_dispatch_empty_cluster_single_snapshot():
     assert calls == [False]
 
 
+# ------------------------------------------------- billing regressions
+def test_release_stops_allocation_meter():
+    """Regression: the GB-s meter must freeze at the release instant —
+    elastic scale-down used to keep billing the returned lease until
+    the next flush read the clock."""
+    lib = _lib(("echo", lambda x: x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=2)
+    inv.allocate(1)
+    lease = inv.connections()[0].process.lease
+    sim.run_for(1.0)
+    inv.release_workers(1)
+    t_rel = sim.clock.now()
+    sim.run_for(5.0)                        # idle long after the release
+    bill = sim.ledger.bill("par")
+    assert lease.t_ended == pytest.approx(t_rel, abs=1e-9)
+    held = lease.t_ended - lease.t_granted
+    assert held == pytest.approx(1.0, abs=1e-2)
+    # exactly GB x held-seconds: the 5 s after release cost nothing
+    assert bill.gb_seconds == pytest.approx(
+        (1 << 30) / 1e9 * held, rel=1e-12)
+
+
+def test_scale_to_bills_only_held_time():
+    """scale_to shrink path: each surplus lease bills through its own
+    end instant; the surviving lease is not billed until it ends."""
+    lib = _lib(("echo", lambda x: x, 1e-4))
+    sim, inv = _cluster(lib, n_nodes=4)
+    px = ParallelExecutor(inv, target_workers=4)
+    leases = [c.process.lease for c in inv.connections()]
+    sim.run_for(0.5)
+    assert px.scale_to(1) == 1
+    sim.run_for(2.0)
+    ended = [l for l in leases if l.t_ended is not None]
+    assert len(ended) == 3
+    expect = sum((l.request.memory_bytes / 1e9) * (l.t_ended - l.t_granted)
+                 for l in ended)
+    assert sim.ledger.bill("par").gb_seconds == pytest.approx(
+        expect, rel=1e-12)
+
+
+def test_crash_retry_bills_single_invocation():
+    """Regression: an invocation whose result leg is lost to a
+    partition bills its wasted compute but NOT an invocation count —
+    only the successful retry counts, so ClientBill.invocations == 1
+    while compute_seconds covers both attempts."""
+    lib = _lib(("work", lambda x: x * 3, 1e-3))
+    sim, inv = _cluster(lib, n_nodes=2, seed=2,
+                        topology=Topology.single_switch())
+    inv.allocate(2)
+    victim = inv._worker_pairs()[0][1].manager.server_id
+    sim.at(sim.clock.now() + 5e-4, sim.isolate_nodes, [victim])
+    f = inv.submit("work", 7, worker_hint=0)
+    assert f.get(5.0) == 21
+    assert inv.stats.retries >= 1
+    bill = sim.ledger.bill("par")
+    assert bill.invocations == 1            # not one per attempt
+    assert bill.compute_seconds == pytest.approx(2e-3, rel=1e-6)
+
+
 # ----------------------------------------------- ported parallel use cases
 def test_jacobi_simulated_bit_identical_and_elastic():
     import benchmarks.usecase_jacobi as uj

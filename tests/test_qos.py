@@ -1,0 +1,382 @@
+"""Multi-tenant QoS (DESIGN.md §18): weighted fair share and per-tenant
+caps on contended links, lease-quota admission, class-ordered
+preemption, per-tenant percentile sketches, and the accounting
+falsy-id / double-billing regressions that ride this layer.
+
+Everything runs on a ``VirtualClock`` — weighted-share durations are
+exact fair-share integrals asserted against closed forms, and the
+unit-weight paths are asserted BIT-identical (==, not approx) to the
+pre-QoS engine."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (CLASS_NET_WEIGHT, CLASS_PRICE_FACTOR,
+                        CLASS_PROTECTION, ChurnTrace, Fabric,
+                        FunctionLibrary, Ledger, LeaseRequest, LeaseState,
+                        Price, SimulatedCluster, TenantRtts, Topology,
+                        TraceEvent, TraceReplayer, VirtualClock)
+
+
+def _lib(svc=1e-4):
+    return FunctionLibrary("qos").register("echo", lambda x: x,
+                                           service_time_s=svc)
+
+
+def _fan_in(weights, payload=1 << 20, caps=None):
+    """Simultaneous transfers from distinct clients into one server;
+    client ``i`` registered with ``weights[i]`` (1.0 = unregistered)."""
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    caps = caps or [None] * len(weights)
+    for i, (w, c) in enumerate(zip(weights, caps)):
+        if w != 1.0 or c is not None:
+            fab.set_tenant_qos(f"client:{i}", weight=w, cap=c)
+    trs = [fab.start_transfer(f"client:{i}", "server", payload)
+           for i in range(len(weights))]
+    clock.run_until_idle()
+    return fab, [t.duration for t in trs]
+
+
+# ------------------------------------------------- weighted fair share
+def test_weighted_pair_matches_closed_form():
+    """Weights (1, 3) into one rx NIC: the heavy transfer holds 3/4 of
+    the link and finishes at ``lat + 4B/3C``; the light one then runs
+    solo and integrates to ``lat + 2B/C``."""
+    nb = 1 << 20
+    fab, (light, heavy) = _fan_in([1.0, 3.0], payload=nb)
+    lat, bw = fab.net.latency, fab.net.bandwidth
+    assert heavy == pytest.approx(lat + 4 * nb / (3 * bw), rel=1e-12)
+    assert light == pytest.approx(lat + 2 * nb / bw, rel=1e-12)
+
+
+def test_premium_vs_spot_staircase_closed_form():
+    """One premium (w=2) against four spots (w=0.5 each): Σw = 4, so
+    the premium holds C/2 and finishes at ``lat + 2B/C``; the spots
+    crawl at C/8 until it exits, then split the link four ways —
+    ``lat + 5B/C`` total.  Exactly the ``w_i/Σw`` schedule."""
+    nb = 1 << 20
+    fab, durs = _fan_in([2.0, 0.5, 0.5, 0.5, 0.5], payload=nb)
+    lat, bw = fab.net.latency, fab.net.bandwidth
+    assert durs[0] == pytest.approx(lat + 2 * nb / bw, rel=1e-12)
+    for spot in durs[1:]:
+        assert spot == pytest.approx(lat + 5 * nb / bw, rel=1e-12)
+
+
+def test_unit_weights_bit_identical_to_unweighted():
+    """A non-empty QoS registry whose entries touch NONE of the active
+    transfers must reproduce the unweighted engine bit-for-bit: the
+    unit-weight fast path divides by the integer member count, never
+    the float weight sum."""
+    _, base = _fan_in([1.0] * 4)
+    clock = VirtualClock()
+    fab = Fabric("rdma", clock=clock, topology=Topology.single_switch())
+    fab.set_tenant_qos("client:bystander", weight=7.0)   # never sends
+    trs = [fab.start_transfer(f"client:{i}", "server", 1 << 20)
+           for i in range(4)]
+    clock.run_until_idle()
+    assert [t.duration for t in trs] == base             # ==, not approx
+
+
+def test_per_tenant_cap_floors_solo_rate():
+    """A cap of C/4 binds even on an idle link (``lat + 4B/C``), and a
+    cap at line rate never binds — durations stay bit-identical to the
+    uncapped fan-in."""
+    nb = 1 << 20
+    fab, (capped,) = _fan_in([1.0], payload=nb,
+                             caps=[None])
+    lat, bw = fab.net.latency, fab.net.bandwidth
+    solo = capped
+    clock = VirtualClock()
+    fab2 = Fabric("rdma", clock=clock,
+                  topology=Topology.single_switch())
+    fab2.set_tenant_qos("client:0", cap=fab2.net.bandwidth / 4)
+    tr = fab2.start_transfer("client:0", "server", nb)
+    clock.run_until_idle()
+    assert tr.duration == pytest.approx(lat + 4 * nb / bw, rel=1e-12)
+    assert tr.duration > solo
+    # a line-rate cap is inert: weight stays 1.0, so the integer-count
+    # fast path still applies and the schedule is bit-identical
+    _, base = _fan_in([1.0] * 3, payload=nb)
+    _, with_cap = _fan_in([1.0] * 3, payload=nb,
+                          caps=[bw, None, None])
+    assert with_cap == base
+
+
+def test_qos_registration_validation_and_removal():
+    fab = Fabric("rdma", clock=VirtualClock())
+    with pytest.raises(ValueError):
+        fab.set_tenant_qos("x", weight=0.0)
+    with pytest.raises(ValueError):
+        fab.set_tenant_qos("x", weight=-2.0)
+    with pytest.raises(ValueError):
+        fab.set_tenant_qos("x", weight=float("inf"))
+    with pytest.raises(ValueError):
+        fab.set_tenant_qos("x", cap=0.0)
+    fab.set_tenant_qos("x", weight=2.0, cap=1e9)
+    assert fab.tenant_qos("x") == (2.0, 1e9)
+    fab.set_tenant_qos("x")                  # defaults remove the entry
+    assert fab.tenant_qos("x") == (1.0, None)
+    assert not fab._qos
+
+
+def test_invoker_class_registers_and_unregisters_net_weight():
+    """A premium client advertises its class weight on the fabric at
+    construction and drops the entry at shutdown; standard clients
+    leave the registry untouched."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=2, seed=0)
+    lib = _lib()
+    std = sim.client("plain", lib)
+    assert sim.fabric.tenant_qos("client:plain") == (1.0, None)
+    assert not sim.fabric._qos
+    prem = sim.client("gold", lib, lease_class="premium")
+    assert sim.fabric.tenant_qos("client:gold") == \
+        (CLASS_NET_WEIGHT["premium"], None)
+    spot = sim.client("cheap", lib, lease_class="spot", net_cap=1e9)
+    assert sim.fabric.tenant_qos("client:cheap") == \
+        (CLASS_NET_WEIGHT["spot"], 1e9)
+    prem.shutdown()
+    spot.shutdown()
+    std.shutdown()
+    assert not sim.fabric._qos
+    with pytest.raises(ValueError):
+        sim.client("bogus", lib, lease_class="gold")
+
+
+# --------------------------------------------------- quota admission
+def test_quota_rejects_hoarder_at_negotiation():
+    """A tenant's held-worker count spans every manager: once at the
+    cap, negotiation is refused on ALL servers; releases reopen it."""
+    sim = SimulatedCluster(n_nodes=2, workers_per_node=4, seed=0)
+    lib = _lib()
+    cl = sim.client("greedy", lib, allocation_rounds=1,
+                    backoff_base=1e-4, backoff_cap=1e-3)
+    sim.ledger.set_quota("greedy", 2)
+    assert cl.allocate(1) == 1
+    assert cl.allocate(1) == 1
+    assert cl.allocate(1) == 0               # quota, not capacity
+    q = sim.ledger.quota("greedy")
+    assert q.held_workers == 2 and q.rejections >= 1
+    assert sim.ledger.quota_rejections() == q.rejections
+    cl.release_workers(1)
+    assert sim.ledger.quota("greedy").held_workers == 1
+    assert cl.allocate(1) == 1               # freed quota admits again
+    cl.deallocate()
+    assert sim.ledger.quota("greedy").held_workers == 0
+
+
+def test_quota_freed_by_crash_and_unquotaed_tenants_unbounded():
+    sim = SimulatedCluster(n_nodes=1, workers_per_node=4, seed=1)
+    lib = _lib()
+    cl = sim.client("c", lib, allocation_rounds=1,
+                    backoff_base=1e-4, backoff_cap=1e-3)
+    assert cl.allocate(3) == 3               # no quota set: unbounded
+    assert sim.ledger.quota("c").held_workers == 3
+    sim.manager("node000").crash()
+    assert sim.ledger.quota("c").held_workers == 0
+    led = Ledger()
+    with pytest.raises(ValueError):
+        led.set_quota("c", -1)
+    with pytest.raises(ValueError):
+        led.set_quota("", 4)
+
+
+# --------------------------------------------- class-ordered preemption
+def _three_class_cluster(seed=2):
+    """Three tenants, one per class, each wholly occupying one node."""
+    sim = SimulatedCluster(n_nodes=3, workers_per_node=2, seed=seed)
+    lib = _lib()
+    hosts = {}
+    for name, klass in (("s", "spot"), ("p", "premium"),
+                        ("n", "standard")):
+        cl = sim.client(name, lib, lease_class=klass,
+                        allocation_rounds=2, backoff_base=1e-4,
+                        backoff_cap=1e-3)
+        assert cl.allocate(2) == 2           # one 2-worker lease/node
+        conns = cl.connections()
+        assert len(conns) == 1
+        hosts[klass] = conns[0].manager.server_id
+    assert len(set(hosts.values())) == 3
+    return sim, hosts
+
+
+def test_spot_preempted_before_standard_before_premium():
+    """Under batch pressure the claim order follows CLASS_PROTECTION:
+    spot-hosting nodes first, premium-hosting nodes last (§5.3 + §18),
+    regardless of node-id order."""
+    sim, hosts = _three_class_cluster()
+    j1 = sim.bs.submit_job(1, duration_s=10.0)
+    assert j1.nodes == [hosts["spot"]]
+    j2 = sim.bs.submit_job(1, duration_s=10.0)
+    assert j2.nodes == [hosts["standard"]]
+    j3 = sim.bs.submit_job(1, duration_s=10.0)
+    assert j3.nodes == [hosts["premium"]]
+    assert sim.bs.preemptions == 3
+    assert CLASS_PROTECTION["spot"] < CLASS_PROTECTION["standard"] \
+        < CLASS_PROTECTION["premium"]
+
+
+def test_all_standard_claim_order_is_unchanged():
+    """Bit-compat guard: with every lease standard (and with empty
+    nodes ranking as standard), the claimable order is exactly the
+    pre-QoS node-id order — no re-sort happens."""
+    sim = SimulatedCluster(n_nodes=3, workers_per_node=2, seed=3)
+    lib = _lib()
+    for i in range(3):
+        cl = sim.client(f"t{i}", lib, allocation_rounds=2,
+                        backoff_base=1e-4, backoff_cap=1e-3)
+        assert cl.allocate(2) == 2
+    job = sim.bs.submit_job(1, duration_s=10.0)
+    assert job.nodes == ["node000"]          # lowest id, as before QoS
+    job2 = sim.bs.submit_job(1, duration_s=10.0)
+    assert job2.nodes == ["node001"]
+
+
+def test_lease_class_validation():
+    with pytest.raises(ValueError):
+        LeaseRequest("c", 1, 1 << 30, 1.0, lease_class="gold")
+    req = LeaseRequest("c", 1, 1 << 30, 1.0, lease_class="spot")
+    assert req.lease_class == "spot"
+    # default stays standard so every pre-QoS construction is valid
+    assert LeaseRequest("c", 1, 1 << 30, 1.0).lease_class == "standard"
+
+
+# ------------------------------------------------- per-class pricing
+def test_class_prices_scale_the_rate_card():
+    p = Price()
+    prem = p.for_class("premium")
+    assert prem.c_a == p.c_a * CLASS_PRICE_FACTOR["premium"]
+    assert prem.c_c == p.c_c * CLASS_PRICE_FACTOR["premium"]
+    assert p.for_class("standard") == p
+    assert p.for_class("spot").c_c == p.c_c * 0.25
+    with pytest.raises(ValueError):
+        p.for_class("gold")
+    led = Ledger()
+    led.add_compute("a", 0.5)
+    led.add_allocation("a", 2.0)
+    assert led.cost("a", "premium") == \
+        pytest.approx(2 * led.cost("a", "standard"), rel=1e-12)
+    assert led.cost("a") == led.cost("a", "standard")
+
+
+# -------------------------------------------- ledger falsy-id regression
+def test_flush_empty_string_does_not_flush_every_tenant():
+    """Regression: ``flush("")`` used to take the falsy branch and
+    flush ALL tenants; only ``None`` means \"everyone\"."""
+    led = Ledger()
+    led._pending_compute["a"] += 0.25        # bypass _check_id to model
+    led._pending_compute["b"] += 0.5         # pre-guard ledger state
+    led.flush("")                            # one (nonexistent) tenant
+    assert dict(led._pending_compute) == {"a": 0.25, "b": 0.5}
+    led.flush(None)                          # explicit None: everyone
+    assert not led._pending_compute
+    assert led.bill("a").compute_seconds == 0.25
+    assert led.bill("b").compute_seconds == 0.5
+    led.add_compute("a", 0.125)
+    led.flush()                              # default arg: everyone
+    assert led.bill("a").compute_seconds == 0.375
+
+
+def test_ledger_refuses_empty_or_nonstring_ids():
+    led = Ledger()
+    for bad in ("", None, 3, b"x"):
+        with pytest.raises(ValueError):
+            led.add_compute(bad, 1.0)
+        with pytest.raises(ValueError):
+            led.add_compute_bulk(bad, 1.0, 1)
+        with pytest.raises(ValueError):
+            led.add_allocation(bad, 1.0)
+        with pytest.raises(ValueError):
+            led.try_acquire_workers(bad, 1)
+    assert led.totals().compute_seconds == 0.0
+
+
+# -------------------------------------------- per-tenant RTT sketches
+def test_tenant_rtts_sketch_vs_exact_bit_equality():
+    """Sketch and exact modes share the non-percentile fold: count and
+    mean are BIT-equal per tenant; exact percentiles reproduce
+    ``np.percentile`` and the digest lands within tolerance."""
+    rng = np.random.RandomState(11)
+    sketch, exact = TenantRtts("sketch"), TenantRtts("exact")
+    streams = {}
+    for tenant in ("a", "b", "c"):
+        xs = rng.exponential(1e-4, 4096)
+        streams[tenant] = xs
+        for acc in (sketch, exact):
+            acc.add_vector(tenant, xs[:4000])
+            for x in xs[4000:]:              # scalar tail too
+                acc.add(tenant, float(x))
+    assert sketch.tenants() == exact.tenants() == ["a", "b", "c"]
+    assert len(sketch) == 3 and "b" in sketch and "z" not in sketch
+    for tenant, xs in streams.items():
+        assert sketch.count(tenant) == exact.count(tenant) == xs.size
+        assert sketch.mean(tenant) == exact.mean(tenant)    # bit-equal
+        ex99 = exact.percentile(tenant, 99.0)
+        assert ex99 == float(np.percentile(xs, 99.0))
+        assert sketch.percentile(tenant, 99.0) == \
+            pytest.approx(ex99, rel=0.05)
+    # unseen tenants read as zero; bogus modes refused
+    assert exact.percentile("zzz", 99.0) == 0.0
+    assert exact.mean("zzz") == 0.0 and exact.count("zzz") == 0
+    with pytest.raises(ValueError):
+        TenantRtts("bogus")
+    rep = sketch.report((50.0, 99.0))
+    assert list(rep) == ["a", "b", "c"]
+    assert set(rep["a"]) == {"count", "mean", "p50", "p99"}
+
+
+# ------------------------------------------ QoS trace events end to end
+def _qos_replay(seed):
+    events = [
+        TraceEvent(0.05, "tenant_storm", tenant="tenant1",
+                   n_transfers=8, nbytes=4 << 20),
+        TraceEvent(0.10, "quota_exhaustion", tenant="tenant1",
+                   n_nodes=8),
+        TraceEvent(0.15, "lease_hoarding", tenant="tenant2",
+                   n_nodes=2, duration_s=0.1),
+        TraceEvent(0.30, "heal"),
+    ]
+    trace = ChurnTrace(4, events)
+    sim = SimulatedCluster(n_nodes=4, workers_per_node=8,
+                           memory_per_node=16 << 30, n_replicas=2,
+                           seed=seed, topology=Topology.single_switch())
+    sim.ledger.set_quota("tenant1", 2)
+    rep = TraceReplayer(sim, trace)
+    stats = rep.replay(n_clients=16, n_invocations=600,
+                       workers_per_client=1, per_tenant_stats=True,
+                       payload_elems=8192,
+                       tenant_classes=["premium", "spot", "standard",
+                                       "standard"])
+    return stats
+
+
+def test_qos_trace_events_replay_deterministically():
+    a, b = _qos_replay(9), _qos_replay(9)
+    assert a == b                            # sketches included
+    assert a.tenant_storm_transfers == 8
+    assert a.quota_bursts == 1
+    assert a.quota_rejections > 0            # the burst bounced
+    assert a.hoarded_workers == 2
+    assert a.completed == 600 and a.failed == 0 and a.lost == 0
+    assert set(a.tenant_rtts) <= {f"tenant{i}" for i in range(16)}
+    t0 = a.tenant_rtts["tenant0"]
+    assert t0["count"] > 0 and t0["p99"] >= t0["p50"] > 0
+
+
+def test_qos_trace_event_validation_and_json_round_trip():
+    with pytest.raises(ValueError):          # storm needs a tenant
+        ChurnTrace(2, [TraceEvent(0.0, "tenant_storm", n_transfers=1,
+                                  nbytes=1)])
+    with pytest.raises(ValueError):          # burst needs workers
+        ChurnTrace(2, [TraceEvent(0.0, "quota_exhaustion",
+                                  tenant="t")])
+    with pytest.raises(ValueError):          # hoard needs a duration
+        ChurnTrace(2, [TraceEvent(0.0, "lease_hoarding", tenant="t",
+                                  n_nodes=1)])
+    ev = TraceEvent(0.5, "tenant_storm", tenant="adv", n_transfers=3,
+                    nbytes=1 << 20)
+    trace = ChurnTrace(2, [ev])
+    back = ChurnTrace.from_json(trace.to_json())
+    assert back.events[0] == ev
+    assert back.events[0].tenant == "adv"
