@@ -114,6 +114,53 @@ def bench_event_core(n: int = 300_000) -> dict:
             handles[j] = clk.reschedule(handles[j], t + 1e-3)
         dt = time.perf_counter() - t0
         out[f"{impl}_resched_per_s"] = n / dt
+    # ``resched_local`` — the congestion engine's dominant move during
+    # a storm: a completion time nudged by a rate change that does NOT
+    # cross a calendar bucket.  The same-bucket fast path mutates the
+    # entry in place (no cancel tombstone, no re-push); the heap has no
+    # such path and falls back to cancel-and-rearm — the row records
+    # the gap the fast path buys.
+    for impl in ("calendar", "heap"):
+        clk = VirtualClock(queue=impl)
+        handles = [clk.call_at((j + 1) * 1e-6, _noop) for j in range(k)]
+        t0 = time.perf_counter()
+        for i in range(n):
+            j = i % k
+            jit = (1 + (i // k) % 90) * 1e-8     # stays in-bucket
+            handles[j] = clk.reschedule(handles[j],
+                                        (j + 1) * 1e-6 + jit)
+        dt = time.perf_counter() - t0
+        out[f"{impl}_resched_local_per_s"] = n / dt
+    # sharded event core (DESIGN.md §19): the same chain workload with
+    # the 64 chains spread over K=4 shard cursors — records what the
+    # K-way head scan costs on pure event traffic, and the windowed-pop
+    # fraction (the certificate that pops fall inside the conservative
+    # lookahead window, i.e. shards could run concurrently)
+    clk = VirtualClock(queue="calendar", shards=4,
+                       shard_lookahead=depth * 1e-6)
+    count = [0]
+
+    def mk_tick(s):
+        def tick_sh():
+            count[0] += 1
+            if count[0] < n:
+                clk._shard_hint = s    # the chain stays on its shard
+                clk.call_later_discard(depth * 1e-6, tick_sh)
+        return tick_sh
+    ticks = [mk_tick(s) for s in range(4)]
+    for i in range(depth):             # chains spread over the shards
+        clk._shard_hint = i % 4
+        clk.call_later((i + 1) * 1e-6, ticks[i % 4])
+    clk._shard_hint = 0
+    t0 = time.perf_counter()
+    clk.run_until(1e9)
+    dt = time.perf_counter() - t0
+    assert n <= count[0] < n + depth
+    qs = clk._queue.stats()
+    out["sharded4_chain_events_per_s"] = count[0] / dt
+    out["sharded4_windowed_pop_fraction"] = (
+        qs["windowed_pops"] / qs["pops_total"] if qs["pops_total"]
+        else 0.0)
     return out
 
 
@@ -215,6 +262,125 @@ def bench_replay_streaming(n_invocations: int = STREAM_N_INV,
         "invocations_per_s": n_invocations / wall_10m,
         "us_per_invocation": wall_10m / n_invocations * 1e6,
     }
+
+
+#: the multiprocess tier's acceptance bar: ≥2x the single-core 10M
+#: invocations/s at 4 workers (only meaningful with ≥4 real cores)
+SHARD_SPEEDUP_MIN = 2.0
+SHARD_WORKERS = 4
+
+
+def bench_replay_sharded(stream_row: dict, seed: int = SEED) -> dict:
+    """The ``replay_10m_sharded`` row (DESIGN.md §19): the 10M
+    churn+storm replay at K=4 shards — in-process first (bit-identity
+    vs the unsharded streaming run from the same process), then the
+    multiprocess tier at ``SHARD_WORKERS`` solver processes when the
+    box has enough cores.  The ≥2x speedup gate compares against the
+    single-core streaming row measured seconds earlier on THIS box, so
+    it is calibration-normalized by construction; on boxes without
+    ≥ SHARD_WORKERS cores the gate is skipped LOUDLY (recorded in the
+    row), never silently waved through."""
+    n_inv = STREAM_N_INV
+    cores = os.cpu_count() or 1
+
+    def one(shard_workers):
+        trace = _make_stretched_trace(1000, STREAM_DURATION_S, seed)
+        sim = SimulatedCluster(n_nodes=1000, workers_per_node=2,
+                               n_replicas=2, seed=seed, shards=4)
+        replayer = TraceReplayer(sim, trace)
+        t0 = time.perf_counter()
+        stats = replayer.replay(n_clients=STREAM_CLIENTS,
+                                n_invocations=n_inv,
+                                workers_per_client=STREAM_WORKERS,
+                                shards=4, shard_workers=shard_workers)
+        return stats, replayer, time.perf_counter() - t0
+
+    stats, replayer, wall = one(0)
+    single_ips = stream_row["invocations_per_s"]
+    row = {
+        "n_nodes": 1000,
+        "n_invocations": n_inv,
+        "shards": 4,
+        "cpu_count": cores,
+        "completed": stats.completed,
+        "bit_identical_vs_unsharded":
+            stats.completed == stream_row["completed"]
+            and stats.failed == stream_row["failed"]
+            and stats.lost == stream_row["lost"],
+        "cohort_windows": replayer.cohort_windows,
+        "shard_tasks_solved": replayer.shard_tasks_solved,
+        "queue": replayer.shard_queue_stats,
+        "wall_s": wall,
+        "invocations_per_s": n_inv / wall,
+        "single_core_invocations_per_s": single_ips,
+    }
+    if not row["bit_identical_vs_unsharded"]:
+        raise SystemExit(
+            "sharded 10M replay diverged from the unsharded run: "
+            f"completed {stats.completed} vs {stream_row['completed']}")
+    if cores >= SHARD_WORKERS:
+        mp_stats, _, mp_wall = one(SHARD_WORKERS)
+        if mp_stats.completed != stats.completed:
+            raise SystemExit("multiprocess sharded replay diverged "
+                             "from the in-process solve")
+        speedup = (n_inv / mp_wall) / single_ips
+        row["multiprocess"] = {
+            "shard_workers": SHARD_WORKERS,
+            "wall_s": mp_wall,
+            "invocations_per_s": n_inv / mp_wall,
+            "speedup_vs_single_core": speedup,
+        }
+        if speedup < SHARD_SPEEDUP_MIN:
+            raise SystemExit(
+                f"sharded multiprocess replay reached only "
+                f"{speedup:.2f}x the single-core rate "
+                f"(gate {SHARD_SPEEDUP_MIN:.1f}x at "
+                f"{SHARD_WORKERS} workers)")
+    else:
+        msg = (f"SKIPPED: {cores} CPU core(s) < {SHARD_WORKERS} "
+               f"workers — the ≥{SHARD_SPEEDUP_MIN:.0f}x gate needs "
+               f"real parallel hardware")
+        row["multiprocess"] = msg
+        print(f"replay_10m_sharded multiprocess tier {msg}",
+              file=sys.stderr)
+    return row
+
+
+def _run_smoke_shard():
+    """CI gate for the sharded event core (DESIGN.md §19): the
+    fast-tier 30k churn+storm replay unsharded, at K=1 and at K=4
+    (in-process) — all three must produce bit-identical stats — with
+    a deterministic stdout line the workflow diffs across two process
+    runs.  The windowed-pop fraction is the parallelism certificate:
+    pops that fell inside the conservative lookahead window."""
+    n_nodes, n_inv = 1000, 30_000
+    trace = _make_trace(n_nodes, 2.0, SEED)
+
+    def one(k):
+        sim = SimulatedCluster(n_nodes=n_nodes, workers_per_node=2,
+                               n_replicas=2, seed=SEED, shards=k)
+        replayer = TraceReplayer(sim, trace)
+        s = replayer.replay(n_clients=16, n_invocations=n_inv,
+                            workers_per_client=2, shards=k)
+        return s, replayer
+
+    s0, _ = one(0)
+    s1, _ = one(1)
+    s4, r4 = one(4)
+    for label, s in (("K=1", s1), ("K=4", s4)):
+        if s != s0:
+            diff = [f for f, v in s0.as_dict().items()
+                    if v != getattr(s, f)]
+            raise SystemExit(f"sharded replay ({label}) diverged from "
+                             f"the unsharded engine; fields: {diff}")
+    qs = r4.shard_queue_stats
+    frac = (qs["windowed_pops"] / qs["pops_total"]
+            if qs and qs["pops_total"] else 0.0)
+    print(f"# shard smoke ok: {_digest(s0)}"
+          f" windows={r4.cohort_windows}"
+          f" shard_tasks={r4.shard_tasks_solved}"
+          f" windowed_pops={frac:.6f}")
+    return []
 
 
 def _digest(stats) -> str:
@@ -357,8 +523,11 @@ def run(quick: bool = False, smoke: bool = False,
         "normalized_smoke_events_per_mop":
             (smoke_ev / smoke_dt) / (calib * 1e6),
     }
+    rep_shard = None
     if rep_stream is not None:
         doc["replay_10m_streaming"] = rep_stream
+        rep_shard = bench_replay_sharded(rep_stream)
+        doc["replay_10m_sharded"] = rep_shard
     if write_baseline and not quick:
         with open(BASELINE_PATH, "w") as f:
             json.dump(doc, f, indent=1)
@@ -370,6 +539,11 @@ def run(quick: bool = False, smoke: bool = False,
         ["heap_chain_events_per_s", core["heap_chain_events_per_s"]],
         ["calendar_resched_per_s", core["calendar_resched_per_s"]],
         ["heap_resched_per_s", core["heap_resched_per_s"]],
+        ["calendar_resched_local_per_s",
+         core["calendar_resched_local_per_s"]],
+        ["heap_resched_local_per_s", core["heap_resched_local_per_s"]],
+        ["sharded4_chain_events_per_s",
+         core["sharded4_chain_events_per_s"]],
         ["replay_invocations_per_s", rep["invocations_per_s"]],
         ["replay_events_per_s", rep["events_per_s"]],
         ["replay_us_per_invocation", rep["us_per_invocation"]],
@@ -380,7 +554,10 @@ def run(quick: bool = False, smoke: bool = False,
          rep_stream["wall_ratio_vs_1m"]],
         ["streaming_10m_invocations_per_s",
          rep_stream["invocations_per_s"]],
-    ] if rep_stream is not None else []), ["metric", "value"])
+    ] if rep_stream is not None else []) + ([
+        ["sharded_10m_invocations_per_s",
+         rep_shard["invocations_per_s"]],
+    ] if rep_shard is not None else []), ["metric", "value"])
     if write_baseline and not quick:
         print(f"# wrote {os.path.abspath(BASELINE_PATH)}")
     return doc
@@ -427,6 +604,8 @@ def _run_smoke():
 if __name__ == "__main__":
     if "--smoke-streaming" in sys.argv:
         _run_smoke_streaming()
+    elif "--smoke-shard" in sys.argv:
+        _run_smoke_shard()
     elif "--memgate" in sys.argv:
         _run_memgate()
     else:

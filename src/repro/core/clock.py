@@ -50,7 +50,8 @@ class ScheduledCall:
     ``seq`` is the clock-assigned FIFO tie-breaker within one instant."""
 
     __slots__ = ("when", "seq", "fn", "args", "cancelled", "fired",
-                 "repeating", "timer", "pooled", "owner", "purged")
+                 "repeating", "timer", "pooled", "owner", "purged",
+                 "shard")
 
     def __init__(self, when: float, fn: Callable, args: Tuple[Any, ...],
                  repeating: bool = False):
@@ -65,6 +66,7 @@ class ScheduledCall:
         self.pooled = False          # recyclable fire-and-forget event
         self.owner = None            # owning VirtualClock's cancel log
         self.purged = False          # no longer counted as pending work
+        self.shard = 0               # owning event shard (DESIGN.md §19)
 
     def cancel(self):
         # entry invalidation: the queue skips cancelled entries when
@@ -311,6 +313,39 @@ class CalendarQueue:
         c = self._head()
         return c.when if c is not None else None
 
+    def settle_cancel(self, call: ScheduledCall):
+        """Settle one cancel-log entry against the live-one-shot
+        counter (the caller has already checked/flagged ``purged``)."""
+        self.oneshots -= 1
+
+    def try_reschedule(self, call: ScheduledCall, when: float,
+                       seq: int) -> bool:
+        """Same-bucket fast path for ``Clock.reschedule``: when the
+        target instant lands in the SAME wheel bucket the call
+        currently occupies, mutate ``when`` in place and stamp the
+        fresh ``seq`` — no cancelled entry left to drain, no new
+        allocation.  The congestion engine's reschedule storms
+        (every transfer start/retire moves the next completion) hit
+        this whenever the move is sub-bucket.
+
+        Membership is derived, not stamped: a live non-repeating entry
+        whose bucket index satisfies ``cur < idx < end`` is guaranteed
+        to sit (unsorted) in ``buckets[idx & mask]`` — entries at
+        ``idx <= cur`` were drained into ``ready`` (sorted: no in-place
+        mutation allowed) and entries at ``idx >= end`` live in
+        ``far``/re-anchored geometry.  Pop order stays bit-identical
+        to cancel-and-rearm: the live (when, seq) set is the same."""
+        if call.repeating:
+            return False
+        inv_width = self.inv_width
+        idx = int(when * inv_width)
+        if (idx != int(call.when * inv_width) or idx <= self.cur
+                or idx >= self.end):
+            return False
+        call.when = when
+        call.seq = seq
+        return True
+
     # -------------------------------------------------------- adaptation
     def _adapt(self, now: float):
         """Every ``ADAPT_EVERY`` pops: retune the bucket width to the
@@ -400,9 +435,127 @@ class HeapEventQueue:
             return None
         return self.heap[0][0]
 
+    def _head(self) -> Optional[ScheduledCall]:
+        if not self._purge_head():
+            return None
+        return self.heap[0][2]
+
+    def settle_cancel(self, call: ScheduledCall):
+        self.oneshots -= 1
+
+    def try_reschedule(self, call: ScheduledCall, when: float,
+                       seq: int) -> bool:
+        return False                 # heap entries are keyed tuples:
+        # no in-place move — the reference stays cancel-and-rearm
+
 
 #: queue implementations by name (VirtualClock(queue=...))
 EVENT_QUEUES = {"calendar": CalendarQueue, "heap": HeapEventQueue}
+
+
+class ShardedEventQueue:
+    """K per-shard event queues under ONE global ``(when, seq)`` total
+    order (DESIGN.md §19).
+
+    Each shard owns its own sub-queue (cursor, buckets, adaptation);
+    ``push`` routes by the call's ``shard`` stamp and ``pop_due``
+    returns the global minimum over the K heads — a linear scan, K is
+    small — so the merged pop order is bit-identical to a single
+    queue over the same events BY CONSTRUCTION (the shards partition
+    the event set; seq is globally unique).
+
+    ``lookahead`` is the conservative-window floor (minimum
+    cross-shard latency): a pop is *windowed* when some OTHER shard's
+    head lies within the popped event's lookahead window — the two
+    shards could have executed those events concurrently under the
+    window protocol.  ``windowed_pops / pops_total`` is the run's
+    parallelism certificate: the fraction of events with concurrent
+    work available on another shard at pop time."""
+
+    __slots__ = ("shards", "n_shards", "lookahead", "pops_total",
+                 "windowed_pops", "shard_pops")
+
+    def __init__(self, start: float = 0.0, n_shards: int = 1, *,
+                 lookahead: float = 0.0, queue: str = "calendar"):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        cls = EVENT_QUEUES[queue]
+        self.shards = [cls(start) for _ in range(n_shards)]
+        self.n_shards = n_shards
+        self.lookahead = lookahead
+        self.pops_total = 0
+        self.windowed_pops = 0
+        self.shard_pops = [0] * n_shards
+
+    @property
+    def oneshots(self) -> int:
+        return sum(q.oneshots for q in self.shards)
+
+    def settle_cancel(self, call: ScheduledCall):
+        self.shards[call.shard].oneshots -= 1
+
+    def push(self, call: ScheduledCall):
+        self.shards[call.shard].push(call)
+
+    def try_reschedule(self, call: ScheduledCall, when: float,
+                       seq: int) -> bool:
+        return self.shards[call.shard].try_reschedule(call, when, seq)
+
+    def pop_due(self, target: float) -> Optional[ScheduledCall]:
+        best: Optional[ScheduledCall] = None
+        best_q = None
+        other = None                 # earliest head among OTHER shards
+        for q in self.shards:
+            c = q._head()
+            if c is None:
+                continue
+            if best is None or c.when < best.when or \
+                    (c.when == best.when and c.seq < best.seq):
+                if best is not None and (other is None
+                                         or best.when < other):
+                    other = best.when
+                best = c
+                best_q = q
+            elif other is None or c.when < other:
+                other = c.when
+        if best is None or best.when > target:
+            return None
+        self.pops_total += 1
+        if other is not None and other <= best.when + self.lookahead:
+            self.windowed_pops += 1
+        self.shard_pops[best.shard] += 1
+        return best_q.pop_due(target)
+
+    def peek_when(self) -> Optional[float]:
+        best = None
+        for q in self.shards:
+            w = q.peek_when()
+            if w is not None and (best is None or w < best):
+                best = w
+        return best
+
+    def safe_horizon(self, shard: int) -> float:
+        """How far shard ``shard`` may advance without coordination:
+        the earliest other-shard cursor plus the lookahead floor
+        (conservative PDES window bound).  Infinite when no other
+        shard holds events."""
+        other = None
+        for s, q in enumerate(self.shards):
+            if s == shard:
+                continue
+            w = q.peek_when()
+            if w is not None and (other is None or w < other):
+                other = w
+        if other is None:
+            return float("inf")
+        return other + self.lookahead
+
+    def stats(self) -> dict:
+        return {"n_shards": self.n_shards,
+                "lookahead_s": self.lookahead,
+                "pops_total": self.pops_total,
+                "windowed_pops": self.windowed_pops,
+                "shard_pops": list(self.shard_pops)}
 
 
 class Clock:
@@ -547,9 +700,18 @@ class VirtualClock(Clock):
 
     def __init__(self, start: float = 0.0, *,
                  rendezvous_timeout: float = 30.0,
-                 queue: str = "calendar"):
+                 queue: str = "calendar", shards: int = 0,
+                 shard_lookahead: float = 0.0):
         self._now = float(start)
-        self._queue = EVENT_QUEUES[queue](start)
+        if shards:
+            self._queue = ShardedEventQueue(
+                start, shards, lookahead=shard_lookahead, queue=queue)
+        else:
+            self._queue = EVENT_QUEUES[queue](start)
+        # events created while a shard hint is set are pinned to that
+        # shard's sub-queue (DESIGN.md §19); 0 = coordinator shard.
+        # Harmless when the queue is unsharded.
+        self._shard_hint = 0
         self._inbox: List[ScheduledCall] = []
         self._call_pool: List[ScheduledCall] = []   # recycled events
         # handles cancelled from ANY thread land here (atomic append);
@@ -602,6 +764,7 @@ class VirtualClock(Clock):
         call = ScheduledCall(now + delay if delay > 0.0 else now,
                              fn, args)
         call.owner = self._cancel_log
+        call.shard = self._shard_hint
         if _get_ident() == self._driver_ident:
             call.seq = self._seq
             self._seq += 1
@@ -615,6 +778,7 @@ class VirtualClock(Clock):
         """One-shot at absolute ``when`` — same inlined fast path."""
         call = ScheduledCall(when, fn, args)
         call.owner = self._cancel_log
+        call.shard = self._shard_hint
         if _get_ident() == self._driver_ident:
             if when < self._now:
                 call.when = self._now
@@ -645,6 +809,7 @@ class VirtualClock(Clock):
         else:
             call = ScheduledCall(when, fn, args)
             call.pooled = True
+        call.shard = self._shard_hint   # recycled events must re-stamp
         call.seq = self._seq
         self._seq += 1
         self._queue.push(call)
@@ -666,6 +831,7 @@ class VirtualClock(Clock):
         else:
             call = ScheduledCall(when, fn, args)
             call.pooled = True
+        call.shard = self._shard_hint   # recycled events must re-stamp
         call.seq = self._seq
         self._seq += 1
         self._queue.push(call)
@@ -674,6 +840,7 @@ class VirtualClock(Clock):
                  *, repeating: bool = False) -> ScheduledCall:
         call = ScheduledCall(when, fn, args, repeating=repeating)
         call.owner = self._cancel_log
+        call.shard = self._shard_hint
         if self.is_driver():
             if when < self._now:
                 call.when = self._now
@@ -686,6 +853,38 @@ class VirtualClock(Clock):
             # clamping when) before its next queue operation
             self._inbox.append(call)
         return call
+
+    def reschedule(self, call: ScheduledCall,
+                   when: float) -> ScheduledCall:
+        """Cancel-and-rearm with two fast paths: the no-op (instant
+        unchanged) and the calendar queue's same-bucket in-place move
+        (``CalendarQueue.try_reschedule``) — the reschedule-storm
+        pattern of the congestion engine mostly moves a completion
+        instant by less than a bucket, and the in-place move costs
+        one int compare + two stores instead of an allocation plus a
+        dead entry lingering until its bucket drains.  Both paths
+        consume exactly one ``seq`` per move, so pop order stays
+        bit-identical to the heap reference's cancel-and-rearm."""
+        if not call.cancelled and not call.fired:
+            if call.when == when:
+                return call           # already armed at that instant
+            if when >= self._now \
+                    and _get_ident() == self._driver_ident \
+                    and self._queue.try_reschedule(call, when,
+                                                   self._seq):
+                self._seq += 1
+                return call
+        call.cancel()
+        sh = self._shard_hint
+        if call.shard != sh:          # a moved event keeps its shard
+            self._shard_hint = call.shard
+            try:
+                return self._call_at(when, call.fn, call.args,
+                                     repeating=call.repeating)
+            finally:
+                self._shard_hint = sh
+        return self._call_at(when, call.fn, call.args,
+                             repeating=call.repeating)
 
     def _drain_inbox(self):
         inbox = self._inbox
@@ -722,7 +921,7 @@ class VirtualClock(Clock):
                 if c.repeating or c.fired or c.purged:
                     continue
                 c.purged = True
-                q.oneshots -= 1
+                q.settle_cancel(c)
         return (self._queue.oneshots > 0 or bool(self._inbox)
                 or bool(self._waiters))
 

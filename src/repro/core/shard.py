@@ -1,0 +1,403 @@
+"""Multi-core event sharding (DESIGN.md §19).
+
+The streaming replay saturates one core (~667k invocations/s after PR
+7): the scalar residue is ~2% of arrivals, so the next order of
+magnitude needs parallelism, not tighter Python.  This module shards
+the event core by node-group under a conservative-lookahead window
+protocol, mirroring rFaaS §3's decentralized-allocation argument —
+remove the single serialization point — while keeping the replay
+**bit-identical** to the single-core engine per seed.
+
+The decomposition: the coordinator owns live objects and the global
+event order; each cohort window (DESIGN.md §17) is split into
+per-shard *tasks* whose solve is a pure function of numpy arrays —
+offloadable to worker processes with no shared state:
+
+* ``ShardMap`` — the partition: tenants (and their node-group
+  endpoints) → shard ids, plus per-shard RNG stream derivation and
+  the lookahead floor (the minimum cross-shard latency: one zero-byte
+  fabric message).
+* ``tenant_counts`` / ``segment_table`` — the coordinator's O(n)
+  planning passes: per-tenant arrival counts and the closed-form
+  global worker-segment table (which round-robin residues each tenant
+  hits, how many arrivals land on each, and each segment's global
+  ordinal) — computed WITHOUT the global argsorts, which move into
+  the per-shard solves.
+* ``solve_cohort`` — the per-shard pure solve: the restriction of the
+  global segmented-recurrence pass (PR 7) to one shard's rows.  Using
+  the *global* segment ordinals for the anti-leak offset and a
+  prep-computed ``big`` bound makes every float op bitwise equal to
+  the corresponding op of the unsharded pass (max is selection, not
+  arithmetic; each segment's first offset element dominates all prior
+  segments by construction), so K=1,2,4,8 and arbitrary tenant→shard
+  maps all produce bit-identical results.
+* ``ShardSolverPool`` — the multiprocess tier: stateless solver
+  workers over pipes; the coordinator ships each shard's task at the
+  window barrier, waits for all (the conservative window protocol:
+  no shard advances past the barrier until every cross-shard edge —
+  here, the task/result exchange — is settled), and commits in shard
+  order.  Results are bit-identical to the in-process solve: same
+  host, same numpy, same arrays.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import zlib
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["ShardMap", "ShardTask", "ShardResult", "tenant_counts",
+           "segment_table", "cohort_big", "solve_cohort",
+           "ShardSolverPool"]
+
+
+class ShardMap:
+    """Partition of ``n_tenants`` tenants (and the cluster's node-group
+    endpoints) into ``n_shards`` shards.
+
+    The default assignment is contiguous node-group blocks (tenant
+    ``i`` → ``i * K // n_tenants``), but ANY assignment is legal —
+    bit-identity of the sharded replay does not depend on the map
+    (each tenant's worker segments live wholly inside its shard, and
+    the cross-shard folds are permutation-invariant), which the
+    property tests exercise with random maps."""
+
+    def __init__(self, n_shards: int, n_tenants: int, *,
+                 assign: Optional[Sequence[int]] = None,
+                 n_nodes: int = 0, seed: int = 0):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if n_tenants < 1:
+            raise ValueError(f"n_tenants must be >= 1, got {n_tenants}")
+        self.n_shards = n_shards
+        self.n_tenants = n_tenants
+        self.n_nodes = n_nodes
+        self.seed = seed
+        if assign is None:
+            self.tenant_shard = (np.arange(n_tenants, dtype=np.int64)
+                                 * n_shards) // n_tenants
+        else:
+            a = np.asarray(list(assign), dtype=np.int64)
+            if a.shape != (n_tenants,):
+                raise ValueError(
+                    f"assign must give one shard per tenant "
+                    f"({n_tenants}), got shape {a.shape}")
+            if a.size and (int(a.min()) < 0
+                           or int(a.max()) >= n_shards):
+                raise ValueError(
+                    f"assign entries must be in [0, {n_shards})")
+            self.tenant_shard = a
+
+    def shard_of_tenant(self, tenant_idx: int) -> int:
+        return int(self.tenant_shard[tenant_idx])
+
+    def shard_for_endpoint(self, endpoint: str) -> int:
+        """Shard owning an endpoint: ``nodeNNN`` maps by contiguous
+        node-group block, ``client:tenantI`` by the tenant map, and
+        anything else (storm sources, managers) by a stable hash —
+        deterministic across runs and processes."""
+        if endpoint.startswith("node") and endpoint[4:].isdigit() \
+                and self.n_nodes:
+            i = int(endpoint[4:])
+            if i < self.n_nodes:
+                return int(i * self.n_shards // self.n_nodes)
+        if endpoint.startswith("client:tenant") \
+                and endpoint[13:].isdigit():
+            i = int(endpoint[13:])
+            if i < self.n_tenants:
+                return int(self.tenant_shard[i])
+        return zlib.crc32(endpoint.encode()) % self.n_shards
+
+    def rng_for(self, shard: int) -> np.random.RandomState:
+        """Per-shard RNG stream, derived from ``(seed, shard)`` so a
+        shard's stochastic decisions never consume another shard's
+        draws.  (The cohort solve itself is closed-form — channel
+        fault RNGs are already per-channel seeded — so these streams
+        exist for shard-local decisions layered on top.)"""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        return np.random.RandomState(
+            (self.seed * 2_654_435_761 + 40_503 * shard + 1)
+            & 0xFFFFFFFF)
+
+    def lookahead_floor(self, fabric) -> float:
+        """The conservative-lookahead window floor: the minimum
+        cross-shard latency.  Every cross-shard edge (a transfer, a
+        partition taking effect, an availability multicast, a lease
+        grant) rides at least one fabric message, so a shard may
+        safely process events up to every other shard's cursor plus
+        one zero-byte message time."""
+        return float(fabric.params.message_time(0))
+
+
+# --------------------------------------------------------------- planning
+def tenant_counts(picks: np.ndarray):
+    """Per-tenant arrival counts for one window, in ascending tenant-id
+    order — the same (tenant, count) sequence the unsharded argsort
+    pass derived, in O(n) instead of O(n log n)."""
+    cnt = np.bincount(picks)
+    uniq = np.flatnonzero(cnt)
+    return uniq, cnt[uniq]
+
+
+def segment_table(t_counts: np.ndarray, c0s: np.ndarray,
+                  n_ps: np.ndarray, base: np.ndarray):
+    """Closed-form global worker-segment table.
+
+    Tenant ``s`` with ``m`` arrivals round-robins them over its
+    ``P = n_ps[s]`` dispatch pairs starting at cursor ``c0s[s]``:
+    arrival ``j`` lands on residue ``(c0 + j) % P``, so residue ``r``
+    receives ``m // P`` arrivals plus one more iff
+    ``(r - c0) % P < m % P``.  Segments are globally ordered by
+    ``gid = base[s] + r`` (ascending tenant id, then residue) — the
+    exact order the unsharded worker argsort produces — so the table
+    yields every hit segment's global id and size without sorting the
+    window.  Per-uid arrays indexed by the returned ordinals are what
+    the per-shard solves consume."""
+    uid_chunks: List[np.ndarray] = []
+    cnt_chunks: List[np.ndarray] = []
+    for s in range(len(t_counts)):
+        m = int(t_counts[s])
+        P = int(n_ps[s])
+        c0 = int(c0s[s]) % P
+        if m >= P:
+            r = np.arange(P, dtype=np.int64)
+        else:
+            r = np.sort((c0 + np.arange(m, dtype=np.int64)) % P)
+        c = np.full(r.size, m // P, dtype=np.int64)
+        rem = m % P
+        if rem:
+            c += ((r - c0) % P < rem)
+        uid_chunks.append(int(base[s]) + r)
+        cnt_chunks.append(c)
+    if not uid_chunks:
+        z = np.empty(0, np.int64)
+        return z, z.copy()
+    return np.concatenate(uid_chunks), np.concatenate(cnt_chunks)
+
+
+def cohort_big(window: np.ndarray, seeds: np.ndarray, svc_s: float,
+               n_good: int) -> float:
+    """The anti-leak segment offset multiplier, computed from window
+    extremes + seeds instead of the solved ``g`` range (which would
+    need the global sort the shards are avoiding).  Bound argument:
+    every ``ap`` value is ≤ ``hi`` (arrivals are ascending; seeds only
+    raise segment heads up to the seed max) and every
+    ``g = ap - svc·rank`` is ≥ ``lo - svc·(n_good - 1)``, so the g
+    range is < ``(hi - lo) + svc·n_good + 1`` — offsetting segment
+    ``k`` by ``k·big`` keeps the running max from ever crossing a
+    segment boundary, exactly like the PR-7 data-dependent bound
+    (ulp-level value shift; same guarantee)."""
+    lo = float(window[0])
+    hi = float(window[-1])
+    if seeds.size:
+        mx = float(np.max(seeds))       # -inf entries are max-safe
+        if mx > hi:
+            hi = mx
+    return (hi - lo) + svc_s * n_good + 1.0
+
+
+class ShardTask:
+    """One shard's slice of a cohort window plus the (small) global
+    tables its solve needs.  Pure data — pickles over a pipe.
+
+    ``picks``/``window`` are the shard's rows in global arrival order;
+    ``uniq_t``/``c0s``/``n_ps``/``base`` the per-present-tenant tables
+    and ``uids``/``seeds``/``ov_h``/``ov_w``/``hp`` the per-segment
+    tables, both GLOBAL (ordered as the unsharded pass orders them) so
+    the shard can translate its local groups into global ordinals with
+    two searchsorted calls."""
+
+    __slots__ = ("shard", "picks", "window", "uniq_t", "c0s", "n_ps",
+                 "base", "uids", "seeds", "ov_h", "ov_w", "hp",
+                 "svc_s", "big", "rtt_base")
+
+    def __init__(self, shard, picks, window, uniq_t, c0s, n_ps, base,
+                 uids, seeds, ov_h, ov_w, hp, svc_s, big, rtt_base):
+        self.shard = shard
+        self.picks = picks
+        self.window = window
+        self.uniq_t = uniq_t
+        self.c0s = c0s
+        self.n_ps = n_ps
+        self.base = base
+        self.uids = uids
+        self.seeds = seeds
+        self.ov_h = ov_h
+        self.ov_w = ov_w
+        self.hp = hp
+        self.svc_s = svc_s
+        self.big = big
+        self.rtt_base = rtt_base
+
+    def __getstate__(self):
+        return tuple(getattr(self, s) for s in self.__slots__)
+
+    def __setstate__(self, state):
+        for s, v in zip(self.__slots__, state):
+            setattr(self, s, v)
+
+
+class ShardResult:
+    """One shard's solved window: modeled round-trips in the shard's
+    worker order, each touched segment's last finish instant (for
+    ``absorb_cohort``), the segments' global ordinals, and the tenant
+    pick per row in worker order (per-tenant sketch extraction)."""
+
+    __slots__ = ("shard", "rtt", "last_fin", "uid_ords", "tp")
+
+    def __init__(self, shard, rtt, last_fin, uid_ords, tp):
+        self.shard = shard
+        self.rtt = rtt
+        self.last_fin = last_fin
+        self.uid_ords = uid_ords
+        self.tp = tp
+
+    def __getstate__(self):
+        return tuple(getattr(self, s) for s in self.__slots__)
+
+    def __setstate__(self, state):
+        for s, v in zip(self.__slots__, state):
+            setattr(self, s, v)
+
+
+def solve_cohort(task: ShardTask) -> ShardResult:
+    """Solve one shard's rows of a cohort window — the restriction of
+    the unsharded segmented pass (DESIGN.md §17) to this shard.
+
+    Bit-identity: a stable argsort restricted to a subset preserves
+    relative order, so the shard's tenant ranks and worker-segment
+    row orders equal the global ones; using GLOBAL segment ordinals
+    for the offset means ``g + off`` / ``run - off`` evaluate the
+    exact same float operands as the global pass for these rows, and
+    the running max never mixes segments (``big`` dominates the g
+    range), so ``maximum.accumulate`` restricted to one segment is
+    the segment's own accumulate bitwise."""
+    picks = task.picks
+    window = task.window
+    n = picks.size
+    svc_s = task.svc_s
+    # ---- tenant grouping (restriction of the global stable sort)
+    order_t = np.argsort(picks, kind="stable")
+    sorted_t = picks[order_t]
+    t_starts = np.flatnonzero(np.diff(sorted_t, prepend=sorted_t[0] - 1))
+    t_counts = np.diff(np.append(t_starts, n))
+    t_seg = np.repeat(np.arange(t_starts.size), t_counts)
+    rank_sorted = np.arange(n) - t_starts[t_seg]
+    g_rows = np.searchsorted(task.uniq_t, sorted_t[t_starts])
+    slot = np.empty(n, np.int64)       # arrival -> global tenant row
+    slot[order_t] = g_rows[t_seg]
+    x = np.empty(n, np.int64)          # arrival -> tenant rank
+    x[order_t] = rank_sorted
+    gid = task.base[slot] + (task.c0s[slot] + x) % task.n_ps[slot]
+    # ---- group by worker, FIFO within each segment
+    order_w = np.argsort(gid, kind="stable")
+    gs = gid[order_w]
+    ap = window[order_w].copy()
+    w_starts = np.flatnonzero(np.diff(gs, prepend=gs[0] - 1))
+    w_counts = np.diff(np.append(w_starts, n))
+    w_seg = np.repeat(np.arange(w_starts.size), w_counts)
+    rank_w = np.arange(n) - w_starts[w_seg]
+    ords = np.searchsorted(task.uids, gs[w_starts])
+    seg = ords[w_seg]                  # per-row GLOBAL segment ordinal
+    seeds = task.seeds
+    ap[w_starts] = np.maximum(ap[w_starts], seeds[ords])
+    g = ap - svc_s * rank_w
+    off = seg * task.big
+    run = np.maximum.accumulate(g + off) - off
+    fin = run + svc_s * (rank_w + 1)
+    exec_start = fin - svc_s
+    prev_fin = np.empty(n)
+    prev_fin[w_starts] = seeds[ords]
+    nstart = np.ones(n, bool)
+    nstart[w_starts] = False
+    prev_fin[nstart] = fin[:-1][nstart[1:]]
+    hot = (exec_start - prev_fin) <= task.hp[seg]
+    rtt = (np.where(hot, task.ov_h[seg], task.ov_w[seg])
+           + task.rtt_base)
+    ends = w_starts + w_counts - 1
+    return ShardResult(task.shard, rtt, fin[ends], ords,
+                       picks[order_w])
+
+
+# ---------------------------------------------------------- worker pool
+def _solver_main(conn):
+    """Stateless solver worker: receive a ShardTask, send back its
+    ShardResult; a None sentinel ends the loop.  No simulator state
+    crosses the pipe — the solve is a pure function of the task."""
+    try:
+        while True:
+            task = conn.recv()
+            if task is None:
+                break
+            conn.send(solve_cohort(task))
+    except (EOFError, KeyboardInterrupt):
+        pass
+    finally:
+        conn.close()
+
+
+class ShardSolverPool:
+    """Window-barrier multiprocess executor for per-shard solves.
+
+    ``solve(tasks)`` ships each task to a worker process, then blocks
+    until EVERY result is back before returning them in task order —
+    the conservative window protocol's barrier: no shard's results
+    commit until all cross-shard exchanges for the window are settled.
+    Because the solve is pure and runs the same numpy on the same
+    arrays, the pooled results are bit-identical to in-process ones."""
+
+    def __init__(self, n_workers: int):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        ctx = multiprocessing.get_context("fork") \
+            if "fork" in multiprocessing.get_all_start_methods() \
+            else multiprocessing.get_context()
+        self.n_workers = n_workers
+        self._conns = []
+        self._procs = []
+        for _ in range(n_workers):
+            parent, child = ctx.Pipe()
+            p = ctx.Process(target=_solver_main, args=(child,),
+                            daemon=True)
+            p.start()
+            child.close()
+            self._conns.append(parent)
+            self._procs.append(p)
+        self.windows = 0
+        self.tasks_sent = 0
+
+    def solve(self, tasks: Sequence[ShardTask]) -> List[ShardResult]:
+        self.windows += 1
+        self.tasks_sent += len(tasks)
+        conns = self._conns
+        # round-robin dispatch, then a full barrier: recv in send
+        # order so results come back in task (= ascending shard) order
+        assigned = []
+        for i, task in enumerate(tasks):
+            c = conns[i % len(conns)]
+            c.send(task)
+            assigned.append(c)
+        return [c.recv() for c in assigned]
+
+    def close(self):
+        for c in self._conns:
+            try:
+                c.send(None)
+                c.close()
+            except (BrokenPipeError, OSError):
+                pass
+        for p in self._procs:
+            p.join(timeout=5.0)
+            if p.is_alive():            # pragma: no cover - defensive
+                p.terminate()
+        self._conns = []
+        self._procs = []
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -134,11 +134,17 @@ class SimulatedCluster:
                  fabric: Union[str, FabricParams, None] = None,
                  drop_rate: float = 0.0,
                  topology: Optional[Topology] = None,
-                 event_queue: str = "calendar"):
+                 event_queue: str = "calendar",
+                 shards: int = 0):
         # event_queue selects the clock's event store ("calendar" —
         # the §15 bucket wheel — or "heap", the reference binary
-        # heap), so any full scenario can A/B the two implementations
-        self.clock = VirtualClock(start_time, queue=event_queue)
+        # heap), so any full scenario can A/B the two implementations.
+        # shards > 0 partitions the store into per-node-group cursors
+        # under the conservative-lookahead protocol (DESIGN.md §19) —
+        # pop order, and therefore every stat, stays bit-identical.
+        self.clock = VirtualClock(start_time, queue=event_queue,
+                                  shards=shards)
+        self.shards = shards
         self.ledger = Ledger()
         self.seed = seed
         # one shared fabric: "rdma" by default, or any FABRICS preset /
@@ -156,6 +162,12 @@ class SimulatedCluster:
                              clock=self.clock, seed=seed,
                              topology=topology)
         self.net = self.fabric.net
+        if shards:
+            # conservative-lookahead floor = the minimum cross-shard
+            # latency: a zero-byte message on this fabric (§19).  Set
+            # here because the fabric doesn't exist at clock build time.
+            self.clock._queue.lookahead = \
+                self.fabric.params.message_time(0)
         self.rm = ResourceManager(n_replicas=n_replicas,
                                   clock=self.clock, fabric=self.fabric,
                                   drop_rate=drop_rate, seed=seed)

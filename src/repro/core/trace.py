@@ -60,6 +60,9 @@ from repro.core.invocation import (Invocation, InvocationHeader,
 from repro.core.invoker import (AllocationFailed, ExecutorCrash, Invoker,
                                 RetryingFuture)
 from repro.core.perf_model import Tier
+from repro.core.shard import (ShardMap, ShardSolverPool, ShardTask,
+                              cohort_big, segment_table, solve_cohort,
+                              tenant_counts)
 from repro.core.simulation import SimulatedCluster
 from repro.core.stats import RttAccumulator, TenantRtts
 from repro.core.transport import ChannelPartitioned, Topology
@@ -650,7 +653,10 @@ class TraceReplayer:
                get_timeout_s: float = 300.0,
                rtt_stats: str = "sketch",
                per_tenant_stats: bool = False,
-               tenant_classes: Optional[Sequence[str]] = None) \
+               tenant_classes: Optional[Sequence[str]] = None,
+               shards: int = 0,
+               shard_map: Optional[ShardMap] = None,
+               shard_workers: int = 0) \
             -> ElasticityStats:
         """Run the full scenario and return deterministic stats.
 
@@ -810,7 +816,31 @@ class TraceReplayer:
         out_nb = payload_nb               # identity fn: result == payload
         t_in_s = fabric.params.message_time(hdr_in)
         t_out_s = fabric.params.message_time(out_nb)
+        rtt_base = t_in_s + svc_s + t_out_s
         events_ref = events
+        # ---- event-shard map (DESIGN.md §19).  The cohort path ALWAYS
+        # runs through the split->solve->commit decomposition (K=1 is
+        # one task covering the window), so sharded and unsharded
+        # replays share one code path and stay bit-identical.
+        smap = shard_map
+        if smap is None:
+            smap = ShardMap(max(int(shards), 1), n_clients,
+                            n_nodes=len(sim.bs.nodes), seed=sim.seed)
+        elif smap.n_tenants != n_clients:
+            raise ValueError(f"shard_map covers {smap.n_tenants} "
+                             f"tenants, replay has {n_clients}")
+        n_shards = smap.n_shards
+        shard_of_t = smap.tenant_shard
+        # stamp scalar-path events + transfer completions with owning
+        # shards whenever the replay is sharded (clock cursors and/or
+        # cohort split) — routing only, never ordering
+        hint_on = n_shards > 1 or bool(getattr(sim, "shards", 0))
+        if hint_on:
+            fabric.set_shard_map(smap)
+        pool = (ShardSolverPool(shard_workers) if shard_workers
+                else None)
+        cohort_windows = [0]              # shard accounting (exposed on
+        shard_tasks = [0]                 # the replayer after the run)
         worker_memo: Dict = {}            # (sandbox, hot_period) ->
         #                                   (ov_hot, ov_warm, hot_period)
         no_cohort_until = [-1.0]          # failed window: retry only
@@ -859,21 +889,21 @@ class TraceReplayer:
                 return False
             picks = chunk["picks"][i0:j1]
             window = arr[i0:j1]
-            # ---- flatten: tenant-rank -> round-robin pair -> worker id
-            # (windows split over 64 tenants x 4 pairs leave ~1 arrival
-            # per pair — per-pair numpy would drown in setup, so the
-            # WHOLE window is solved in one set of segmented passes;
-            # the same argsort doubles as the capability scan's
-            # unique-tenant pass)
-            order_t = np.argsort(picks, kind="stable")
-            sorted_t = picks[order_t]
-            t_starts = np.flatnonzero(np.diff(
-                sorted_t, prepend=sorted_t[0] - 1))
+            # ---- PREP (coordinator; DESIGN.md §19): capability scan +
+            # the global per-tenant / per-segment tables.  Live-object
+            # access (take_rr, cohort_seed, the tier memo) happens HERE
+            # in ascending tenant / segment order — exactly the order
+            # the unsharded pass touched them — leaving the solve a
+            # pure function of arrays that any shard (or process) can
+            # run.  tenant_counts/segment_table derive the grouping
+            # closed-form, without the global argsorts (those move into
+            # the per-shard solves).
+            uniq, t_cnt = tenant_counts(picks)
             pair_map = {}
             degraded = []                 # tenants re-leasing / faulted:
-            for ti in sorted_t[t_starts].tolist():  # their arrivals
-                pairs = tenant_capable(tenants[ti])  # run scalar, the
-                if pairs is None:                    # rest vectorize
+            for ti in uniq.tolist():      # their arrivals run scalar,
+                pairs = tenant_capable(tenants[ti])   # the rest
+                if pairs is None:                     # vectorize
                     degraded.append(ti)
                 else:
                     pair_map[ti] = pairs
@@ -891,47 +921,28 @@ class TraceReplayer:
                     pending_scalar.append((t_a, ti))
                 picks = picks[good]
                 window = window[good]
-                order_t = np.argsort(picks, kind="stable")
-                sorted_t = picks[order_t]
-                t_starts = np.flatnonzero(np.diff(
-                    sorted_t, prepend=sorted_t[0] - 1))
+                uniq, t_cnt = tenant_counts(picks)
             m_all = j1 - i0               # whole window consumed
             n_good = picks.size
-            t_counts = np.diff(np.append(t_starts, n_good))
-            t_seg = np.repeat(np.arange(t_starts.size), t_counts)
-            rank_sorted = np.arange(n_good) - t_starts[t_seg]
-            slot = np.empty(n_good, np.int64)  # arrival -> tenant slot
-            slot[order_t] = t_seg
-            x = np.empty(n_good, np.int64)     # arrival -> tenant rank
-            x[order_t] = rank_sorted
-            uniq_t = sorted_t[t_starts].tolist()
+            n_t = uniq.size
             flat_pairs = []
-            base = np.empty(len(uniq_t), np.int64)
-            c0s = np.empty(len(uniq_t), np.int64)
-            n_ps = np.empty(len(uniq_t), np.int64)
-            for s_i, ti in enumerate(uniq_t):
+            base = np.empty(n_t, np.int64)
+            c0s = np.empty(n_t, np.int64)
+            n_ps = np.empty(n_t, np.int64)
+            for s_i, ti in enumerate(uniq.tolist()):
                 pairs = pair_map[ti]
                 base[s_i] = len(flat_pairs)
                 n_ps[s_i] = len(pairs)
-                c0s[s_i] = tenants[ti].take_rr(int(t_counts[s_i]))
+                c0s[s_i] = tenants[ti].take_rr(int(t_cnt[s_i]))
                 flat_pairs.extend(pairs)
-            gid = base[slot] + (c0s[slot] + x) % n_ps[slot]
-            # ---- group by worker, FIFO-ordered within each group
-            order_w = np.argsort(gid, kind="stable")
-            gs = gid[order_w]
-            ap = window[order_w].copy()
-            w_starts = np.flatnonzero(np.diff(gs, prepend=gs[0] - 1))
-            w_counts = np.diff(np.append(w_starts, n_good))
-            w_seg = np.repeat(np.arange(w_starts.size), w_counts)
-            rank_w = np.arange(n_good) - w_starts[w_seg]
-            uids = gs[w_starts].tolist()
-            n_u = len(uids)
+            uids, u_counts = segment_table(t_cnt, c0s, n_ps, base)
+            n_u = uids.size
             seeds = np.empty(n_u)
             ov_h = np.empty(n_u)
             ov_w = np.empty(n_u)
             hp = np.empty(n_u)
             wmemo = worker_memo
-            for u_i, u in enumerate(uids):
+            for u_i, u in enumerate(uids.tolist()):
                 w = flat_pairs[u][0]
                 s = w.cohort_seed(svc_s)
                 seeds[u_i] = -np.inf if s is None else s
@@ -943,45 +954,62 @@ class TraceReplayer:
                         fabric.tier_overhead(Tier.WARM, w.sandbox),
                         w.hot_period)
                 ov_h[u_i], ov_w[u_i], hp[u_i] = mv
-            # a busy worker (in-flight + FIFO backlog, or a previous
-            # cohort draining) queues the window's first item behind it
-            ap[w_starts] = np.maximum(ap[w_starts], seeds)
-            # segmented fin[i] = max(ap[i], fin[i-1]) + svc: offset
-            # each worker's segment so one global max.accumulate
-            # cannot leak across segments
-            g = ap - svc_s * rank_w
-            big = float(g.max() - g.min()) + svc_s * n_good + 1.0
-            off = w_seg * big
-            run = np.maximum.accumulate(g + off) - off
-            fin = run + svc_s * (rank_w + 1)
-            exec_start = fin - svc_s
-            prev_fin = np.empty(n_good)
-            prev_fin[w_starts] = seeds
-            nstart = np.ones(n_good, bool)
-            nstart[w_starts] = False
-            prev_fin[nstart] = fin[:-1][nstart[1:]]
-            hot = (exec_start - prev_fin) <= hp[w_seg]
-            rtt = (np.where(hot, ov_h[w_seg], ov_w[w_seg])
-                   + (t_in_s + svc_s + t_out_s))
-            acc.add_vector(rtt)
+            big = cohort_big(window, seeds, svc_s, n_good)
+            # ---- SPLIT -> per-shard pure solves: every tenant's
+            # worker segments live wholly inside its shard, so each
+            # solve is an independent restriction of the global
+            # segmented pass — bit-identical rows whatever K is
+            if n_shards > 1:
+                row_sh = shard_of_t[picks]
+                tasks = []
+                for sh in range(n_shards):
+                    rows = np.flatnonzero(row_sh == sh)
+                    if rows.size:
+                        tasks.append(ShardTask(
+                            sh, picks[rows], window[rows], uniq, c0s,
+                            n_ps, base, uids, seeds, ov_h, ov_w, hp,
+                            svc_s, big, rtt_base))
+            else:
+                tasks = [ShardTask(0, picks, window, uniq, c0s, n_ps,
+                                   base, uids, seeds, ov_h, ov_w, hp,
+                                   svc_s, big, rtt_base)]
+            if pool is not None:          # window barrier: all results
+                results = pool.solve(tasks)   # back before any commit
+            else:
+                results = [solve_cohort(t) for t in tasks]
+            cohort_windows[0] += 1
+            shard_tasks[0] += len(tasks)
+            # ---- COMMIT (coordinator, ascending shard order): every
+            # fold is either permutation-invariant (the rtt vector) or
+            # applied in a global K-invariant order (per-tenant
+            # sketches, billing), so stats never depend on the map
+            if len(results) == 1:
+                rtt_cat = results[0].rtt
+            else:
+                rtt_cat = np.concatenate([r.rtt for r in results])
+            acc.add_vector(rtt_cat)
             if tacc is not None:
-                # rtt is in worker order; map back to tenant picks so
-                # each tenant's sketch absorbs its own samples
-                tp = picks[order_w]
-                for ti in uniq_t:
+                # each tenant's rows sit in ONE shard's result, in the
+                # restriction of the global worker order; commit in
+                # ascending tenant order so sketch insertion order is
+                # identical for every K
+                by_shard = {r.shard: r for r in results}
+                for ti in uniq.tolist():
+                    r = by_shard[int(shard_of_t[ti])]
                     tacc.add_vector(tenants[ti].client_id,
-                                    rtt[tp == ti])
-            # ---- commit: wire/worker counters, billing, stream state
+                                    r.rtt[r.tp == ti])
+            # ---- wire/worker counters, billing, stream state
             per_msg = hdr_in + out_nb
-            ends = w_starts + w_counts - 1
-            for u_i, u in enumerate(uids):
-                w, _, ch = flat_pairs[u]
-                n = int(w_counts[u_i])
-                ch.record_messages(2 * n, n * per_msg)
-                w.absorb_cohort(n, svc_s * n, float(fin[ends[u_i]]))
+            for res in results:
+                lf = res.last_fin
+                for j, o in enumerate(res.uid_ords.tolist()):
+                    w, _, ch = flat_pairs[int(uids[o])]
+                    n = int(u_counts[o])
+                    ch.record_messages(2 * n, n * per_msg)
+                    w.absorb_cohort(n, svc_s * n, float(lf[j]))
             ledger = sim.ledger
-            for s_i, ti in enumerate(uniq_t):
-                m_t = int(t_counts[s_i])
+            for s_i, ti in enumerate(uniq.tolist()):
+                m_t = int(t_cnt[s_i])
                 tenants[ti].stats.invocations += m_t
                 ledger.add_compute_bulk(tenants[ti].client_id,
                                         svc_s * m_t, m_t)
@@ -995,6 +1023,9 @@ class TraceReplayer:
             return True
 
         def dispatch_scalar(ti: int):
+            if hint_on:       # route this arrival's events (dispatch,
+                # completion, any re-lease) to the tenant's shard
+                clock._shard_hint = int(shard_of_t[ti])
             tenant = tenants[ti]
             inv = make_inv(fn_idx, "work", payload, nbytes=payload_nb)
             inv.on_complete = hooks[ti]
@@ -1012,6 +1043,8 @@ class TraceReplayer:
                     tenant.submit_prepared(inv)
                 except (AllocationFailed, ExecutorCrash):
                     dispatch_failed[0] += 1
+            if hint_on:       # global chains stay on shard 0
+                clock._shard_hint = 0
 
         def arrival():
             if pending_scalar:
@@ -1052,8 +1085,22 @@ class TraceReplayer:
             sim.rm.stop()                # retire sweeps deterministically
             sim.run_until_idle()
         finally:
+            if pool is not None:
+                pool.close()
             if gc_was_enabled:
                 gc.enable()
+
+        # shard accounting (not part of ElasticityStats — those stay
+        # bit-identical across K by design): cohort windows, per-shard
+        # tasks solved, and the sharded queue's parallelism certificate
+        # (the fraction of pops inside the conservative window)
+        self.cohort_windows = cohort_windows[0]
+        self.shard_tasks_solved = shard_tasks[0]
+        self.shard_pool_windows = pool.windows if pool is not None else 0
+        q = clock._queue
+        self.shard_queue_stats = (q.stats()
+                                  if hasattr(q, "windowed_pops")
+                                  else None)
 
         # -------------------------------------------------- collection
         completed = done_box[0]
@@ -1155,11 +1202,15 @@ def replay_trace(trace: ChurnTrace, *, seed: int = 0,
                  fabric: Optional[str] = None,
                  topology: Optional[Topology] = None,
                  heartbeat_interval_s: float = 0.2,
+                 shards: int = 0,
                  **replay_kw) -> ElasticityStats:
     """One-call convenience: build a matching ``SimulatedCluster`` and
     replay ``trace`` on it (benchmarks and CI smoke use this).  A trace
     carrying bandwidth_storm events arms the default single-switch
-    topology automatically unless one is given."""
+    topology automatically unless one is given.  ``shards > 0`` runs
+    the sharded event core (DESIGN.md §19): clock cursors, cohort
+    solves and transfer completions partition by node-group, with
+    stats bit-identical to the unsharded engine."""
     if topology is None and any(e.kind in ("bandwidth_storm",
                                            "tenant_storm")
                                 for e in trace.events):
@@ -1167,11 +1218,12 @@ def replay_trace(trace: ChurnTrace, *, seed: int = 0,
     sim = SimulatedCluster(n_nodes=trace.n_nodes,
                            workers_per_node=workers_per_node,
                            n_replicas=n_replicas, seed=seed,
-                           topology=topology,
+                           topology=topology, shards=shards,
                            **({"fabric": fabric} if fabric else {}))
     return TraceReplayer(
         sim, trace,
-        heartbeat_interval_s=heartbeat_interval_s).replay(**replay_kw)
+        heartbeat_interval_s=heartbeat_interval_s).replay(
+            shards=shards, **replay_kw)
 
 
 # --------------------------------------------------------------- CLI

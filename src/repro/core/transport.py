@@ -193,12 +193,19 @@ class Link:
     (DESIGN.md §15)."""
 
     __slots__ = ("name", "bandwidth", "active", "bytes_total",
-                 "peak_active", "members", "epoch", "wsum", "nonunit")
+                 "peak_active", "members", "epoch", "wsum", "nonunit",
+                 "shard")
 
     def __init__(self, name: str, bandwidth: float):
         self.name = name
         self.bandwidth = bandwidth          # bytes/s, math.inf = unconstrained
         self.active = 0
+        # owning event shard (DESIGN.md §19): a link's membership is
+        # only ever mutated from events stamped with this shard, so the
+        # sharded driver never races two shards on one members dict.
+        # Cross-shard transfers pin to the DESTINATION rx-NIC's shard;
+        # shared pod/core links stay on shard 0.
+        self.shard = 0
         self.bytes_total = 0
         self.peak_active = 0
         # dict-as-ordered-set: deterministic iteration (insertion
@@ -269,6 +276,9 @@ class Topology:
         # minted, and the charge path asks for the same pairs millions
         # of times in a storm replay
         self._path_cache: Dict[Tuple[str, str], Tuple[Link, ...]] = {}
+        # endpoint -> shard map (DESIGN.md §19); None until a sharded
+        # replay calls assign_shards
+        self._shard_of: Optional[Callable[[str], int]] = None
 
     @classmethod
     def single_switch(cls, nic_bandwidth: Optional[float] = None,
@@ -335,7 +345,24 @@ class Topology:
         link = self._links.get(key)
         if link is None:
             link = self._links[key] = Link(key, self.nic_bandwidth)
+            if self._shard_of is not None:
+                link.shard = self._shard_of(endpoint)
         return link
+
+    def assign_shards(self, shard_of: Callable[[str], int]) -> None:
+        """Pin every endpoint NIC link to the event shard owning that
+        endpoint (DESIGN.md §19).  Already-minted NIC links are stamped
+        now; links minted later pick the map up lazily in ``_nic``.
+        Pod uplinks and the switch core are inherently cross-shard and
+        stay pinned to shard 0 (their membership is only touched from
+        transfer events, which pin to the destination's shard — the
+        conservative lookahead window covers the skew)."""
+        self._shard_of = shard_of
+        for key, link in self._links.items():
+            endpoint = key.rsplit("/", 1)[0]
+            if not (endpoint.startswith("pod")
+                    and endpoint[3:].isdigit()):
+                link.shard = shard_of(endpoint)
 
     def pod_of(self, endpoint: str) -> int:
         """Deterministic endpoint → pod mapping (fat tree only)."""
@@ -479,12 +506,17 @@ class CongestionEngine:
         # whether solo transfers already deviate from the closed form
         # (custom NIC caps below the fabric's calibrated bandwidth)
         self.always_on = False
+        # sharded event core (DESIGN.md §19): when True, each transfer's
+        # completion event is stamped with its destination rx-NIC's
+        # shard so the sharded queue routes it to the owning cursor
+        self._sharded = False
         # telemetry (folded into Fabric.stats when armed)
         self.transfers_started = 0
         self.transfers_done = 0
         self.congested_sends = 0     # charges/transfers that shared a link
         self.congestion_delay_s = 0.0   # extra seconds vs solo closed form
         self.peak_link_active = 0
+        self.cross_shard_transfers = 0   # tx shard != rx shard (§19)
 
     @property
     def active(self) -> bool:
@@ -514,7 +546,16 @@ class CongestionEngine:
         else:
             tr.t_finish = now + tr.remaining / rate
         if tr.event is None:
-            tr.event = self.clock.call_at(tr.t_finish, self._fire, tr)
+            if self._sharded:
+                # pin the completion to the destination's shard; the
+                # reschedule path below keeps a moved event's shard
+                clk = self.clock
+                prev = clk._shard_hint
+                clk._shard_hint = tr.path[-1].shard
+                tr.event = clk.call_at(tr.t_finish, self._fire, tr)
+                clk._shard_hint = prev
+            else:
+                tr.event = self.clock.call_at(tr.t_finish, self._fire, tr)
         else:
             tr.event = self.clock.reschedule(tr.event, tr.t_finish)
 
@@ -671,6 +712,8 @@ class CongestionEngine:
         self.peak_link_active = peak
         self._active[tr] = None
         self.transfers_started += 1
+        if self._sharded and path[0].shard != path[-1].shard:
+            self.cross_shard_transfers += 1
         rate = path[0].fair_share(0, weight)
         esig = 0
         for link in path:
@@ -733,12 +776,15 @@ class CongestionEngine:
 
     def stats(self) -> dict:
         with self._lock:
-            return {"topology": self.topology.name,
-                    "transfers": self.transfers_started,
-                    "transfers_done": self.transfers_done,
-                    "congested": self.congested_sends,
-                    "congestion_delay_s": self.congestion_delay_s,
-                    "peak_link_active": self.peak_link_active}
+            out = {"topology": self.topology.name,
+                   "transfers": self.transfers_started,
+                   "transfers_done": self.transfers_done,
+                   "congested": self.congested_sends,
+                   "congestion_delay_s": self.congestion_delay_s,
+                   "peak_link_active": self.peak_link_active}
+            if self._sharded:     # key only appears on sharded replays
+                out["cross_shard_transfers"] = self.cross_shard_transfers
+            return out
 
 
 class Channel:
@@ -1029,6 +1075,9 @@ class Fabric:
         # checks emptiness before doing any lookup — unregistered
         # fabrics stay bit-identical to the unweighted engine.
         self._qos: Dict[str, Tuple[float, Optional[float]]] = {}
+        # event-shard map (DESIGN.md §19): set by a sharded replay so
+        # the armed topology pins links/completions to owning shards
+        self._shard_map = None
         if topology is not None:
             self.arm_topology(topology)
         self._lock = threading.Lock()
@@ -1120,7 +1169,26 @@ class Fabric:
         self.congestion.always_on = (
             min(nic, core, pod) != self.params.net.bandwidth)
         self._cong_active = self.congestion.always_on
+        if self._shard_map is not None:
+            self._apply_shard_map()
         return self.congestion
+
+    def set_shard_map(self, shard_map) -> None:
+        """Attach the event-shard map of a sharded replay (DESIGN.md
+        §19): endpoint NIC links and transfer-completion events pin to
+        the shard owning their endpoint.  Takes effect immediately on
+        an armed topology and is re-applied if one is armed later.
+        Sharding never changes rates or orderings — only which queue
+        cursor pops each completion — so stats stay bit-identical."""
+        self._shard_map = shard_map
+        if self.congestion is not None:
+            self._apply_shard_map()
+
+    def _apply_shard_map(self) -> None:
+        engine = self.congestion
+        engine.topology.assign_shards(self._shard_map.shard_for_endpoint)
+        # RealClock has no shard hint; pinning is a no-op there
+        engine._sharded = hasattr(self.clock, "_shard_hint")
 
     def set_tenant_qos(self, endpoint: str, *, weight: float = 1.0,
                        cap: Optional[float] = None):

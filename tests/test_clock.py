@@ -313,3 +313,93 @@ def test_cancelled_oneshot_behind_repeater_is_not_work():
         clk.run_until_idle()
         assert clk.now() == 0.0, impl
         assert fires == [], impl
+
+
+# ---------------------------------------------- sharded event core (§19)
+def test_sharded_queue_fire_order_matches_single_queue():
+    """K per-shard queues under one global (when, seq) order: an
+    identical schedule/cancel/reschedule script fires in the exact
+    same order on an unsharded clock and on K=3 shards with events
+    scattered across the shards — bit-identity by construction."""
+    def script(clk, k):
+        log = []
+        handles = []
+        for i in range(60):
+            clk._shard_hint = i % k
+            h = clk.call_later((60 - i) * 1e-6 + (i % 5) * 1e-6,
+                               log.append, i)
+            handles.append(h)
+        for i in range(0, 60, 7):            # cancels across shards
+            handles[i].cancel()
+        for i in range(1, 60, 11):           # moves keep their shard
+            clk._shard_hint = 0
+            handles[i] = clk.reschedule(handles[i], (i + 1) * 1e-6)
+        clk._shard_hint = 0
+        clk.run_until_idle()
+        return log
+
+    base = script(VirtualClock(), 1)
+    for k in (2, 3):
+        assert script(VirtualClock(shards=k), k) == base
+
+
+def test_sharded_queue_stats_count_windowed_pops():
+    """The windowed-pop counter is the parallelism certificate: a pop
+    counts when another shard's head sits within its lookahead window.
+    Dense interleaved events under a generous lookahead are all
+    windowed (except the very last, which has no peer left); sparse
+    events under a zero lookahead never are."""
+    clk = VirtualClock(shards=2, shard_lookahead=1.0)
+    for i in range(10):
+        clk._shard_hint = i % 2
+        clk.call_later((i + 1) * 1e-6, lambda: None)
+    clk._shard_hint = 0
+    clk.run_until_idle()
+    st = clk._queue.stats()
+    assert st["n_shards"] == 2
+    assert st["pops_total"] == 10
+    assert st["windowed_pops"] == 9      # last pop: other shard empty
+    assert sum(st["shard_pops"]) == 10 and st["shard_pops"][0] == 5
+
+    clk = VirtualClock(shards=2, shard_lookahead=0.0)
+    for i in range(10):
+        clk._shard_hint = i % 2
+        clk.call_later((i + 1) * 1e-3, lambda: None)
+    clk._shard_hint = 0
+    clk.run_until_idle()
+    st = clk._queue.stats()
+    assert st["pops_total"] == 10
+    assert st["windowed_pops"] == 0      # 1ms apart, zero window
+
+
+def test_same_bucket_reschedule_moves_in_place():
+    """A pending one-shot moved within its calendar bucket keeps its
+    handle (the in-place fast path); a cross-bucket move re-arms fresh.
+    Ordering afterwards is exact in both cases."""
+    clk = VirtualClock()                     # calendar, 1us buckets
+    order = []
+    h = clk.call_later(5e-6, order.append, "moved")
+    clk.call_later(5.1e-6, order.append, "fixed")
+    assert clk.reschedule(h, 5.2e-6) is h    # same bucket: in place
+    assert h.when == 5.2e-6
+    h2 = clk.reschedule(h, 8e-6)             # crosses buckets: rearm
+    assert h2 is not h and h.cancelled
+    clk.run_until_idle()
+    assert order == ["fixed", "moved"]
+
+
+def test_same_bucket_reschedule_keeps_fifo_vs_heap():
+    """The in-place move consumes one seq, exactly like the heap's
+    cancel-and-rearm, so same-instant FIFO ties resolve identically
+    on both queue implementations."""
+    logs = []
+    for impl in ("calendar", "heap"):
+        clk = VirtualClock(queue=impl)
+        log = []
+        a = clk.call_later(3e-6, log.append, "a")
+        clk.call_later(3.4e-6, log.append, "b")
+        clk.reschedule(a, 3.4e-6)            # tie with b, but LATER seq
+        clk.call_later(3.4e-6, log.append, "c")
+        clk.run_until_idle()
+        logs.append(log)
+    assert logs[0] == logs[1] == ["b", "a", "c"]

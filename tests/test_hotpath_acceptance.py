@@ -162,3 +162,56 @@ def test_streaming_peak_memory_flat_1m_vs_10m():
     assert ratio < 1.5, (
         f"peak memory grew {ratio:.2f}x for 10x the invocations — "
         f"the streaming bound is broken")
+
+
+def _run_sharded(n_invocations, shards, seed=11, **kw):
+    tr = _TRACES.get(seed)
+    assert tr is not None, "run the unsharded variant first"
+    return replay_trace(tr, seed=seed, n_clients=64,
+                        n_invocations=n_invocations,
+                        workers_per_client=4, shards=shards, **kw)
+
+
+def test_thirty_k_sharded_replay_fast_tier():
+    """Tentpole acceptance (fast tier): the 30k churn+storm replay
+    under K=1,2,4,8 node-group shards is bit-identical to the
+    unsharded engine — same seed, same scenario, same stats."""
+    base, _, _ = _run(30_000)
+    for k in (1, 2, 4, 8):
+        assert _run_sharded(30_000, k) == base, f"K={k} diverged"
+
+
+@pytest.mark.slow
+def test_million_invocation_sharded_acceptance():
+    """Slow tier: K=4 shards on the full 1M acceptance replay,
+    bit-identical to the unsharded run — and through the multiprocess
+    solver pool too (2 workers fit any box; the 4-worker speedup gate
+    lives in benchmarks/hotpath.py where real cores are required)."""
+    base, _, _ = _run(1_000_000)
+    assert _run_sharded(1_000_000, 4) == base
+    assert _run_sharded(1_000_000, 4, shard_workers=2) == base
+
+
+@pytest.mark.slow
+@pytest.mark.skipif((__import__("os").cpu_count() or 1) < 4,
+                    reason="4-worker speedup gate needs >= 4 cores")
+def test_ten_million_multiprocess_speedup():
+    """The ISSUE's acceptance gate at full scale: the stretched 10M
+    replay with 4 solver workers completes >= 2x faster than the
+    single-core run, with identical stats."""
+    base, wall1, _ = _run_stretched(10_000_000, 20.0)
+    tr = ChurnTrace.synthetic_piz_daint(
+        1000, 20.0, TRACE_KW["utilization"], seed=11,
+        mean_idle_s=0.5 * (20.0 / TRACE_KW["duration_s"]),
+        **{k: v for k, v in TRACE_KW.items()
+           if k not in ("duration_s", "utilization")})
+    t0 = time.perf_counter()
+    s = replay_trace(tr, seed=11, n_clients=64,
+                     n_invocations=10_000_000, workers_per_client=4,
+                     shards=4, shard_workers=4)
+    wall_mp = time.perf_counter() - t0
+    assert s == base
+    speedup = wall1 / wall_mp
+    print(f"10M multiprocess: {wall1:.2f}s -> {wall_mp:.2f}s "
+          f"({speedup:.2f}x)")
+    assert speedup >= 2.0, f"speedup {speedup:.2f}x < 2x at 4 workers"

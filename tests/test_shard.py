@@ -1,0 +1,345 @@
+"""Multi-core event sharding (DESIGN.md §19): the sharded replay must
+be BIT-identical to the single-core engine — per seed, for K=1,2,4,8,
+for arbitrary tenant→shard maps, and through the multiprocess solver
+pool.  Identity is the whole contract: sharding changes which queue
+cursor pops an event and which process runs a cohort solve, never a
+control decision, an RNG draw or a float operation.
+
+Guarded hypothesis import (requirements-test.txt pattern): without
+hypothesis the @given random-map property vanishes but the seeded
+fallback below keeps the SAME helper exercised everywhere.
+"""
+from __future__ import annotations
+
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import ChurnTrace, replay_trace
+from repro.core.shard import (ShardMap, ShardSolverPool, ShardTask,
+                              cohort_big, segment_table, solve_cohort,
+                              tenant_counts)
+
+N_CLIENTS = 16
+
+# churn + storms + partitions so every cross-shard edge class is live
+# (transfers, partition windows, availability fan-out, re-leases)
+_TRACES = {}
+
+
+def _trace(seed=3):
+    tr = _TRACES.get(seed)
+    if tr is None:
+        tr = _TRACES[seed] = ChurnTrace.synthetic_piz_daint(
+            150, 1.5, 0.6, seed=seed, fault_drop_rate=0.02,
+            drop_window_s=0.2, n_partitions=2, partition_width=2,
+            n_storms=4, storm_transfers=6, storm_bytes=4 << 20)
+    return tr
+
+
+_BASELINE = {}
+
+
+def _replay(seed=3, **kw):
+    return replay_trace(_trace(seed), seed=seed, n_clients=N_CLIENTS,
+                        n_invocations=4_000, workers_per_client=2,
+                        **kw)
+
+
+def _baseline(seed=3):
+    s = _BASELINE.get(seed)
+    if s is None:
+        s = _BASELINE[seed] = _replay(seed)
+    return s
+
+
+def check_sharded_equal(seed=3, **kw):
+    """Shared invariant helper (hypothesis + fallback): a sharded
+    replay's ElasticityStats equal the unsharded baseline bitwise."""
+    base = _baseline(seed)
+    s = _replay(seed, **kw)
+    if s != base:
+        diff = [f for f in base.__dataclass_fields__
+                if getattr(s, f) != getattr(base, f)]
+        raise AssertionError(
+            f"sharded replay diverged ({kw}); fields: {diff}")
+    return s
+
+
+# ---------------------------------------------------------- ShardMap
+def test_shard_map_default_partition_is_contiguous_blocks():
+    m = ShardMap(4, 16)
+    blocks = m.tenant_shard.tolist()
+    assert blocks == sorted(blocks)              # contiguous
+    assert set(blocks) == {0, 1, 2, 3}           # every shard hit
+    assert all(m.shard_of_tenant(i) == blocks[i] for i in range(16))
+
+
+def test_shard_map_endpoint_routing():
+    m = ShardMap(4, 8, n_nodes=100, seed=1)
+    # node blocks: ascending, every shard non-empty
+    shards = [m.shard_for_endpoint(f"node{i:03d}") for i in range(100)]
+    assert shards == sorted(shards)
+    assert set(shards) == {0, 1, 2, 3}
+    # client endpoints follow the tenant map
+    for i in range(8):
+        assert (m.shard_for_endpoint(f"client:tenant{i}")
+                == m.shard_of_tenant(i))
+    # anything else hashes deterministically into range
+    for ep in ("manager", "replica:0", "client:storm"):
+        s = m.shard_for_endpoint(ep)
+        assert 0 <= s < 4
+        assert s == m.shard_for_endpoint(ep)
+
+
+def test_shard_map_validates_assignment():
+    with pytest.raises(ValueError):
+        ShardMap(0, 4)
+    with pytest.raises(ValueError):
+        ShardMap(2, 4, assign=[0, 1, 2, 0])      # shard out of range
+    with pytest.raises(ValueError):
+        ShardMap(2, 4, assign=[0, 1])            # wrong length
+    m = ShardMap(3, 5, assign=[2, 0, 1, 2, 2])   # arbitrary is legal
+    assert m.tenant_shard.tolist() == [2, 0, 1, 2, 2]
+
+
+def test_shard_rng_streams_are_distinct_and_stable():
+    m = ShardMap(4, 8, seed=9)
+    draws = [m.rng_for(s).randint(0, 1 << 30, 4).tolist()
+             for s in range(4)]
+    assert len({tuple(d) for d in draws}) == 4   # distinct streams
+    again = [m.rng_for(s).randint(0, 1 << 30, 4).tolist()
+             for s in range(4)]
+    assert draws == again                        # derivation is pure
+    with pytest.raises(ValueError):
+        m.rng_for(4)
+
+
+# ----------------------------------------------- closed-form planning
+def test_segment_table_matches_argsort_derivation():
+    """The closed-form residue table must reproduce exactly the
+    (uid, count) sequence the unsharded argsort pass derives."""
+    rng = random.Random(17)
+    for _ in range(50):
+        n_t = rng.randint(1, 6)
+        n_ps = np.array([rng.randint(1, 5) for _ in range(n_t)],
+                        np.int64)
+        base = np.concatenate(([0], np.cumsum(n_ps)[:-1]))
+        c0s = np.array([rng.randint(0, 1000) for _ in range(n_t)],
+                       np.int64)
+        t_cnt = np.array([rng.randint(1, 12) for _ in range(n_t)],
+                         np.int64)
+        uids, counts = segment_table(t_cnt, c0s, n_ps, base)
+        # brute force: assign each tenant's arrivals round-robin
+        gids = []
+        for s in range(n_t):
+            for j in range(int(t_cnt[s])):
+                gids.append(int(base[s])
+                            + (int(c0s[s]) + j) % int(n_ps[s]))
+        ref_uids, ref_counts = np.unique(np.array(gids, np.int64),
+                                         return_counts=True)
+        assert np.array_equal(uids, ref_uids)
+        assert np.array_equal(counts, ref_counts)
+        assert np.all(np.diff(uids) > 0)          # ascending gid order
+
+
+def test_tenant_counts_matches_argsort_grouping():
+    rng = np.random.RandomState(5)
+    picks = rng.randint(0, 9, 200)
+    uniq, cnt = tenant_counts(picks)
+    ref_u, ref_c = np.unique(picks, return_counts=True)
+    assert np.array_equal(uniq, ref_u)
+    assert np.array_equal(cnt, ref_c)
+
+
+def test_cohort_big_dominates_g_range():
+    """big must exceed the solved g range so the segment offset never
+    lets the running max cross a boundary — including when seeds (busy
+    workers) stretch past the window."""
+    window = np.array([1.0, 1.1, 1.2, 2.0])
+    seeds = np.array([-np.inf, 5.0])
+    svc = 0.25
+    big = cohort_big(window, seeds, svc, window.size)
+    # worst case g spread: hi (seed 5.0) down to lo - svc*(n-1)
+    assert big > (5.0 - 1.0) + svc * (window.size - 1)
+    # -inf seeds must not poison the bound
+    big2 = cohort_big(window, np.array([-np.inf]), svc, window.size)
+    assert np.isfinite(big2)
+
+
+# ------------------------------------------------ replay bit-identity
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_sharded_replay_bit_identical(k):
+    """Tentpole acceptance (fast tier): K=1,2,4,8 node-group shards,
+    stats bitwise equal to the unsharded engine on a churn+storm+
+    partition replay."""
+    check_sharded_equal(shards=k)
+
+
+def test_sharded_replay_random_maps_seeded_fallback():
+    """Arbitrary tenant→shard maps are bit-identical too (the shard
+    map only routes; every fold is permutation-invariant or applied in
+    global order).  Seeded fallback of the hypothesis property — runs
+    everywhere."""
+    rng = random.Random(23)
+    for trial in range(3):
+        k = rng.choice([2, 3, 4])
+        assign = [rng.randrange(k) for _ in range(N_CLIENTS)]
+        check_sharded_equal(
+            shards=k, shard_map=ShardMap(k, N_CLIENTS, assign=assign,
+                                         n_nodes=150, seed=trial))
+
+
+def test_multiprocess_solver_pool_bit_identical():
+    """Tier 2: per-shard cohort solves shipped to worker processes over
+    pipes (window-barrier protocol) return bit-identical stats — the
+    solve is a pure function of the task arrays."""
+    check_sharded_equal(shards=4, shard_workers=2)
+
+
+def test_per_tenant_sketches_survive_sharding():
+    """Per-tenant percentile sketches commit in global tenant order, so
+    they too are K-invariant (insertion order never depends on the
+    map)."""
+    base = _replay(per_tenant_stats=True)
+    s = _replay(per_tenant_stats=True, shards=4)
+    assert s == base
+    assert s.tenant_rtts and s.tenant_rtts == base.tenant_rtts
+
+
+# ------------------------------------------------------- solver pool
+def _toy_task(shard=0, n=32, seed=0):
+    rng = np.random.RandomState(seed)
+    window = np.sort(rng.uniform(0.0, 1e-3, n))
+    picks = np.zeros(n, np.int64)
+    uniq = np.array([0], np.int64)
+    t_cnt = np.array([n], np.int64)
+    c0s = np.array([1], np.int64)
+    n_ps = np.array([3], np.int64)
+    base = np.array([0], np.int64)
+    uids, _counts = segment_table(t_cnt, c0s, n_ps, base)
+    n_u = uids.size
+    seeds = np.full(n_u, -np.inf)
+    ov = np.full(n_u, 2e-6)
+    hp = np.full(n_u, 1.0)
+    svc = 1e-4
+    big = cohort_big(window, seeds, svc, n)
+    return ShardTask(shard, picks, window, uniq, c0s, n_ps, base,
+                     uids, seeds, ov, ov * 2, hp, svc, big, 3e-6)
+
+
+def test_solver_pool_round_robin_preserves_task_order():
+    """More tasks than workers: the per-pipe FIFO plus recv-in-send-
+    order barrier returns results in task order, equal to in-process
+    solves."""
+    tasks = [_toy_task(shard=s, seed=s) for s in range(5)]
+    ref = [solve_cohort(t) for t in tasks]
+    with ShardSolverPool(2) as pool:
+        got = pool.solve(tasks)
+        assert pool.windows == 1 and pool.tasks_sent == 5
+    assert [r.shard for r in got] == [0, 1, 2, 3, 4]
+    for a, b in zip(got, ref):
+        assert np.array_equal(a.rtt, b.rtt)
+        assert np.array_equal(a.last_fin, b.last_fin)
+        assert np.array_equal(a.uid_ords, b.uid_ords)
+        assert np.array_equal(a.tp, b.tp)
+
+
+def test_solve_cohort_restriction_equals_global():
+    """Splitting a window's rows across shards and solving each
+    restriction reproduces the global solve's rows bitwise — the §19
+    identity argument, isolated from the replay."""
+    rng = np.random.RandomState(11)
+    n = 64
+    window = np.sort(rng.uniform(0.0, 2e-3, n))
+    picks = rng.randint(0, 4, n).astype(np.int64)
+    uniq, t_cnt = tenant_counts(picks)
+    n_ps = np.array([2, 3, 1, 2], np.int64)[:uniq.size]
+    base = np.concatenate(([0], np.cumsum(n_ps)[:-1]))
+    c0s = np.array([5, 0, 7, 2], np.int64)[:uniq.size]
+    uids, _ = segment_table(t_cnt, c0s, n_ps, base)
+    seeds = np.where(rng.rand(uids.size) < 0.5, -np.inf,
+                     rng.uniform(0, 1e-3, uids.size))
+    ov_h = rng.uniform(1e-6, 2e-6, uids.size)
+    ov_w = ov_h * 3
+    hp = np.full(uids.size, 5e-4)
+    svc = 1e-4
+    big = cohort_big(window, seeds, svc, n)
+
+    def task(rows, shard):
+        return ShardTask(shard, picks[rows], window[rows], uniq, c0s,
+                         n_ps, base, uids, seeds, ov_h, ov_w, hp,
+                         svc, big, 3e-6)
+
+    whole = solve_cohort(task(np.arange(n), 0))
+    tenant_shard = np.array([0, 1, 0, 1], np.int64)[:uniq.size]
+    row_sh = tenant_shard[np.searchsorted(uniq, picks)]
+    parts = [solve_cohort(task(np.flatnonzero(row_sh == s), s))
+             for s in range(2) if np.any(row_sh == s)]
+    # every global segment appears in exactly one part, with bitwise
+    # identical last_fin; rtt rows concatenate to a permutation whose
+    # per-segment restriction matches the global rows exactly
+    seen = {}
+    for p in parts:
+        for j, o in enumerate(p.uid_ords.tolist()):
+            assert o not in seen
+            seen[o] = p.last_fin[j]
+    assert set(seen) == set(range(uids.size))
+    assert np.array_equal(np.array([seen[o]
+                                    for o in range(uids.size)]),
+                          whole.last_fin)
+    # per-tenant rtt restriction (tenants are whole inside a part)
+    for p in parts:
+        for ti in np.unique(p.tp):
+            assert np.array_equal(p.rtt[p.tp == ti],
+                                  whole.rtt[whole.tp == ti])
+
+
+# ---------------------------------------------------- hypothesis path
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI has it
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(k=st.integers(1, 4),
+           assign=st.lists(st.integers(0, 3), min_size=N_CLIENTS,
+                           max_size=N_CLIENTS),
+           data=st.data())
+    def test_random_shard_maps_bit_identical(k, assign, data):
+        assign = [a % k for a in assign]
+        check_sharded_equal(
+            shards=k, shard_map=ShardMap(k, N_CLIENTS, assign=assign,
+                                         n_nodes=150))
+
+
+# --------------------------------------------------------- slow tier
+@pytest.mark.slow
+@pytest.mark.skipif((os.cpu_count() or 1) < 4,
+                    reason="multiprocess speedup needs >= 4 cores")
+def test_multiprocess_speedup_four_workers():
+    """The ≥2x wall-clock gate at 4 solver workers on the stretched
+    10M-shape replay (scaled to 1M here; the full 10M gate lives in
+    benchmarks/hotpath.py and the recorded BENCH_hotpath.json row)."""
+    import time
+    tr = ChurnTrace.synthetic_piz_daint(
+        1000, 2.0, 0.5, seed=7, fault_drop_rate=0.02,
+        drop_window_s=0.3, n_partitions=2, partition_width=3,
+        n_storms=4, storm_transfers=8, storm_bytes=4 << 20)
+
+    def one(**kw):
+        t0 = time.perf_counter()
+        s = replay_trace(tr, seed=7, n_clients=64,
+                         n_invocations=1_000_000,
+                         workers_per_client=4, **kw)
+        return s, time.perf_counter() - t0
+
+    base, wall_1 = one()
+    mp, wall_mp = one(shards=4, shard_workers=4)
+    assert mp == base
+    assert wall_1 / wall_mp >= 2.0, \
+        f"speedup {wall_1 / wall_mp:.2f}x < 2x at 4 workers"
