@@ -1,0 +1,97 @@
+"""Seeded chaos campaign (DESIGN.md §20): composed faults vs the four
+system-wide invariants.
+
+Each campaign run replays a seeded churn workload on a sharded control
+plane while a deterministic fault mix lands on top — manager-shard
+crashes (single and double), network partitions (two-way and one-way),
+drop-rate phases and adversarial tenant storms, rotating so one
+campaign covers the crash x partition x drop x storm product.  After
+every run the drained cluster must satisfy all four invariants
+(``repro.core.chaos``): no lease leaked, invocation conservation,
+ledger/quota balance, no double execution.
+
+``run(smoke=True)`` is the CI ``chaos-smoke`` gate: a small campaign
+runs twice in-process (stats objects must compare equal run-for-run)
+and the workflow additionally diffs the digest printed by two separate
+processes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.chaos import campaign, campaign_digest
+
+FULL_RUNS = 24          # acceptance floor is >= 20 composed-fault runs
+SMOKE_RUNS = 6
+
+
+def _campaign(n_runs: int, smoke: bool):
+    if smoke:
+        return campaign(n_runs, base_seed=500, n_nodes=10,
+                        control_shards=3, n_clients=3,
+                        n_invocations=250)
+    return campaign(n_runs, base_seed=1000, n_nodes=16,
+                    control_shards=4, n_clients=4, n_invocations=1200)
+
+
+def _check(runs):
+    bad = [r for r in runs if not r.report.ok]
+    if bad:
+        lines = [f"seed={r.spec.seed} ({r.spec.fault_label()}): "
+                 + "; ".join(r.report.violations) for r in bad]
+        raise SystemExit("chaos invariants violated in "
+                         f"{len(bad)}/{len(runs)} runs:\n"
+                         + "\n".join(lines))
+    crashed = [r for r in runs if r.spec.shard_crashes]
+    if crashed and not any(r.failovers for r in crashed):
+        raise SystemExit("no shard-crash run observed a client "
+                         "failover — the faults are not landing")
+    if crashed and not any(r.adoptions for r in crashed):
+        raise SystemExit("no shard-crash run adopted an orphan — the "
+                         "interchange healing path never ran")
+
+
+def run(quick: bool = False, smoke: bool = False):
+    n_runs = SMOKE_RUNS if (smoke or quick) else FULL_RUNS
+    runs = _campaign(n_runs, smoke or quick)
+    _check(runs)
+    digest = campaign_digest(runs)
+
+    if smoke:
+        runs2 = _campaign(n_runs, True)
+        if campaign_digest(runs2) != digest:
+            raise SystemExit("nondeterministic chaos campaign digest")
+        for a, b in zip(runs, runs2):
+            if a.stats != b.stats:
+                raise SystemExit(
+                    f"nondeterministic chaos run: seed={a.spec.seed} "
+                    f"stats disagree across two in-process runs")
+        for line in digest.splitlines():
+            print("# smoke ok: " + line)
+        return []
+
+    rows = [[r.spec.seed, len(r.spec.shard_crashes),
+             r.spec.n_partitions, r.spec.drop_rate,
+             r.spec.tenant_storms, r.stats.completed, r.stats.failed,
+             getattr(r.stats, "lost", 0), r.stats.leases_granted,
+             r.failovers, r.adoptions, int(r.report.ok)]
+            for r in runs]
+    emit("chaos_campaign", rows,
+         ["seed", "shard_crashes", "partitions", "drop_rate",
+          "tenant_storms", "completed", "failed", "lost",
+          "leases_granted", "failovers", "adoptions", "invariants_ok"])
+    total_crashes = sum(len(r.spec.shard_crashes) for r in runs)
+    print(f"# chaos campaign: {len(runs)} composed-fault runs "
+          f"({total_crashes} shard crashes, "
+          f"{sum(r.spec.n_partitions for r in runs)} partitions, "
+          f"{sum(r.spec.tenant_storms for r in runs)} tenant storms) "
+          f"— all four invariants hold in every run")
+    return rows
+
+
+def main():
+    import sys
+    run(quick="--quick" in sys.argv, smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Sharded control plane benchmark (DESIGN.md §20): near-linear
+control-event scaling 1 -> 8 manager shards, and the crash-healing
+failover gate.
+
+Two scenarios, both exact on a ``VirtualClock``:
+
+* **control scaling** — one identical churn replay (same trace, same
+  tenants, same heartbeat cadence) runs against a control plane of
+  K in {1, 2, 4, 8} manager shards.  Every control event (register,
+  remove, heartbeat probe, availability delta, client read, gossip
+  apply) is counted against the shard that serves it; the busiest
+  shard is the modeled bottleneck, so
+  ``speedup(K) = max_events(1) / max_events(K)`` and the modeled
+  control events/sec is ``total / (max_events * CONTROL_EVENT_CPU_S)``.
+  The paper's scalability story (§3.4: managers shard the cluster, so
+  control load divides) holds when speedup stays near-linear.
+
+* **crash-healing failover** — a 4-shard replay where two manager
+  shards are killed mid-replay while nodes churn.  Live leases keep
+  executing through the crash (§3.1: allocation is decentralized —
+  the data path never touches the manager), clients whose home shard
+  died fail over to the ring successor via channel faults + seeded
+  jittered backoff, and the interchange adopts the orphaned
+  registrations.  The gate: zero lost invocations, zero crash-failed
+  leases, every lease terminal, every quota balanced, at least one
+  observed failover AND adoption — and the whole run bit-identical
+  per seed.
+
+``run(smoke=True)`` is the CI determinism gate: both scenarios run
+twice in-process and must reproduce exactly; the workflow additionally
+diffs the stdout of two separate processes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import (ChurnTrace, SimulatedCluster, TraceEvent,
+                        TraceReplayer)
+from repro.core.chaos import check_invariants
+from repro.core.control_plane import CONTROL_EVENT_CPU_S
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+#: Acceptance floors on ``speedup(8)`` — the busiest shard's event
+#: count must keep dropping as shards are added.  Ideal is 8x; the
+#: residual is churn-induced sweep imbalance across the node blocks
+#: plus the O(1) per-tick constant, both of which shrink relatively
+#: as nodes/shard grows — hence the higher floor at full scale
+#: (observed: ~5.3x at 64 nodes, ~4.2x at the 32-node smoke).
+MIN_SPEEDUP_8 = 4.5
+MIN_SPEEDUP_8_SMOKE = 3.5
+
+
+# ------------------------------------------------------- scaling sweep
+def _control_replay(n_shards: int, *, n_nodes: int, n_clients: int,
+                    n_invocations: int, duration_s: float, seed: int):
+    """One churn replay against a K-shard control plane; returns
+    (stats, per-shard control-event counts, failovers, adoptions)."""
+    trace = ChurnTrace.synthetic_piz_daint(
+        n_nodes, duration_s, 0.5, seed=seed)
+    sim = SimulatedCluster(n_nodes=n_nodes, workers_per_node=2,
+                           seed=seed, control_shards=n_shards)
+    stats = TraceReplayer(sim, trace,
+                          heartbeat_interval_s=0.01).replay(
+        n_clients=n_clients, n_invocations=n_invocations,
+        workers_per_client=2)
+    return (stats, sim.rm.shard_event_counts(), sim.rm.failovers(),
+            sim.rm.bus.adoptions)
+
+
+def _scaling_rows(replay_kw: dict):
+    rows, base_max = [], None
+    for k in SHARD_COUNTS:
+        stats, counts, _, _ = _control_replay(k, **replay_kw)
+        total, worst = sum(counts), max(counts)
+        if base_max is None:
+            base_max = worst
+        speedup = base_max / worst
+        events_per_s = total / (worst * CONTROL_EVENT_CPU_S)
+        rows.append([k, total, worst, round(speedup, 3),
+                     round(events_per_s), stats.completed,
+                     stats.failed])
+    return rows
+
+
+def _check_scaling(rows, floor: float):
+    by_k = {r[0]: r for r in rows}
+    speedup8 = by_k[8][3]
+    if speedup8 < floor:
+        raise SystemExit(
+            f"control plane does not scale: speedup(8 shards) = "
+            f"{speedup8:.2f}x < {floor:.1f}x")
+    for a, b in zip(SHARD_COUNTS, SHARD_COUNTS[1:]):
+        if by_k[b][3] < by_k[a][3]:
+            raise SystemExit(
+                f"speedup regressed {a} -> {b} shards: "
+                f"{by_k[a][3]:.2f}x -> {by_k[b][3]:.2f}x")
+
+
+# ------------------------------------------------- crash-healing gate
+def _crash_heal_replay(*, n_nodes: int, n_clients: int,
+                       n_invocations: int, duration_s: float,
+                       seed: int, crashes):
+    """4-shard churn replay with manager-shard kills layered on; the
+    invariant sweep runs on the drained cluster."""
+    # utilization high enough that clients keep reallocating AFTER the
+    # crashes — a client only observes a dead home shard when it next
+    # reads the view, so a quiet tail would (correctly, §3.1) show
+    # zero failovers and defeat the gate
+    base = ChurnTrace.synthetic_piz_daint(
+        n_nodes, duration_s, 0.6, seed=seed)
+    events = list(base.events)
+    for t, k in crashes:
+        events.append(TraceEvent(t, "shard_crash", n_nodes=k))
+    trace = ChurnTrace(n_nodes, events, meta=base.meta)
+    sim = SimulatedCluster(n_nodes=n_nodes, workers_per_node=2,
+                           seed=seed, control_shards=4)
+    stats = TraceReplayer(sim, trace,
+                          heartbeat_interval_s=0.01).replay(
+        n_clients=n_clients, n_invocations=n_invocations,
+        workers_per_client=2)
+    report = check_invariants(sim, stats)
+    return stats, report, sim.rm.failovers(), sim.rm.bus.adoptions
+
+
+def _check_crash_heal(stats, report, failovers, adoptions):
+    if not report.ok:
+        raise SystemExit("crash-heal invariants violated: "
+                         + "; ".join(report.violations))
+    if stats.lost:
+        raise SystemExit(f"shard crash dropped {stats.lost} "
+                         f"in-flight invocations")
+    if stats.lease_states.get("failed"):
+        raise SystemExit(
+            f"{stats.lease_states['failed']} live leases died with "
+            f"the manager shard — §3.1 decoupling broken")
+    if failovers <= 0:
+        raise SystemExit("no client ever failed over: the crash was "
+                         "not observed by the control path")
+    if adoptions <= 0:
+        raise SystemExit("the interchange adopted no orphans: the "
+                         "dead shard's registrations leaked")
+
+
+def run(quick: bool = False, smoke: bool = False):
+    if smoke or quick:
+        scale_kw = dict(n_nodes=32, n_clients=8, n_invocations=600,
+                        duration_s=0.25, seed=11)
+        heal_kw = dict(n_nodes=24, n_clients=6, n_invocations=700,
+                       duration_s=0.6, seed=13,
+                       crashes=((0.1, 1), (0.25, 3)))
+    else:
+        scale_kw = dict(n_nodes=64, n_clients=16, n_invocations=4_000,
+                        duration_s=0.5, seed=11)
+        heal_kw = dict(n_nodes=48, n_clients=12, n_invocations=3_000,
+                       duration_s=0.8, seed=11,
+                       crashes=((0.1, 1), (0.3, 3)))
+
+    rows = _scaling_rows(scale_kw)
+    _check_scaling(rows, MIN_SPEEDUP_8_SMOKE if (smoke or quick)
+                   else MIN_SPEEDUP_8)
+    stats, report, failovers, adoptions = _crash_heal_replay(**heal_kw)
+    _check_crash_heal(stats, report, failovers, adoptions)
+
+    if smoke:
+        # CI gate: the identical seed must reproduce identical stats
+        # and identical per-shard event counts
+        rows2 = _scaling_rows(scale_kw)
+        if rows2 != rows:
+            raise SystemExit("nondeterministic control scaling sweep")
+        stats2, _, failovers2, adoptions2 = _crash_heal_replay(**heal_kw)
+        if stats2 != stats or (failovers2, adoptions2) != (failovers,
+                                                           adoptions):
+            raise SystemExit("nondeterministic crash-heal replay: two "
+                             "runs of one seed disagree")
+        for r in rows:
+            print(f"# smoke ok: shards={r[0]} events={r[1]} "
+                  f"busiest={r[2]} speedup={r[3]}x rate={r[4]}/s")
+        print(f"# smoke ok: crash-heal completed={stats.completed} "
+              f"failed={stats.failed} lost={stats.lost} "
+              f"granted={stats.leases_granted} failovers={failovers} "
+              f"adoptions={adoptions} invariants=ok")
+        return []
+
+    emit("control_plane_scaling", rows,
+         ["shards", "control_events", "busiest_shard_events",
+          "speedup", "modeled_events_per_s", "completed", "failed"])
+    emit("control_plane_crash_heal",
+         [[stats.completed, stats.failed, stats.lost,
+           stats.leases_granted, failovers, adoptions]],
+         ["completed", "failed", "lost", "leases_granted",
+          "failovers", "adoptions"])
+    by_k = {r[0]: r for r in rows}
+    print(f"# control plane scales {by_k[8][3]:.2f}x at 8 shards "
+          f"({by_k[1][4]:,} -> {by_k[8][4]:,} modeled events/s); "
+          f"crash-heal: {failovers} failovers, {adoptions} adoptions, "
+          f"0 lost invocations, all invariants hold")
+    return rows
+
+
+def main():
+    import sys
+    run(quick="--quick" in sys.argv, smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,15 @@ and the LogP-derived offload model (Eq. 1).
 from repro.core.accounting import (CLASS_PRICE_FACTOR, ClientBill, Ledger,
                                    Price, QuotaState)
 from repro.core.batch_system import BatchJob, BatchSystem, Node
+from repro.core.chaos import (ChaosRun, ChaosSpec, INVARIANTS,
+                              InvariantReport, InvariantViolation,
+                              assert_invariants, build_trace,
+                              campaign_digest, check_invariants,
+                              run_chaos)
+from repro.core.chaos import campaign as chaos_campaign
+from repro.core.control_plane import (CONTROL_EVENT_CPU_S, ClientView,
+                                      Interchange, ManagerShard,
+                                      ShardedControlPlane)
 from repro.core.clock import (CalendarQueue, Clock, EVENT_QUEUES,
                               HeapEventQueue, REAL_CLOCK, RealClock,
                               ScheduledCall, VirtualClock)
@@ -44,6 +53,12 @@ from repro.core.transport import (Channel, ChannelDropped, ChannelError,
 __all__ = [
     "CLASS_PRICE_FACTOR", "ClientBill", "Ledger", "Price", "QuotaState",
     "BatchJob", "BatchSystem", "Node",
+    "ChaosRun", "ChaosSpec", "INVARIANTS", "InvariantReport",
+    "InvariantViolation", "assert_invariants", "build_trace",
+    "campaign_digest",
+    "chaos_campaign", "check_invariants", "run_chaos",
+    "CONTROL_EVENT_CPU_S", "ClientView", "Interchange", "ManagerShard",
+    "ShardedControlPlane",
     "ChurnTrace", "ElasticityStats", "EVENT_KINDS", "TraceEvent",
     "TraceReplayer", "replay_trace",
     "CalendarQueue", "Clock", "EVENT_QUEUES", "HeapEventQueue",

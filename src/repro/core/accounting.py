@@ -185,6 +185,15 @@ class Ledger:
         with self._lock:
             return sum(q.rejections for q in self._quotas.values())
 
+    def held_workers(self) -> Dict[str, int]:
+        """Snapshot of every tenant's live held-worker count — the
+        chaos invariant surface (DESIGN.md §20): after a drained
+        scenario every entry must be back to zero, or a lease ended
+        without returning its quota (an orphaned ``QuotaState``)."""
+        with self._lock:
+            return {cid: q.held_workers
+                    for cid, q in self._quotas.items()}
+
     # client/operator side ------------------------------------------------
     def bill(self, client_id: str) -> ClientBill:
         self.flush(client_id)

@@ -1,0 +1,311 @@
+"""Seeded chaos campaigns + system-wide invariants (DESIGN.md §20).
+
+The §3.1/§3.4 robustness claims are only worth what survives composed
+faults, so this module (a) states the four invariants every drained
+scenario must satisfy, machine-checkably, and (b) sweeps seeded
+campaigns of composed faults — manager-shard crashes × partitions ×
+drop-rate phases × tenant storms — over churn replays and checks them
+after every run.
+
+The invariants:
+
+1. **Lease conservation** — no lease leaked: every lease ever granted
+   ends in a terminal state (released + retrieved + expired + failed
+   accounts for every grant).
+2. **Invocation conservation** — every requested invocation is
+   accounted for: ``completed + failed + lost == requested``.
+3. **Ledger/quota balance** — after the drain every tenant's held-
+   worker quota count is back to zero (no orphaned ``QuotaState``),
+   and the ledger's GB-second total reconciles with the tracked
+   leases' own allocation meters.
+4. **No double execution** — ``invocations_billed <= completed``: the
+   at-least-once retry machinery (§3.5) bills wasted attempts with
+   ``count=0``, so no completion is ever billed twice.  Equality is
+   NOT required: a retrieval racing an in-flight completion pops the
+   lease before the worker's billing hook runs, and that late
+   completion is deliberately unbilled (§5.4 — abrupt termination
+   loses at most a granule, in the client's favor).
+
+Everything is deterministic per seed: a campaign digest is a pure
+function of its specs, which is what the CI ``chaos-smoke`` gate
+diffs across two processes.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.lease import TERMINAL_STATES
+from repro.core.simulation import SimulatedCluster
+from repro.core.trace import ChurnTrace, TraceEvent, TraceReplayer
+from repro.core.transport import Topology
+
+__all__ = ["ChaosRun", "ChaosSpec", "InvariantReport",
+           "InvariantViolation", "INVARIANTS", "assert_invariants",
+           "build_trace", "campaign", "campaign_digest",
+           "check_invariants", "run_chaos"]
+
+INVARIANTS = ("lease_conservation", "invocation_conservation",
+              "ledger_quota_balance", "no_double_execution")
+
+
+class InvariantViolation(AssertionError):
+    """A drained scenario broke a system-wide invariant."""
+
+
+@dataclass
+class InvariantReport:
+    """Outcome of one invariant sweep over a drained cluster."""
+
+    violations: List[str] = field(default_factory=list)
+    leases_tracked: int = 0
+    lease_states: Dict[str, int] = field(default_factory=dict)
+    held_workers: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        if self.ok:
+            return (f"ok: {self.leases_tracked} leases terminal, "
+                    f"quotas balanced")
+        return "; ".join(self.violations)
+
+
+def check_invariants(sim: SimulatedCluster,
+                     stats=None) -> InvariantReport:
+    """Sweep the four invariants over a DRAINED cluster (teardown done,
+    clock idle).  ``stats`` — an ``ElasticityStats``/``ScenarioStats``
+    — enables the conservation checks; without it only the cluster-
+    side checks (lease states, quota balance, ledger reconciliation)
+    run.  Returns a report; ``assert_invariants`` raises instead."""
+    v: List[str] = []
+
+    # 1 — lease conservation: no lease leaked
+    lease_states: Dict[str, int] = {}
+    for lease in sim.leases:
+        lease_states[lease.state.value] = \
+            lease_states.get(lease.state.value, 0) + 1
+        if lease.state not in TERMINAL_STATES:
+            v.append(f"lease_conservation: lease {lease.lease_id} on "
+                     f"{lease.server_id} leaked in state "
+                     f"{lease.state.value}")
+    if stats is not None:
+        granted = getattr(stats, "leases_granted", None)
+        if granted is not None and granted != len(sim.leases):
+            v.append(f"lease_conservation: stats claim {granted} "
+                     f"leases granted but {len(sim.leases)} tracked")
+        s_states = getattr(stats, "lease_states", None)
+        if granted is not None and s_states is not None \
+                and sum(s_states.values()) != granted:
+            v.append(f"lease_conservation: terminal-state tallies sum "
+                     f"to {sum(s_states.values())}, not the {granted} "
+                     f"granted")
+
+    # 2 — invocation conservation
+    if stats is not None:
+        requested = getattr(stats, "invocations_requested", None)
+        if requested is not None:
+            accounted = (stats.completed + stats.failed
+                         + getattr(stats, "lost", 0))
+            if accounted != requested:
+                v.append(f"invocation_conservation: completed+failed+"
+                         f"lost = {accounted} != {requested} requested")
+
+    # 3 — ledger/quota balance
+    held = sim.ledger.held_workers()
+    for cid in sorted(held):
+        if held[cid] != 0:
+            v.append(f"ledger_quota_balance: {cid} still holds "
+                     f"{held[cid]} quota workers (orphaned QuotaState)")
+    totals = sim.ledger.totals()
+    lease_gb = sum(lease.gb_seconds() for lease in sim.leases)
+    if not math.isclose(lease_gb, totals.gb_seconds,
+                        rel_tol=1e-9, abs_tol=1e-12):
+        v.append(f"ledger_quota_balance: tracked leases metered "
+                 f"{lease_gb!r} GB-s but the ledger billed "
+                 f"{totals.gb_seconds!r}")
+
+    # 4 — no double execution (billed > completed would mean some
+    # completion was charged twice; billed < completed is the legal
+    # retrieval-race under-bill, §5.4)
+    if stats is not None:
+        billed = getattr(stats, "invocations_billed", None)
+        if billed is not None and billed > stats.completed:
+            v.append(f"no_double_execution: {billed} invocations "
+                     f"billed > {stats.completed} completed")
+
+    return InvariantReport(violations=v,
+                           leases_tracked=len(sim.leases),
+                           lease_states=lease_states,
+                           held_workers=held)
+
+
+def assert_invariants(sim: SimulatedCluster, stats=None) \
+        -> InvariantReport:
+    """``check_invariants`` that raises ``InvariantViolation`` on any
+    breach — the pytest-fixture form (tests/conftest.py)."""
+    report = check_invariants(sim, stats)
+    if not report.ok:
+        raise InvariantViolation("\n".join(report.violations))
+    return report
+
+
+# ------------------------------------------------------------ campaigns
+@dataclass(frozen=True)
+class ChaosSpec:
+    """One composed-fault chaos run: a churn replay (the workload)
+    overlaid with manager-shard crashes, isolation windows, a drop-
+    rate phase and tenant storms.  Frozen + seeded: the run is a pure
+    function of the spec."""
+
+    seed: int
+    n_nodes: int = 16
+    workers_per_node: int = 2
+    control_shards: int = 4
+    n_clients: int = 4
+    n_invocations: int = 1200
+    workers_per_client: int = 2
+    # enough churn AFTER the early crashes that victims of a dead home
+    # shard actually reallocate (and therefore fail over) mid-replay
+    duration_s: float = 0.8
+    utilization: float = 0.6
+    heartbeat_interval_s: float = 0.02
+    #: (t, shard_index) manager-shard kills (DESIGN.md §20)
+    shard_crashes: Tuple[Tuple[float, int], ...] = ()
+    n_partitions: int = 0
+    partition_s: float = 0.03
+    one_way_partitions: bool = False
+    drop_rate: float = 0.0
+    drop_window_s: float = 0.12
+    tenant_storms: int = 0
+    storm_transfers: int = 6
+    storm_bytes: int = 1 << 22
+    lease_timeout_s: Optional[float] = None
+
+    def fault_label(self) -> str:
+        return (f"crashes={len(self.shard_crashes)} "
+                f"parts={self.n_partitions}"
+                f"{'(1way)' if self.one_way_partitions else ''} "
+                f"drop={self.drop_rate:g} storms={self.tenant_storms}")
+
+
+@dataclass
+class ChaosRun:
+    """One executed chaos run: its spec, replay stats, invariant
+    report and the control plane's failover telemetry."""
+
+    spec: ChaosSpec
+    stats: object
+    report: InvariantReport
+    failovers: int = 0
+    adoptions: int = 0
+
+
+def build_trace(spec: ChaosSpec) -> ChurnTrace:
+    """Compose the run's fault timeline: Piz-Daint-style churn (with
+    the drop phase and isolation windows woven in by the generator)
+    plus the shard crashes and tenant storms layered on top."""
+    base = ChurnTrace.synthetic_piz_daint(
+        spec.n_nodes, spec.duration_s, spec.utilization,
+        seed=spec.seed,
+        fault_drop_rate=spec.drop_rate,
+        drop_window_s=spec.drop_window_s if spec.drop_rate else 0.0,
+        n_partitions=spec.n_partitions,
+        partition_s=spec.partition_s,
+        one_way_partitions=spec.one_way_partitions)
+    events = list(base.events)
+    for t, k in spec.shard_crashes:
+        events.append(TraceEvent(t, "shard_crash", n_nodes=k))
+    rng = random.Random(spec.seed * 9_176 + 3)
+    for i in range(spec.tenant_storms):
+        t = rng.uniform(spec.duration_s * 0.2, spec.duration_s * 0.8)
+        events.append(TraceEvent(
+            t, "tenant_storm",
+            tenant=f"tenant{i % spec.n_clients}",
+            n_transfers=spec.storm_transfers,
+            nbytes=spec.storm_bytes))
+    meta = dict(base.meta)
+    meta["chaos"] = spec.fault_label()
+    return ChurnTrace(spec.n_nodes, events, meta=meta)
+
+
+def run_chaos(spec: ChaosSpec) -> ChaosRun:
+    """Execute one composed-fault run end to end and sweep the
+    invariants over the drained cluster."""
+    trace = build_trace(spec)
+    topology = (Topology.single_switch()
+                if any(e.kind in ("bandwidth_storm", "tenant_storm")
+                       for e in trace.events) else None)
+    sim = SimulatedCluster(n_nodes=spec.n_nodes,
+                           workers_per_node=spec.workers_per_node,
+                           seed=spec.seed, topology=topology,
+                           control_shards=spec.control_shards)
+    replay_kw = {}
+    if spec.lease_timeout_s is not None:
+        replay_kw["lease_timeout_s"] = spec.lease_timeout_s
+    stats = TraceReplayer(
+        sim, trace,
+        heartbeat_interval_s=spec.heartbeat_interval_s).replay(
+            n_clients=spec.n_clients,
+            n_invocations=spec.n_invocations,
+            workers_per_client=spec.workers_per_client, **replay_kw)
+    report = check_invariants(sim, stats)
+    failovers = adoptions = 0
+    if spec.control_shards:
+        failovers = sim.rm.failovers()
+        adoptions = sim.rm.bus.adoptions
+    return ChaosRun(spec=spec, stats=stats, report=report,
+                    failovers=failovers, adoptions=adoptions)
+
+
+def campaign(n_runs: int = 20, *, base_seed: int = 1000,
+             control_shards: int = 4, n_nodes: int = 16,
+             n_invocations: int = 1200,
+             n_clients: int = 4) -> List[ChaosRun]:
+    """A seeded campaign of ``n_runs`` composed-fault runs: the fault
+    mix cycles deterministically with the run index (shard crashes on
+    even runs, a double crash every fifth, partitions/drop phases/
+    tenant storms on rotating residues) so one campaign covers the
+    crash × partition × drop × storm product without any run being
+    random in what it composes."""
+    runs = []
+    for i in range(n_runs):
+        crashes: Tuple[Tuple[float, int], ...] = ()
+        if control_shards and i % 2 == 0:
+            crashes = ((0.10, i % control_shards),)
+        if control_shards > 1 and i % 5 == 4:
+            crashes = ((0.10, i % control_shards),
+                       (0.25, (i + 1) % control_shards))
+        spec = ChaosSpec(
+            seed=base_seed + i,
+            n_nodes=n_nodes,
+            control_shards=control_shards,
+            n_clients=n_clients,
+            n_invocations=n_invocations,
+            shard_crashes=crashes,
+            n_partitions=i % 3,
+            one_way_partitions=(i % 4 == 3),
+            drop_rate=(0.12 if i % 3 == 1 else 0.0),
+            tenant_storms=(1 if i % 4 == 2 else 0))
+        runs.append(run_chaos(spec))
+    return runs
+
+
+def campaign_digest(runs: Sequence[ChaosRun]) -> str:
+    """Deterministic one-line-per-run digest — the CI determinism
+    gate's diff surface."""
+    lines = []
+    for r in runs:
+        s = r.stats
+        lines.append(
+            f"seed={r.spec.seed} {r.spec.fault_label()} "
+            f"completed={s.completed} failed={s.failed} "
+            f"lost={getattr(s, 'lost', 0)} "
+            f"granted={s.leases_granted} "
+            f"failovers={r.failovers} adoptions={r.adoptions} "
+            f"ok={r.report.ok}")
+    return "\n".join(lines)

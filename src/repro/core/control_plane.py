@@ -1,0 +1,535 @@
+"""Sharded control plane with crash-healing failover (DESIGN.md §20).
+
+The paper's strongest robustness claim (§3.1, §3.4) is that the control
+plane is NON-CRITICAL: executors keep serving granted leases when the
+resource manager is unreachable, and eventually-consistent availability
+views only shrink the visible pool.  At scale the manager is also the
+bottleneck, so this module shards it — and then proves the claim by
+killing shards mid-replay.
+
+Three layers:
+
+* ``ManagerShard`` — one consistent-hash partition of the registry
+  (``ShardMap.shard_for_endpoint`` ownership, reusing the PR-9
+  partition).  Shards gossip POOL-level availability deltas to each
+  other (dry <-> wet transitions, best-effort, lossy-channel
+  tolerant) — deliberately not per-server mirrors, which would cost
+  O(shards) control events per change and erase the scaling win.
+  The gossip-merged capacity view backs cross-shard lease stealing:
+  a client whose home shard's pool runs dry is served candidates
+  pulled on demand from wet siblings instead of failing the
+  allocation.
+* ``Interchange`` — the funcX-style multiplexing tier: every shard
+  publishes availability deltas over ONE uplink channel into the
+  interchange, which fans them out to all subscribed clients with a
+  single batched ``Fabric.multicast``; registrations and removals are
+  routed to the alive ring owner through the same tier.  It also owns
+  crash healing's reconciliation: servers whose owner shard died are
+  adopted by the ring successor on the next control tick (a normal
+  re-registration — epoch bump, "add" delta, callbacks rebound), and
+  orphans that died while unowned get the eviction their dead shard
+  never ran.  No double-eviction is possible: a dead shard stops
+  sweeping the instant it crashes, and the successor's PR-2 identity
+  check only ever evicts the entry it probed.
+* ``ClientView`` — a client's resolver onto the shard ring (the
+  ``ResourceManagerReplica`` surface ``Invoker`` expects).  A crashed
+  shard is detected purely via channel faults (``ChannelPartitioned``
+  from the downed endpoint — no oracle), after which the view backs
+  off with seeded jitter and re-resolves ownership to the ring
+  successor.  Per-view RNGs derive from (plane seed, client seed), so
+  failover storms are bit-identical per seed.
+
+``ShardedControlPlane`` bundles the three behind the ``ResourceManager``
+facade API, so ``Invoker``, ``BatchSystem``, ``TraceReplayer`` and
+``SimulatedCluster`` run unchanged on either control plane.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.clock import Clock, ScheduledCall
+from repro.core.executor import ExecutorManager
+from repro.core.resource_manager import (AvailabilityBus,
+                                         ResourceManagerReplica)
+from repro.core.shard import ShardMap
+from repro.core.transport import (Channel, ChannelDropped,
+                                  ChannelPartitioned, CONTROL_MSG_BYTES,
+                                  Fabric)
+
+__all__ = ["ClientView", "Interchange", "ManagerShard",
+           "ShardedControlPlane"]
+
+#: Modeled CPU cost of one control-plane event (a registration, a
+#: heartbeat probe, a delta publish, a server-list serve, a gossip
+#: apply).  The scaling benchmark divides each shard's event count by
+#: this to get modeled control events/sec; the busiest shard is the
+#: bottleneck, so throughput grows with the shard count as long as the
+#: hash partition stays balanced.
+CONTROL_EVENT_CPU_S = 2e-6
+
+#: ClientView failover backoff: base doubling to the cap, scaled by a
+#: seeded jitter draw in [1, 2) so simultaneous victims of one shard
+#: crash do not retry in lockstep.
+VIEW_BACKOFF_BASE_S = 1e-4
+VIEW_BACKOFF_CAP_S = 2e-3
+
+
+class _ShardUplink:
+    """A shard's edge of the interchange tier.
+
+    ``ResourceManagerReplica`` publishes availability deltas through
+    its ``bus``; for a ``ManagerShard`` that bus is this proxy — every
+    delta rides the shard's single uplink control channel into the
+    interchange, which then fans out to all subscribed clients with
+    one batched multicast.  A delta lost on the uplink (drop, or the
+    shard's endpoint going down mid-publish) is simply missed: clients
+    catch up on the next delta, exactly the §3.4 semantics."""
+
+    def __init__(self, interchange: "Interchange", shard_endpoint: str):
+        self.interchange = interchange
+        self.fabric = interchange.fabric
+        self.channel = self.fabric.connect(shard_endpoint,
+                                           interchange.ENDPOINT)
+
+    def publish(self, delta: dict):
+        try:
+            self.channel.send(CONTROL_MSG_BYTES)
+        except (ChannelDropped, ChannelPartitioned):
+            self.interchange.uplink_faults += 1
+            return
+        self.interchange.publish(delta)
+
+
+class ManagerShard(ResourceManagerReplica):
+    """One consistent-hash partition of the availability registry.
+
+    Local state is the inherited replica registry restricted to the
+    servers this shard owns; on top of it sits a gossip-merged
+    *capacity view* (sibling shard → dry/wet) fed by pool-level
+    deltas over dedicated shard-to-shard channels — the routing table
+    for cross-shard lease stealing.  ``control_events`` counts every
+    event this shard processed (registrations, probes, serves, gossip
+    applies, steal pulls): the scaling benchmark's per-shard load
+    meter."""
+
+    def __init__(self, shard_id: int, plane: "ShardedControlPlane",
+                 interchange: "Interchange"):
+        endpoint = f"cp:s{shard_id}"
+        super().__init__(shard_id, _ShardUplink(interchange, endpoint),
+                         plane.fabric)
+        self.endpoint = endpoint         # override the rm:<i> default
+        self.shard_id = shard_id
+        self.plane = plane
+        self.alive = True
+        self.control_events = 0
+        self.steals_served = 0
+        # gossip-merged capacity view: what each SIBLING last
+        # advertised about its own pool (wet = has available servers).
+        # Pool-LEVEL deltas, not per-server mirrors: mirroring costs
+        # O(shards) control events per availability change and erases
+        # the scaling win; dry/wet transitions are rare, so gossip
+        # stays O(1) amortized and stealing pulls details on demand.
+        self._advertised = False         # own pool starts empty (dry)
+        self._sibling_wet: Dict[int, bool] = {}
+        self._siblings: List["ManagerShard"] = []
+        self._shard_channels: Dict[int, Channel] = {}
+
+    def connect_shards(self, shards: List["ManagerShard"]):
+        self._siblings = [s for s in shards if s is not self]
+        self._shard_channels = {
+            s.shard_id: self.fabric.connect(self.endpoint, s.endpoint)
+            for s in self._siblings}
+
+    # ------------------------------------------------------ local events
+    def register(self, manager: ExecutorManager, propagate: bool = True):
+        self.control_events += 1
+        super().register(manager, propagate)
+
+    def remove(self, server_id: str, grace_s: float = 0.0,
+               propagate: bool = True):
+        self.control_events += 1
+        super().remove(server_id, grace_s, propagate)
+
+    def sweep_heartbeats(self):
+        if not self.alive:
+            return []                    # dead shards sweep nothing —
+            # the no-double-eviction half of crash reconciliation
+        with self._lock:
+            n = len(self._servers)
+        self.control_events += 1 + n     # tick + one probe per server
+        return super().sweep_heartbeats()
+
+    def _on_saturated(self, server_id: str):
+        if not self.alive:
+            return                       # a dead shard publishes nothing
+        super()._on_saturated(server_id)
+
+    def _on_available(self, server_id: str):
+        if not self.alive:
+            return
+        super()._on_available(server_id)
+
+    # ----------------------------------------------------------- gossip
+    def _gossip(self, delta: dict):
+        """Shard-to-shard availability gossip.  Every local registry
+        change (register / remove / saturated / available) funnels
+        through here; what siblings merge is the POOL-level delta —
+        did this shard's pool cross dry <-> wet — not a per-server
+        mirror.  Unchanged wetness gossips nothing, so the amortized
+        cost is O(1) per change instead of O(shards), which is what
+        keeps the busiest-shard event count scaling near-linearly.  A
+        sibling behind a faulted channel misses the delta and keeps
+        its stale view — eventual consistency tolerates it (§3.4):
+        a stale-wet view costs one wasted steal pull, a stale-dry
+        view only shrinks the visible steal pool."""
+        with self._lock:
+            wet = any(e.available for e in self._servers.values())
+        if wet == self._advertised:
+            return
+        self._advertised = wet
+        out = {"op": "capacity", "shard": self.shard_id, "wet": wet}
+        for p in self._siblings:
+            if not p.alive:
+                continue
+            ch = self._shard_channels.get(p.shard_id)
+            if ch is not None:
+                try:
+                    ch.send(CONTROL_MSG_BYTES)
+                except (ChannelDropped, ChannelPartitioned):
+                    continue             # sibling misses this delta
+            p._apply_gossip(out)
+
+    def _apply_gossip(self, delta: dict):
+        self.control_events += 1
+        self._sibling_wet[delta["shard"]] = delta["wet"]
+
+    # --------------------------------------------------- lease stealing
+    def steal_list(self) -> List[ExecutorManager]:
+        """Cross-shard candidates when the local pool is dry: pull the
+        server list of every alive sibling whose gossiped capacity
+        says wet (one rpc per pulled sibling over the shard-to-shard
+        channel; a faulted pull skips that sibling).  Candidates come
+        back liveness-filtered in stable sibling order — the client's
+        own seeded placement permutes them (§3.2)."""
+        self.control_events += 1
+        out = []
+        for p in self._siblings:
+            if not p.alive or not self._sibling_wet.get(p.shard_id,
+                                                        True):
+                continue
+            ch = self._shard_channels.get(p.shard_id)
+            try:
+                if ch is not None:
+                    ch.rpc(CONTROL_MSG_BYTES, CONTROL_MSG_BYTES)
+            except (ChannelDropped, ChannelPartitioned):
+                continue                 # unreachable sibling: skip
+            p.control_events += 1        # the sibling serves the pull
+            pulled = [m for m in p.server_list() if m.heartbeat()]
+            p.steals_served += len(pulled)
+            out.extend(pulled)
+        return out
+
+
+class Interchange(AvailabilityBus):
+    """Control-traffic multiplexer + crash reconciler (funcX-style).
+
+    Downstream it IS the availability bus every client subscribes to
+    (one batched ``Fabric.multicast`` per delta, inherited); upstream
+    it routes registrations/removals to the alive ring owner and keeps
+    the authoritative server → (manager, owner shard) map that crash
+    healing reconciles from: ``adopt_orphans`` re-registers a dead
+    shard's servers with their ring successor on the control tick."""
+
+    ENDPOINT = "cp:ix"
+
+    def __init__(self, plane: "ShardedControlPlane", fabric: Fabric,
+                 drop_rate: float = 0.0, *, seed: int = 7):
+        super().__init__(fabric, drop_rate, seed=seed)
+        self.plane = plane
+        self._known: Dict[str, ExecutorManager] = {}
+        self._owner: Dict[str, int] = {}
+        self.events_in = 0
+        self.uplink_faults = 0
+        self.adoptions = 0
+        self.orphan_evictions = 0
+
+    def publish(self, delta: dict):
+        op = delta.get("op")
+        if op == "remove":
+            # evictions and removals flow through here no matter which
+            # shard ran them, so the authoritative map stays in sync
+            self._known.pop(delta.get("server_id"), None)
+            self._owner.pop(delta.get("server_id"), None)
+        self.events_in += 1
+        super().publish(delta)
+
+    # ---------------------------------------------------------- routing
+    def route_register(self, manager: ExecutorManager):
+        shard = self.plane.owner_shard(manager.server_id)
+        self._known[manager.server_id] = manager
+        self._owner[manager.server_id] = shard.shard_id
+        shard.register(manager)
+
+    def route_remove(self, server_id: str, grace_s: float = 0.0):
+        mgr = self._known.pop(server_id, None)
+        self._owner.pop(server_id, None)
+        for shard in self.plane.alive_shards():
+            if server_id in shard.known_server_ids():
+                shard.remove(server_id, grace_s)
+                return
+        # the owner died holding the only registry entry: drain the
+        # manager directly (batch retrieval must not block on a dead
+        # shard) and tell the subscribed clients ourselves
+        if mgr is not None:
+            mgr.retrieve(grace_s)
+        self.publish({"op": "remove", "server_id": server_id})
+
+    # ------------------------------------------------------ crash healing
+    def adopt_orphans(self) -> int:
+        """Re-home every server whose owner shard died: live orphans
+        re-register with the ring successor (a NORMAL registration —
+        epoch bump, "add" delta clearing client tombstones, saturation
+        callbacks rebound), dead ones get the eviction their owner
+        never ran.  Runs on the control tick after the sweeps; shard
+        order and the sorted server walk keep it deterministic."""
+        plane = self.plane
+        if not plane.alive_shards():
+            return 0
+        moved = 0
+        for sid in sorted(self._known):
+            k = self._owner.get(sid)
+            if k is not None and plane.shards[k].alive:
+                continue
+            mgr = self._known[sid]
+            succ = plane.owner_shard(sid)
+            if mgr.heartbeat():
+                self.adoptions += 1
+                moved += 1
+                self._owner[sid] = succ.shard_id
+                succ.register(mgr)
+            else:
+                self.orphan_evictions += 1
+                mgr.retrieve(0.0)        # reclaim what the dead owner
+                # never did — leases end RETRIEVED, quota comes home
+                self.publish({"op": "remove", "server_id": sid})
+        return moved
+
+
+class ClientView:
+    """One client's resolver onto the shard ring — the replica surface
+    ``Invoker`` consumes (``server_list`` / ``nic_loads``).
+
+    The home shard is ``client_seed % n_shards``; every read first
+    probes the home shard's control channel with one rpc.  A crashed
+    shard surfaces as ``ChannelPartitioned`` (its endpoint is down —
+    detection is purely a channel fault), upon which the view sleeps a
+    seeded-jitter backoff and re-resolves ownership to the ring
+    successor; a transient injected drop backs off WITHOUT advancing
+    (a lossy probe is a miss, not a death, same as the heartbeat
+    sweep).  All draws come from a per-view RNG derived from (plane
+    seed, client seed): bit-identical failover per seed."""
+
+    def __init__(self, plane: "ShardedControlPlane", client_seed: int):
+        self.plane = plane
+        self.client_seed = client_seed
+        self.endpoint = f"cpv:{client_seed}"
+        self.home = client_seed % plane.n_shards
+        self._ch: Optional[Channel] = None
+        self._rng = random.Random(
+            (plane.seed * 2_654_435_761 + client_seed * 40_503 + 11)
+            & 0x7FFFFFFF)
+        self.failovers = 0
+        self.probe_faults = 0
+        self.steal_reads = 0
+
+    def _resolve(self) -> Optional[ManagerShard]:
+        plane = self.plane
+        delay = VIEW_BACKOFF_BASE_S
+        for _ in range(2 * plane.n_shards + 2):
+            shard = plane.shards[self.home]
+            ch = self._ch
+            if ch is None or ch.closed or ch.dst != shard.endpoint:
+                ch = self._ch = plane.fabric.connect(self.endpoint,
+                                                     shard.endpoint)
+            try:
+                ch.rpc(CONTROL_MSG_BYTES, CONTROL_MSG_BYTES)
+            except ChannelPartitioned:
+                # dead or unreachable shard: jittered backoff, then
+                # re-resolve to the ring successor
+                self.probe_faults += 1
+                plane.clock.sleep(delay * (1.0 + self._rng.random()))
+                delay = min(delay * 2, VIEW_BACKOFF_CAP_S)
+                self.home = (self.home + 1) % plane.n_shards
+                self.failovers += 1
+                continue
+            except ChannelDropped:
+                # lossy probe: retry the SAME shard after backoff
+                self.probe_faults += 1
+                plane.clock.sleep(delay * (1.0 + self._rng.random()))
+                delay = min(delay * 2, VIEW_BACKOFF_CAP_S)
+                continue
+            return shard
+        return None
+
+    # ------------------------------------------------- replica surface
+    def server_list(self) -> List[ExecutorManager]:
+        shard = self._resolve()
+        if shard is None:
+            return []        # no reachable shard: the caller's normal
+            # allocation backoff owns the retry policy
+        shard.control_events += 1
+        servers = shard.server_list()
+        if not servers:
+            servers = shard.steal_list()
+            if servers:
+                self.steal_reads += 1
+        return servers
+
+    def nic_loads(self) -> Dict[str, int]:
+        return self.plane.shards[self.home].nic_loads()
+
+    def known_server_ids(self) -> set:
+        shard = self._resolve()
+        return shard.known_server_ids() if shard is not None else set()
+
+
+class ShardedControlPlane:
+    """``ResourceManager``-compatible facade over K manager shards plus
+    the interchange tier (DESIGN.md §20).  Drop-in for every consumer
+    of the unsharded facade: ``replicas`` (alive shards), ``bus`` (the
+    interchange), ``replica_for`` (a ``ClientView``), register/remove
+    routing, heartbeat driving and ``stop``.  ``crash_shard(k)`` is
+    the chaos surface: the shard's endpoint goes down on the fabric
+    (every route in/out severed — heal() does NOT resurrect it), its
+    sweeps stop, and reconciliation happens through client failover +
+    interchange adoption, all bit-identical per seed."""
+
+    def __init__(self, n_shards: int, *, clock: Clock,
+                 fabric: Optional[Fabric] = None,
+                 drop_rate: float = 0.0, seed: int = 7,
+                 n_nodes: int = 0,
+                 shard_map: Optional[ShardMap] = None):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        self.seed = seed
+        self.clock = clock
+        self.fabric = fabric if fabric is not None else Fabric(
+            "rdma", clock=clock, seed=seed)
+        self.map = shard_map if shard_map is not None else ShardMap(
+            n_shards, max(1, n_shards), n_nodes=n_nodes, seed=seed)
+        self.bus = Interchange(self, self.fabric, drop_rate, seed=seed)
+        self.shards = [ManagerShard(k, self, self.bus)
+                       for k in range(n_shards)]
+        for s in self.shards:
+            s.connect_shards(self.shards)
+        self.views: List[ClientView] = []
+        self.crashes: List[Tuple[float, int]] = []
+        self._hb_thread: Optional[threading.Thread] = None
+        self._hb_stop = threading.Event()
+        self._hb_call: Optional[ScheduledCall] = None
+
+    # ------------------------------------------------------- membership
+    @property
+    def replicas(self) -> List[ManagerShard]:
+        """Alive shards — the facade's replica set as consumers see it
+        (a crashed shard is not a replica anyone can reach)."""
+        return [s for s in self.shards if s.alive]
+
+    def alive_shards(self) -> List[ManagerShard]:
+        return [s for s in self.shards if s.alive]
+
+    def owner_shard(self, endpoint: str) -> ManagerShard:
+        """The alive ring owner: consistent-hash home, walking the
+        ring past dead shards (the successor rule crash healing and
+        client failover both resolve by)."""
+        k = self.map.shard_for_endpoint(endpoint)
+        for i in range(self.n_shards):
+            shard = self.shards[(k + i) % self.n_shards]
+            if shard.alive:
+                return shard
+        raise RuntimeError("control plane: every shard has crashed")
+
+    def primary(self) -> ManagerShard:
+        shards = self.alive_shards()
+        if not shards:
+            raise RuntimeError("control plane: every shard has crashed")
+        return shards[0]
+
+    def replica_for(self, client_seed: int) -> ClientView:
+        view = ClientView(self, client_seed)
+        self.views.append(view)
+        return view
+
+    # ---------------------------------------------------------- routing
+    def register(self, manager: ExecutorManager):
+        self.bus.route_register(manager)
+
+    def remove(self, server_id: str, grace_s: float = 0.0):
+        self.bus.route_remove(server_id, grace_s)
+
+    def consistently_known_ids(self) -> set:
+        """Server ids the ALIVE control plane knows: registries are
+        disjoint by ownership, so the union over alive shards is the
+        authoritative set — a dead shard's un-adopted servers are
+        (correctly) unknown until adoption or heal-time
+        re-registration repairs them."""
+        known: set = set()
+        for s in self.alive_shards():
+            known |= s.known_server_ids()
+        return known
+
+    # ------------------------------------------------------------ chaos
+    def crash_shard(self, k: int):
+        """Kill manager shard ``k`` at the current instant: its
+        endpoint goes down on the fabric (reliable sends raise
+        ``ChannelPartitioned``, datagrams are blocked — and a network
+        ``heal()`` does NOT bring it back), its sweeps and publishes
+        stop.  Live leases are untouched — executors keep serving
+        (§3.1); clients and the interchange reconcile around the
+        corpse.  Idempotent: crashing a dead shard is a no-op."""
+        if not 0 <= k < self.n_shards:
+            raise KeyError(
+                f"unknown manager shard {k!r}: valid shards are "
+                f"0..{self.n_shards - 1}")
+        shard = self.shards[k]
+        if not shard.alive:
+            return
+        shard.alive = False
+        self.fabric.set_down(shard.endpoint)
+        self.crashes.append((self.clock.now(), k))
+
+    def failovers(self) -> int:
+        return sum(v.failovers for v in self.views)
+
+    def shard_event_counts(self) -> List[int]:
+        return [s.control_events for s in self.shards]
+
+    # ------------------------------------------------------- heartbeats
+    def start_heartbeats(self, interval_s: float = 0.2):
+        self.stop()                      # restart, don't leak a sweeper
+
+        def tick():
+            for s in self.shards:
+                if s.alive:
+                    s.sweep_heartbeats()
+            self.bus.adopt_orphans()
+
+        if self.clock.virtual:
+            self._hb_call = self.clock.call_repeating(interval_s, tick)
+            return
+        stop = self._hb_stop = threading.Event()
+
+        def loop():
+            while not stop.wait(interval_s):
+                tick()
+        self._hb_thread = threading.Thread(target=loop, daemon=True)
+        self._hb_thread.start()
+
+    def stop(self):
+        self._hb_stop.set()
+        if self._hb_call is not None:
+            self._hb_call.cancel()
+            self._hb_call = None

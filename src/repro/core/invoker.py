@@ -98,7 +98,8 @@ class Invoker:
     def __init__(self, client_id: str, rm: ResourceManager,
                  library: FunctionLibrary, *, seed: int = 0,
                  max_retries: int = 3, backoff_base: float = 0.005,
-                 backoff_cap: float = 0.5, allocation_rounds: int = 6,
+                 backoff_cap: float = 0.5, backoff_jitter: float = 0.0,
+                 allocation_rounds: int = 6,
                  fault_memory_s: float = 1.0,
                  allocation_window: Optional[int] = None,
                  clock: Clock = REAL_CLOCK,
@@ -124,6 +125,17 @@ class Invoker:
         self.max_retries = max_retries
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
+        if backoff_jitter < 0.0:
+            raise ValueError(
+                f"backoff_jitter must be >= 0, got {backoff_jitter}")
+        self.backoff_jitter = backoff_jitter
+        # dedicated jitter stream, derived from the client seed but
+        # SEPARATE from the placement RNG: enabling jitter must not
+        # perturb which servers this client walks (§3.2), and with
+        # jitter off no draw is ever consumed — pre-jitter schedules
+        # stay bit-identical
+        self._backoff_rng = random.Random(
+            (seed * 1_103_515_245 + 12_345) & 0x7FFFFFFF)
         self.allocation_rounds = allocation_rounds
         # fabric-aware placement: servers that faulted on this client
         # within fault_memory_s are tried LAST; allocation_window bounds
@@ -173,10 +185,17 @@ class Invoker:
 
     def _backoffs(self):
         """Exponential backoff schedule: base, doubling to the cap
-        (§3.5) — the one implementation behind every retry loop."""
+        (§3.5) — the one implementation behind every retry loop.  With
+        ``backoff_jitter=j`` each delay is scaled by a seeded draw in
+        ``[1, 1+j)`` so clients hit by the same fault (e.g. a manager-
+        shard crash, DESIGN.md §20) desynchronize their retry storms;
+        draws come from the per-invoker jitter RNG, so the schedule is
+        bit-identical per seed and differs across seeds."""
         b = self.backoff_base
+        j = self.backoff_jitter
+        rng = self._backoff_rng
         while True:
-            yield b
+            yield b * (1.0 + j * rng.random()) if j else b
             b = min(b * 2, self.backoff_cap)
 
     # ----------------------------------------------------------- transport

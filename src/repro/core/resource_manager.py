@@ -336,6 +336,7 @@ class ResourceManagerReplica:
                 e.nic_load = loads[sid] = fabric.nic_load(sid)
         self._nic_loads = loads                # atomic snapshot swap
         dead = []
+        evicted = []
         with self._lock:
             for sid, e in suspects:
                 # evict only the entry we probed: a concurrent
@@ -345,8 +346,18 @@ class ResourceManagerReplica:
                     del self._servers[sid]
                     self._list_version += 1
                     dead.append(sid)
+                    evicted.append(e)
                     if e.channel is not None:
                         e.channel.close()
+        for e in evicted:
+            # eviction reclaims the node's allocations, exactly like an
+            # explicit remove(): active leases end RETRIEVED, billing
+            # flushes and quota workers come home — otherwise a lease
+            # on an unreachable node leaks and its tenant's QuotaState
+            # is orphaned forever (chaos invariant 1/3, DESIGN.md §20).
+            # Idempotent across replicas: Lease.end only fires once, so
+            # the second replica's sweep of the same node is a no-op.
+            e.manager.retrieve(0.0)
         for sid in dead:
             self._gossip({"op": "remove", "server_id": sid})
             self.bus.publish({"op": "remove", "server_id": sid})
@@ -387,6 +398,16 @@ class ResourceManager:
 
     def remove(self, server_id: str, grace_s: float = 0.0):
         self.primary().remove(server_id, grace_s)
+
+    def consistently_known_ids(self) -> set:
+        """Server ids every replica agrees on: a lossy fabric can leave
+        one replica holding an eviction the others missed, and such a
+        node must count as unknown so heal-time re-registration can
+        repair the registry (``SimulatedCluster.heal``).  The sharded
+        control plane implements the same protocol method over its
+        alive shards (DESIGN.md §20)."""
+        return set.intersection(*[r.known_server_ids()
+                                  for r in self.replicas])
 
     def start_heartbeats(self, interval_s: float = 0.2):
         self.stop()                      # restart, don't leak a sweeper

@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.accounting import Ledger
 from repro.core.batch_system import BatchSystem
 from repro.core.clock import ScheduledCall, VirtualClock
+from repro.core.control_plane import ShardedControlPlane
 from repro.core.executor import ExecutorManager
 from repro.core.functions import FunctionLibrary
 from repro.core.invoker import AllocationFailed, ExecutorCrash, Invoker
@@ -135,16 +136,24 @@ class SimulatedCluster:
                  drop_rate: float = 0.0,
                  topology: Optional[Topology] = None,
                  event_queue: str = "calendar",
-                 shards: int = 0):
+                 shards: int = 0,
+                 control_shards: int = 0):
         # event_queue selects the clock's event store ("calendar" —
         # the §15 bucket wheel — or "heap", the reference binary
         # heap), so any full scenario can A/B the two implementations.
         # shards > 0 partitions the store into per-node-group cursors
         # under the conservative-lookahead protocol (DESIGN.md §19) —
         # pop order, and therefore every stat, stays bit-identical.
+        # control_shards > 0 replaces the replicated resource manager
+        # with the sharded control plane + interchange tier (DESIGN.md
+        # §20): consistent-hash registry ownership, gossip-merged
+        # remote views, cross-shard lease stealing, and the
+        # crash_manager_shard() chaos surface; 0 (the default) keeps
+        # every existing scenario bit-identical.
         self.clock = VirtualClock(start_time, queue=event_queue,
                                   shards=shards)
         self.shards = shards
+        self.control_shards = control_shards
         self.ledger = Ledger()
         self.seed = seed
         # one shared fabric: "rdma" by default, or any FABRICS preset /
@@ -168,9 +177,17 @@ class SimulatedCluster:
             # here because the fabric doesn't exist at clock build time.
             self.clock._queue.lookahead = \
                 self.fabric.params.message_time(0)
-        self.rm = ResourceManager(n_replicas=n_replicas,
-                                  clock=self.clock, fabric=self.fabric,
-                                  drop_rate=drop_rate, seed=seed)
+        if control_shards:
+            self.rm = ShardedControlPlane(control_shards,
+                                          clock=self.clock,
+                                          fabric=self.fabric,
+                                          drop_rate=drop_rate,
+                                          seed=seed, n_nodes=n_nodes)
+        else:
+            self.rm = ResourceManager(n_replicas=n_replicas,
+                                      clock=self.clock,
+                                      fabric=self.fabric,
+                                      drop_rate=drop_rate, seed=seed)
         self.bs = BatchSystem(self.rm, self.ledger, n_nodes=n_nodes,
                               workers_per_node=workers_per_node,
                               memory_per_node=memory_per_node,
@@ -209,11 +226,38 @@ class SimulatedCluster:
         self.clock.run_until_idle(max_time)
 
     # ------------------------------------------------------------- control
+    def _node(self, node_id: str):
+        """Fault injectors must fail LOUDLY on unknown ids: a chaos
+        campaign targeting a node that does not exist is a bug in the
+        campaign, not a tolerable no-op."""
+        try:
+            return self.bs.nodes[node_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown node id {node_id!r}: this cluster's nodes "
+                f"are node000..node{len(self.bs.nodes) - 1:03d}"
+            ) from None
+
     def crash_node(self, node_id: str):
-        """Uncontrolled node loss (§3.5) at the current instant."""
-        mgr = self.bs.nodes[node_id].manager
-        if mgr is not None:
+        """Uncontrolled node loss (§3.5) at the current instant.
+        Idempotent — crashing an already-dead node changes nothing —
+        but an unknown node id raises ``KeyError``."""
+        mgr = self._node(node_id).manager
+        if mgr is not None and mgr.heartbeat():
             mgr.crash()
+
+    def crash_manager_shard(self, k: int):
+        """Kill control-plane shard ``k`` (DESIGN.md §20) at the
+        current instant: live leases keep executing on their executors
+        (§3.1 — the control plane is non-critical), clients detect the
+        dead shard via channel faults and fail over to the ring
+        successor, and the interchange adopts the shard's servers on
+        the next control tick.  Requires ``control_shards > 0``."""
+        if not self.control_shards:
+            raise RuntimeError(
+                "crash_manager_shard needs a sharded control plane: "
+                "build the cluster with control_shards > 0")
+        self.rm.crash_shard(k)
 
     def retrieve_node(self, node_id: str, grace_s: float = 0.0):
         """Batch job preempts the node (§5.3)."""
@@ -235,30 +279,51 @@ class SimulatedCluster:
         ``one_way=True`` only the island→mainland direction is severed:
         dispatches and heartbeat probes still REACH the island, but
         results and heartbeat replies never come home — the asymmetric
-        failure mode the return-route checks exist for."""
+        failure mode the return-route checks exist for.
+
+        Unknown node ids raise ``KeyError`` (a partition aimed at a
+        nonexistent node is a scenario bug, not a silent no-op);
+        repeating an identical isolation is harmless — partition
+        entries compose and ``heal()`` clears them all."""
         island = set(node_ids)
+        unknown = island - set(self.bs.nodes)
+        if unknown:
+            raise KeyError(
+                f"unknown node ids {sorted(unknown)}: this cluster's "
+                f"nodes are node000..node{len(self.bs.nodes) - 1:03d}")
         mainland = self.fabric.endpoints() - island
         # endpoints that may not have carried traffic yet
         mainland |= {inv.endpoint for inv in self.clients}
         mainland |= {r.endpoint for r in self.rm.replicas}
         mainland |= {self.rm.bus.ENDPOINT}
+        # sharded control plane: client views resolve shards from
+        # their own endpoints (absent on the unsharded manager)
+        mainland |= {v.endpoint for v in getattr(self.rm, "views", ())}
         mainland |= {nid for nid in self.bs.nodes if nid not in island}
         self.fabric.partition(island, mainland, one_way=one_way)
 
     def heal(self, reregister: bool = True):
         """Remove all partitions; optionally re-register evicted nodes
         with the resource manager (their managers never died — the
-        availability delta clears client-side tombstones)."""
+        availability delta clears client-side tombstones).  Idempotent:
+        healing a healthy fabric re-registers nothing.  Note a crashed
+        manager SHARD stays dead — the network healed, the process did
+        not (DESIGN.md §20)."""
         self.fabric.heal()
         if not reregister:
             return
-        # a node must be known to EVERY replica: a lossy fabric can
-        # leave one replica holding an eviction the others missed
-        known = set.intersection(*[r.known_server_ids()
-                                   for r in self.rm.replicas])
+        # the consistently-known set: intersection across replicas on
+        # the unsharded manager (a lossy fabric can leave one replica
+        # holding an eviction the others missed), union over alive
+        # shards on the sharded control plane (disjoint ownership)
+        known = self.rm.consistently_known_ids()
         for nid, node in self.bs.nodes.items():
             if (node.state == "faas" and node.manager is not None
                     and node.manager.heartbeat() and nid not in known):
+                # the eviction retrieved its leases and stopped it
+                # accepting; it survived the partition, so it returns
+                # to service (mirrors BatchSystem's re-grant path)
+                node.manager.restore()
                 self.rm.register(node.manager)
 
     def schedule_trace(self, trace_or_events) -> int:
@@ -284,6 +349,8 @@ class SimulatedCluster:
                     self.isolate_nodes(ev.group_a, one_way=ev.one_way)
             elif ev.kind == "heal":
                 self.heal()
+            elif ev.kind == "shard_crash":
+                self.crash_manager_shard(ev.n_nodes)
             elif ev.kind in ("bandwidth_storm", "tenant_storm"):
                 # tenant_storm sources from the tenant's endpoint so
                 # its registered fair-share weight/cap throttles the

@@ -74,9 +74,14 @@ from repro.core.transport import ChannelPartitioned, Topology
 #: fair-share weight/cap applies), ``quota_exhaustion`` is an oversized
 #: allocation burst that per-tenant quotas should reject, and
 #: ``lease_hoarding`` grabs workers and sits on them for a while.
+#: ``shard_crash`` kills control-plane manager shard ``n_nodes`` (the
+#: shard index rides the existing integer field) — the DESIGN.md §20
+#: crash-healing surface; replaying it needs a cluster built with
+#: ``control_shards > 0``.
 EVENT_KINDS = ("node_down", "node_up", "batch_job",
                "drop_rate", "partition", "heal", "bandwidth_storm",
-               "tenant_storm", "quota_exhaustion", "lease_hoarding")
+               "tenant_storm", "quota_exhaustion", "lease_hoarding",
+               "shard_crash")
 
 
 @dataclass(frozen=True)
@@ -89,7 +94,8 @@ class TraceEvent:
     kind: str
     node_id: Optional[str] = None      # node_down / node_up
     grace_s: float = 0.0               # preemption drain window (§5.3)
-    n_nodes: int = 0                   # batch_job width
+    n_nodes: int = 0                   # batch_job width / shard_crash
+    #                                    manager-shard index (§20)
     duration_s: float = 0.0            # batch_job runtime
     priority: int = 0                  # batch_job priority (lower wins)
     rate: float = 0.0                  # drop_rate phases
@@ -186,6 +192,12 @@ class ChurnTrace:
                 if ev.kind == "lease_hoarding" and ev.duration_s <= 0:
                     raise ValueError(
                         "lease_hoarding needs duration_s > 0")
+            if ev.kind == "shard_crash" and ev.n_nodes < 0:
+                # the shard index rides n_nodes; the upper bound is the
+                # replaying cluster's control_shards, checked at apply
+                raise ValueError(
+                    f"shard_crash shard index must be >= 0, "
+                    f"got {ev.n_nodes}")
 
     def counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -572,6 +584,11 @@ class TraceReplayer:
                 sim.isolate_nodes(ev.group_a, one_way=ev.one_way)
         elif ev.kind == "heal":
             sim.heal()
+        elif ev.kind == "shard_crash":
+            # kill a control-plane manager shard mid-replay (DESIGN.md
+            # §20): live leases keep executing, clients fail over via
+            # channel faults, the interchange adopts the orphans
+            sim.crash_manager_shard(ev.n_nodes)
         elif ev.kind == "bandwidth_storm":
             # N concurrent bulk transfers fanning into the target nodes'
             # NICs (DESIGN.md §14): the invocations riding those links
@@ -875,7 +892,8 @@ class TraceReplayer:
                 return False
             i = ev_idx[0]
             hz = events_ref[i].t if i < n_ev else np.inf
-            if (fabric._partitions or fabric._cong_active
+            if (fabric._partitions or fabric._down
+                    or fabric._cong_active
                     or hdr_in >= fabric._cong_track_min
                     or out_nb >= fabric._cong_track_min
                     or clock.foreign_activity()):
@@ -1203,6 +1221,7 @@ def replay_trace(trace: ChurnTrace, *, seed: int = 0,
                  topology: Optional[Topology] = None,
                  heartbeat_interval_s: float = 0.2,
                  shards: int = 0,
+                 control_shards: int = 0,
                  **replay_kw) -> ElasticityStats:
     """One-call convenience: build a matching ``SimulatedCluster`` and
     replay ``trace`` on it (benchmarks and CI smoke use this).  A trace
@@ -1215,10 +1234,15 @@ def replay_trace(trace: ChurnTrace, *, seed: int = 0,
                                            "tenant_storm")
                                 for e in trace.events):
         topology = Topology.single_switch()
+    if control_shards == 0 and any(e.kind == "shard_crash"
+                                   for e in trace.events):
+        raise ValueError(
+            "trace contains shard_crash events: pass control_shards>0")
     sim = SimulatedCluster(n_nodes=trace.n_nodes,
                            workers_per_node=workers_per_node,
                            n_replicas=n_replicas, seed=seed,
                            topology=topology, shards=shards,
+                           control_shards=control_shards,
                            **({"fabric": fabric} if fabric else {}))
     return TraceReplayer(
         sim, trace,

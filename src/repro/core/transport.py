@@ -878,7 +878,7 @@ class Channel:
         one-way partitions where only one direction is severed."""
         fabric = self.fabric
         if not (self.closed or self.drop_rate or fabric._partitions
-                or fabric._cong_active
+                or fabric._down or fabric._cong_active
                 or nbytes >= fabric._cong_track_min):
             # fast path — healthy channel, no faults armed anywhere and
             # no congestion in flight: identical arithmetic and counters
@@ -947,7 +947,7 @@ class Channel:
         dispatch still arrives but the result cannot come home."""
         fabric = self.fabric
         if not (self.closed or self.drop_rate or fabric._partitions
-                or fabric._cong_active
+                or fabric._down or fabric._cong_active
                 or nbytes >= fabric._cong_track_min):
             # healthy-route fast path, identical to send()'s
             t = self._mt_memo.get(nbytes)
@@ -1098,6 +1098,11 @@ class Fabric:
         # only severs a→b
         self._partitions: Tuple[
             Tuple[FrozenSet[str], FrozenSet[str], bool], ...] = ()
+        # crashed endpoints (a dead control-plane shard, DESIGN.md §20):
+        # any route touching one is severed.  Deliberately SEPARATE from
+        # _partitions so heal() — a network repair — cannot resurrect a
+        # crashed process; same immutable-snapshot read discipline.
+        self._down: FrozenSet[str] = frozenset()
 
     # ------------------------------------------------------- connections
     def _mk_channel(self, src: str, dst: str, *, reliable: bool,
@@ -1264,7 +1269,7 @@ class Fabric:
         per channel.  When partitions or congestion are live the
         fan-out degrades to true per-channel sends (route checks and
         fair-share charging are per-destination state)."""
-        if not (self._partitions or self._cong_active
+        if not (self._partitions or self._down or self._cong_active
                 or nbytes >= self._cong_track_min):
             t = self._size_memo.get(nbytes)
             if t is None:
@@ -1333,13 +1338,32 @@ class Fabric:
             self._partitions = self._partitions + ((a, b, one_way),)
 
     def heal(self):
-        """Remove every active partition (one-way ones included)."""
+        """Remove every active partition (one-way ones included).
+        Downed endpoints stay down: healing the network does not
+        resurrect a crashed process — use ``set_down(ep, False)``."""
         with self._lock:
             self._partitions = ()
 
+    def set_down(self, endpoint: str, down: bool = True):
+        """Mark an endpoint crashed (or recovered): every route
+        touching a downed endpoint is severed in both directions, so
+        reliable sends raise ``ChannelPartitioned`` and datagrams are
+        blocked — the §3.5 process-failure surface for control-plane
+        shards (DESIGN.md §20).  Unlike ``partition``, this survives
+        ``heal()``."""
+        with self._lock:
+            if down:
+                self._down = self._down | {endpoint}
+            else:
+                self._down = self._down - {endpoint}
+
     def partitioned(self, x: str, y: str) -> bool:
         """Is the DIRECTED route x→y severed?  (Symmetric partitions
-        block both directions; one-way ones only a→b.)"""
+        block both directions; one-way ones only a→b; a downed
+        endpoint severs every route touching it.)"""
+        down = self._down                        # atomic snapshot read
+        if down and (x in down or y in down):
+            return True
         for a, b, one_way in self._partitions:   # atomic snapshot read
             if x in a and y in b:
                 return True

@@ -1,7 +1,31 @@
 import os
 
+import pytest
+
 # Smoke tests / kernels tests run on the single real CPU device.  The
 # 512-device dry-run sets XLA_FLAGS itself in its own process (see
 # repro/launch/dryrun.py) — never here.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+
+@pytest.fixture
+def chaos_invariants():
+    """System-wide invariant sweep (DESIGN.md §20) as a fixture: a test
+    registers its clusters with ``chaos_invariants(sim, stats=None)``
+    and at teardown every registered cluster is swept with
+    ``assert_invariants`` — leaked leases, unbalanced quotas, lost
+    invocations or double billing fail the test even if its own
+    assertions passed."""
+    registered = []
+
+    def register(sim, stats=None):
+        registered.append((sim, stats))
+        return sim
+
+    yield register
+    # deferred import: unrelated (e.g. kernel) tests using this
+    # conftest must not pay the repro.core import at collection time
+    from repro.core.chaos import assert_invariants
+    for sim, stats in registered:
+        assert_invariants(sim, stats)

@@ -1,0 +1,234 @@
+"""Sharded control plane (DESIGN.md §20): consistent-hash ownership,
+the interchange tier, cross-shard lease stealing, crash-healing
+failover — plus the PR-10 fault-injector satellites (seeded backoff
+jitter, loud/idempotent chaos surface)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (ChaosSpec, FunctionLibrary, SimulatedCluster,
+                        run_chaos)
+from repro.core.control_plane import ClientView
+
+
+def _sharded_sim(**kw):
+    kw.setdefault("n_nodes", 12)
+    kw.setdefault("workers_per_node", 2)
+    kw.setdefault("control_shards", 4)
+    kw.setdefault("seed", 7)
+    return SimulatedCluster(**kw)
+
+
+# --------------------------------------------------- ownership / routing
+def test_shard_registries_disjoint_and_cover_cluster():
+    """Consistent-hash ownership partitions the registry: every faas
+    node lives in exactly one shard, and the union over shards is the
+    whole released cluster."""
+    sim = _sharded_sim()
+    plane = sim.rm
+    per_shard = [s.known_server_ids() for s in plane.shards]
+    union = set().union(*per_shard)
+    released = {nid for nid, n in sim.bs.nodes.items()
+                if n.state == "faas"}
+    assert union == released
+    assert sum(len(ids) for ids in per_shard) == len(union)  # disjoint
+    # the interchange routed each node to its ring owner
+    for sid in released:
+        owner = plane.owner_shard(sid)
+        assert sid in owner.known_server_ids()
+        assert plane.bus._owner[sid] == owner.shard_id
+
+
+def test_interchange_delta_tombstones_subscribed_clients():
+    """A removal on ANY shard rides the shard uplink into the
+    interchange and fans out to every subscribed client as one
+    multicast delta — the client tombstones the server."""
+    sim = _sharded_sim()
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    c = sim.client("c0", lib)
+    victim = sorted(sim.bs.nodes)[0]
+    sim.rm.remove(victim)
+    sim.run_until_idle()
+    assert victim in c._removed_servers
+    # and the authoritative interchange map dropped it too
+    assert victim not in sim.rm.bus._known
+    assert victim not in sim.rm.consistently_known_ids()
+
+
+def test_cross_shard_steal_when_home_pool_dry():
+    """A client homed on a shard that owns no available servers is
+    served candidates pulled from wet siblings (gossiped capacity
+    view), instead of failing the allocation."""
+    # few nodes over many shards: some shard owns nothing
+    sim = _sharded_sim(n_nodes=3, control_shards=4)
+    plane = sim.rm
+    dry = [s for s in plane.shards if not s.known_server_ids()]
+    wet = [s for s in plane.shards if s.known_server_ids()]
+    assert dry and wet
+    # registration gossip told every sibling the owning shards are wet
+    for s in wet:
+        for other in plane.shards:
+            if other is not s:
+                assert other._sibling_wet[s.shard_id] is True
+    view = ClientView(plane, client_seed=dry[0].shard_id)
+    servers = view.server_list()
+    assert view.steal_reads == 1
+    assert {m.server_id for m in servers} == \
+        {m.server_id for s in wet for m in s.server_list()}
+    assert wet[0].steals_served > 0
+
+
+def test_invoker_allocates_through_sharded_facade():
+    """The facade is a drop-in ResourceManager: Invoker allocates,
+    invokes and deallocates against a ClientView unchanged."""
+    sim = _sharded_sim(n_nodes=4, control_shards=2)
+    lib = FunctionLibrary("t").register("echo", lambda x: x,
+                                       service_time_s=10e-6)
+    c = sim.client("c0", lib)
+    assert c.allocate(4) == 4
+    futs = [c.submit("echo", np.ones(4, np.float32)) for _ in range(8)]
+    sim.run_until_idle()
+    assert all((f.get(1.0) == 1.0).all() for f in futs)
+    c.deallocate()
+
+
+# ------------------------------------------------ crash-healing failover
+def test_shard_crash_heals_bit_identically():
+    """Kill a manager shard mid-replay (composed with a partition and
+    a drop phase): live leases keep executing, clients fail over to
+    the ring successor, the interchange adopts the orphans — and two
+    runs of one seed are bit-identical."""
+    spec = ChaosSpec(seed=504, n_nodes=10, control_shards=3,
+                     n_clients=3, n_invocations=250,
+                     shard_crashes=((0.10, 1), (0.25, 2)),
+                     n_partitions=1, drop_rate=0.12)
+    a, b = run_chaos(spec), run_chaos(spec)
+    assert a.stats == b.stats             # bit-identical, not approx
+    assert (a.failovers, a.adoptions) == (b.failovers, b.adoptions)
+    assert a.report.ok, a.report.summary()
+    assert a.failovers > 0                # clients observed the crash
+    assert a.adoptions > 0                # orphans re-homed
+    assert a.stats.lost == 0              # no in-flight work dropped
+    # §3.1: no lease died WITH the manager shard
+    assert a.stats.lease_states.get("failed", 0) == 0
+
+
+def test_partition_heal_overlapping_shard_crash(chaos_invariants):
+    """Satellite 3 — the heartbeat-eviction vs. re-registration race:
+    a node is partitioned away (the sweep evicts it and retrieves its
+    leases), its OWNER shard crashes while the partition is up, then
+    the network heals.  The node must re-register with the ring
+    successor exactly once — no double-eviction, no orphaned quota."""
+    sim = _sharded_sim(n_nodes=6, control_shards=3)
+    chaos_invariants(sim)
+    plane = sim.rm
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    c = sim.client("c0", lib)
+    assert c.allocate(2) == 2
+    sim._track_leases(c)                  # invariant sweep sees them
+    victim = sorted({conn.process.lease.server_id
+                     for conn in c.connections()})[0]
+    owner_k = plane.owner_shard(victim).shard_id
+    plane.start_heartbeats(0.01)
+    sim.at(0.02, sim.isolate_nodes, [victim])
+    sim.at(0.06, sim.crash_manager_shard, owner_k)
+    sim.run_for(0.1)
+    # the sweep evicted the unreachable node and reclaimed its lease
+    assert victim not in sim.rm.consistently_known_ids()
+    assert all(lease.state.value == "retrieved" for lease in sim.leases
+               if lease.server_id == victim)
+    sim.heal()                            # re-registers the survivor
+    sim.run_for(0.05)
+    # re-homed with the alive ring successor, exactly one registry
+    owners = [s for s in plane.shards if victim in s.known_server_ids()]
+    assert len(owners) == 1
+    assert owners[0].alive and owners[0].shard_id != owner_k
+    assert plane.bus._owner[victim] == owners[0].shard_id
+    # the healed node serves again (no stale eviction undoes it)
+    sim.run_for(0.05)
+    assert victim in sim.rm.consistently_known_ids()
+    c.deallocate()
+    sim.run_until_idle()
+    plane.stop()
+
+
+def test_crash_shard_loud_and_idempotent():
+    sim = _sharded_sim(n_nodes=4, control_shards=2)
+    with pytest.raises(KeyError, match="unknown manager shard 99"):
+        sim.crash_manager_shard(99)
+    sim.crash_manager_shard(1)
+    crashes = list(sim.rm.crashes)
+    sim.crash_manager_shard(1)            # idempotent: no second entry
+    assert sim.rm.crashes == crashes
+    assert [s.alive for s in sim.rm.shards] == [True, False]
+    # unsharded clusters have no shard to crash — loud, not silent
+    flat = SimulatedCluster(n_nodes=2, seed=7)
+    with pytest.raises(RuntimeError, match="control_shards"):
+        flat.crash_manager_shard(0)
+
+
+# -------------------------------- satellite 1: seeded backoff jitter
+def test_backoff_jitter_deterministic_per_seed():
+    """Jittered backoff schedules are a pure function of the client
+    seed: same seed reproduces, different seeds desynchronize."""
+    def schedule(seed, jitter):
+        sim = SimulatedCluster(n_nodes=1, seed=3)
+        lib = FunctionLibrary("t").register("echo", lambda x: x)
+        c = sim.client("c", lib, seed=seed, backoff_base=0.005,
+                       backoff_cap=0.5, backoff_jitter=jitter)
+        gen = c._backoffs()
+        return [next(gen) for _ in range(8)]
+
+    assert schedule(42, 0.5) == schedule(42, 0.5)
+    assert schedule(42, 0.5) != schedule(43, 0.5)
+    # every delay sits in [pure, pure * (1 + j))
+    pure = schedule(42, 0.0)
+    jit = schedule(42, 0.5)
+    for p, j in zip(pure, jit):
+        assert p <= j < p * 1.5
+
+
+def test_backoff_jitter_off_matches_pure_doubling():
+    """jitter=0 consumes NO rng draws: the schedule is exactly base
+    doubling to the cap — pre-jitter replays stay bit-identical."""
+    sim = SimulatedCluster(n_nodes=1, seed=3)
+    lib = FunctionLibrary("t").register("echo", lambda x: x)
+    c = sim.client("c", lib, seed=9, backoff_base=0.005,
+                   backoff_cap=0.04, backoff_jitter=0.0)
+    state = c._backoff_rng.getstate()
+    gen = c._backoffs()
+    assert [next(gen) for _ in range(5)] == \
+        [0.005, 0.01, 0.02, 0.04, 0.04]
+    assert c._backoff_rng.getstate() == state     # untouched
+    with pytest.raises(ValueError, match="backoff_jitter"):
+        sim.client("c2", lib, backoff_jitter=-0.1)
+
+
+# ------------------------- satellite 2: loud, idempotent fault surface
+def test_crash_node_unknown_id_raises():
+    sim = SimulatedCluster(n_nodes=2, seed=7)
+    with pytest.raises(KeyError, match="node999"):
+        sim.crash_node("node999")
+    with pytest.raises(KeyError, match="node777"):
+        sim.isolate_nodes(["node000", "node777"])
+
+
+def test_crash_node_idempotent():
+    sim = SimulatedCluster(n_nodes=2, seed=7)
+    sim.crash_node("node000")
+    dead = sim.manager("node000")
+    assert not dead.heartbeat()
+    sim.crash_node("node000")             # second crash: clean no-op
+    assert not dead.heartbeat()
+    assert sim.manager("node001").heartbeat()
+
+
+def test_heal_idempotent():
+    sim = SimulatedCluster(n_nodes=3, seed=7)
+    sim.isolate_nodes(["node001"])
+    sim.isolate_nodes(["node001"])        # repeat composes harmlessly
+    assert sim.fabric.partitioned("node001", "node000")
+    sim.heal()
+    assert not sim.fabric.partitioned("node001", "node000")
+    sim.heal()                            # healing healthy fabric: no-op
